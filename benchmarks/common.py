@@ -1,0 +1,50 @@
+"""Shared benchmark utilities: timing, CSV rows, dataset sizing.
+
+Wall-clock numbers here are *batched CPU* measurements (DESIGN.md §3:
+per-batch throughput is the TPU-native metric; we report ns/lookup =
+batch_time/batch for comparability with the paper's per-lookup tables).
+Set LIX_BENCH_N to scale dataset sizes (default 500k keys; the paper
+used 200M on a beefy Xeon — trends, not absolute ns, are the claim
+under test).
+"""
+
+from __future__ import annotations
+
+import os
+import time
+from typing import Callable, List
+
+import jax
+import numpy as np
+
+BENCH_N = int(os.environ.get("LIX_BENCH_N", 500_000))
+BENCH_LOOKUPS = int(os.environ.get("LIX_BENCH_LOOKUPS", 100_000))
+
+_rows: List[str] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    row = f"{name},{us_per_call:.4f},{derived}"
+    _rows.append(row)
+    print(row, flush=True)
+
+
+def rows() -> List[str]:
+    return list(_rows)
+
+
+def time_batched(fn: Callable, *args, repeats: int = 4) -> float:
+    """Median seconds per call of a jitted batched fn (post-warmup)."""
+    out = fn(*args)
+    jax.block_until_ready(out)
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def ns_per_item(fn: Callable, *args, batch: int, repeats: int = 4) -> float:
+    return time_batched(fn, *args, repeats=repeats) / batch * 1e9

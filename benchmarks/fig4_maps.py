@@ -1,0 +1,12 @@
+"""Fig 4: Map data — Learned Index vs B-Tree."""
+from benchmarks.common import BENCH_N
+from benchmarks.range_index import run_dataset
+from repro.data import gen_maps
+
+
+def main() -> None:
+    run_dataset("fig4_maps", gen_maps(BENCH_N))
+
+
+if __name__ == "__main__":
+    main()

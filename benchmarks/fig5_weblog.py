@@ -1,0 +1,12 @@
+"""Fig 5: Web log data — Learned Index vs B-Tree (paper's worst case)."""
+from benchmarks.common import BENCH_N
+from benchmarks.range_index import run_dataset
+from repro.data import gen_weblogs
+
+
+def main() -> None:
+    run_dataset("fig5_weblog", gen_weblogs(BENCH_N))
+
+
+if __name__ == "__main__":
+    main()

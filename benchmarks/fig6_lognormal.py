@@ -1,0 +1,12 @@
+"""Fig 6: Synthetic lognormal(0, 2) — Learned Index vs B-Tree."""
+from benchmarks.common import BENCH_N
+from benchmarks.range_index import run_dataset
+from repro.data import gen_lognormal
+
+
+def main() -> None:
+    run_dataset("fig6_lognormal", gen_lognormal(BENCH_N))
+
+
+if __name__ == "__main__":
+    main()

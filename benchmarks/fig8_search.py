@@ -1,0 +1,50 @@
+"""Fig 8: search strategies x model size for the string index.
+
+Binary vs biased vs biased-quaternary over 1- and 2-hidden-layer RMIs —
+the claim: σ-aware strategies shrink search time when errors are large.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import BENCH_LOOKUPS, BENCH_N, emit, ns_per_item
+from repro.core import (
+    RMIConfig,
+    build_rmi,
+    compile_string_lookup,
+    make_vector_keyset,
+    tokenize,
+)
+from repro.data import gen_webdocs
+
+
+def main() -> None:
+    n = min(BENCH_N // 2, 200_000)
+    docs = gen_webdocs(n)
+    vks = make_vector_keyset(tokenize(docs, 16))
+    rng = np.random.default_rng(0)
+    sample = rng.choice(vks.n, min(BENCH_LOOKUPS // 4, vks.n))
+    q = jnp.asarray(vks.raw[sample])
+    leaves = max(64, vks.n // 20)
+
+    for depth, hidden in (("1h", (16,)), ("2h", (16, 16))):
+        idx = build_rmi(
+            vks,
+            RMIConfig(num_leaves=leaves, stage0_hidden=hidden,
+                      stage0_train_steps=250),
+        )
+        for strategy in ("binary", "biased", "quaternary"):
+            lookup = compile_string_lookup(idx, vks, strategy=strategy)
+            got = np.asarray(lookup(q))
+            exact = float((got == sample).mean())
+            total = ns_per_item(lookup, q, batch=len(sample))
+            emit(
+                f"fig8_search/{depth}_{strategy}", total / 1e3,
+                f"err={idx.mean_abs_err:.0f};exact={exact:.3f}",
+            )
+
+
+if __name__ == "__main__":
+    main()

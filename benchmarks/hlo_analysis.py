@@ -1,0 +1,369 @@
+"""Static HLO analyzer: trip-count-aware FLOPs / memory / collective bytes.
+
+XLA's HloCostAnalysis (what `compiled.cost_analysis()` reports) visits a
+while-loop body ONCE — scan-over-layers programs under-report by the
+layer count (verified empirically in this repo).  This analyzer parses
+`compiled.as_text()` (the post-partitioning, post-optimization module),
+builds the computation call graph, extracts while trip counts from the
+loop-condition constants, and multiplies through:
+
+  flops       — dot/convolution contraction FLOPs + elementwise
+                arithmetic (1 flop/elem) through fusion bodies
+  mem_bytes   — operand+result bytes of *top-level* ops (fusion bodies
+                excluded: a fusion reads its inputs and writes its
+                output once — that IS the traffic model)
+  coll_bytes  — payload of all-reduce/all-gather/reduce-scatter/
+                all-to-all/collective-permute (output-shape bytes)
+
+All numbers are per-device (the module is the per-partition program).
+This is a structural estimator, not a simulator: good to ~10-20%, which
+is what a roofline needs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+    "f8e4m3": 1, "f8e5m2fnuz": 1, "f8e4m3fnuz": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\](?:\{[^}]*\})?")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\(")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%([\w\.\-]+)\s+\(")
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "and",
+    "or", "xor", "not", "negate", "abs", "compare", "select", "clamp",
+    "floor", "ceil", "round-nearest-afz", "sign", "remainder", "power",
+    "atan2", "shift-left", "shift-right-logical", "shift-right-arithmetic",
+}
+_TRANSCENDENTAL = {
+    "exponential", "log", "tanh", "rsqrt", "sqrt", "logistic", "sine",
+    "cosine", "expm1", "log1p", "cbrt", "erf", "tan",
+}
+_COLLECTIVES = {
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "all-reduce-start", "all-gather-start",
+    "collective-permute-start",
+}
+_ZERO_COST = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "reshape", "copy", "broadcast", "iota", "transpose", "slice",
+    "dynamic-slice", "dynamic-update-slice", "concatenate", "pad",
+    "reverse", "gather", "scatter", "convert", "reduce", "rng",
+    "rng-bit-generator", "after-all", "partition-id", "replica-id",
+    "copy-start", "copy-done", "all-reduce-done", "all-gather-done",
+    "custom-call", "while", "conditional", "call", "fusion", "dot",
+    "convolution", "cholesky", "triangular-solve", "optimization-barrier",
+    "domain", "send", "recv", "sort", "map", "reduce-window",
+    "select-and-scatter", "infeed", "outfeed", "real", "imag", "compare",
+    "collective-permute-done", "add-dependency", "get-dimension-size",
+}
+
+
+def _shape_list(type_str: str) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Parse 'bf16[8,128]' or '(f32[2], s32[])' into [(dtype, dims), ...]."""
+    out = []
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        shape = tuple(int(x) for x in dims.split(",")) if dims else ()
+        out.append((dt, shape))
+    return out
+
+
+def _nbytes(type_str: str) -> int:
+    return sum(
+        _DTYPE_BYTES[dt] * int(math.prod(s)) for dt, s in _shape_list(type_str)
+    )
+
+
+def _nelems(type_str: str) -> int:
+    sl = _shape_list(type_str)
+    return sum(int(math.prod(s)) for _, s in sl)
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    type_str: str
+    opcode: str
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: List[Op]
+
+
+def parse_module(hlo_text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    current: Optional[Computation] = None
+    entry_name = None
+    for line in hlo_text.splitlines():
+        if (
+            (line.startswith("%") or line.startswith("ENTRY"))
+            and line.rstrip().endswith("{")
+            and "->" in line
+        ):
+            hdr = _COMP_HDR_RE.match(line)
+            if hdr:
+                current = Computation(name=hdr.group(1), ops=[])
+                comps[hdr.group(1)] = current
+                if line.startswith("ENTRY"):
+                    entry_name = hdr.group(1)
+                continue
+        if line.startswith("}"):
+            current = None
+            continue
+        m = _DEF_RE.match(line)
+        if m and current is not None:
+            current.ops.append(
+                Op(name=m.group(1), type_str=m.group(2), opcode=m.group(3),
+                   line=line)
+            )
+    if entry_name is not None:
+        comps["__entry__"] = comps[entry_name]
+    return comps
+
+
+def _attr_comp(line: str, key: str) -> Optional[str]:
+    m = re.search(key + r"=%?([\w\.\-]+)", line)
+    return m.group(1) if m else None
+
+
+def _calls_list(line: str) -> List[str]:
+    m = re.search(r"calls=\{?%?([\w\.\-,%\s]+)\}?", line)
+    if not m:
+        return []
+    return [c.strip().lstrip("%") for c in m.group(1).split(",")]
+
+
+def _trip_count(cond: Computation) -> int:
+    """Largest integer constant in the while condition ~ trip count."""
+    best = 1
+    for op in cond.ops:
+        for m in re.finditer(r"constant\((\d+)\)", op.line):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def _dot_flops(op: Op, shapes: Dict[str, str]) -> float:
+    out_elems = _nelems(op.type_str)
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.line)
+    operands = _OPERAND_RE.findall(op.line.split("(", 1)[1])
+    lhs_t = shapes.get(operands[0]) if operands else None
+    if not m or lhs_t is None:
+        return 2.0 * out_elems  # conservative fallback
+    lhs_shapes = _shape_list(lhs_t)
+    if not lhs_shapes:
+        return 2.0 * out_elems
+    lhs = lhs_shapes[0][1]
+    contract = 1
+    for d in m.group(1).split(","):
+        if d != "" and int(d) < len(lhs):
+            contract *= lhs[int(d)]
+    return 2.0 * out_elems * contract
+
+
+def _conv_flops(op: Op, shapes: Dict[str, str]) -> float:
+    out_elems = _nelems(op.type_str)
+    m = re.search(r"window=\{size=([\dx]+)", op.line)
+    k = 1
+    if m:
+        for d in m.group(1).split("x"):
+            k *= int(d)
+    return 2.0 * out_elems * k
+
+
+@dataclasses.dataclass
+class Costs:
+    flops: float = 0.0
+    transcendentals: float = 0.0
+    mem_bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_counts: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+    def __iadd__(self, o: "Costs"):
+        self.flops += o.flops
+        self.transcendentals += o.transcendentals
+        self.mem_bytes += o.mem_bytes
+        self.coll_bytes += o.coll_bytes
+        for k, v in o.coll_counts.items():
+            self.coll_counts[k] = self.coll_counts.get(k, 0) + v
+        return self
+
+    def scaled(self, f: float) -> "Costs":
+        return Costs(
+            flops=self.flops * f,
+            transcendentals=self.transcendentals * f,
+            mem_bytes=self.mem_bytes * f,
+            coll_bytes=self.coll_bytes * f,
+            coll_counts={k: v * int(f) for k, v in self.coll_counts.items()},
+        )
+
+
+def _fusion_flops(comp: Computation, comps, memo) -> Tuple[float, float]:
+    """Elementwise flops inside a fusion body (recursing into nested)."""
+    if comp.name in memo:
+        return memo[comp.name]
+    fl = tr = 0.0
+    shapes = {op.name: op.type_str for op in comp.ops}
+    for op in comp.ops:
+        if op.opcode in _ELEMENTWISE:
+            fl += _nelems(op.type_str)
+        elif op.opcode in _TRANSCENDENTAL:
+            tr += _nelems(op.type_str)
+            fl += _nelems(op.type_str)
+        elif op.opcode == "dot":
+            fl += _dot_flops(op, shapes)
+        elif op.opcode == "convolution":
+            fl += _conv_flops(op, shapes)
+        elif op.opcode == "reduce":
+            operands = _OPERAND_RE.findall(op.line.split("(", 1)[1])
+            if operands and operands[0] in shapes:
+                fl += _nelems(shapes[operands[0]])
+        elif op.opcode == "fusion":
+            for c in _calls_list(op.line):
+                if c in comps:
+                    f2, t2 = _fusion_flops(comps[c], comps, memo)
+                    fl += f2
+                    tr += t2
+    memo[comp.name] = (fl, tr)
+    return fl, tr
+
+
+def analyze(hlo_text: str) -> Costs:
+    comps = parse_module(hlo_text)
+    entry = comps.get("__entry__")
+    if entry is None:
+        return Costs()
+    memo_fusion: Dict[str, Tuple[float, float]] = {}
+    memo_comp: Dict[str, Costs] = {}
+
+    def walk(comp: Computation) -> Costs:
+        if comp.name in memo_comp:
+            return memo_comp[comp.name]
+        total = Costs()
+        shapes = {op.name: op.type_str for op in comp.ops}
+        for op in comp.ops:
+            oc = op.opcode
+            c = Costs()
+            if oc in _COLLECTIVES:
+                payload = _nbytes(op.type_str)
+                c.coll_bytes = payload
+                c.mem_bytes = 2 * payload
+                base = oc.replace("-start", "")
+                c.coll_counts = {base: 1}
+            elif oc == "fusion":
+                c.mem_bytes = _nbytes(op.type_str) + _operand_bytes(op, shapes)
+                for callee in _calls_list(op.line):
+                    if callee in comps:
+                        f2, t2 = _fusion_flops(comps[callee], comps, memo_fusion)
+                        c.flops += f2
+                        c.transcendentals += t2
+            elif oc == "dot":
+                c.flops = _dot_flops(op, shapes)
+                c.mem_bytes = _nbytes(op.type_str) + _operand_bytes(op, shapes)
+            elif oc == "convolution":
+                c.flops = _conv_flops(op, shapes)
+                c.mem_bytes = _nbytes(op.type_str) + _operand_bytes(op, shapes)
+            elif oc == "custom-call":
+                # CPU backend lowers big dots to oneDNN custom-calls;
+                # estimate as dot via output x max-operand contraction
+                c.flops = _custom_call_flops(op, shapes)
+                c.mem_bytes = _nbytes(op.type_str) + _operand_bytes(op, shapes)
+            elif oc == "while":
+                body = _attr_comp(op.line, "body")
+                cond = _attr_comp(op.line, "condition")
+                trips = _trip_count(comps[cond]) if cond in comps else 1
+                inner = walk(comps[body]) if body in comps else Costs()
+                c += inner.scaled(max(1, trips))
+            elif oc in ("call", "async-start"):
+                callee = _attr_comp(op.line, "to_apply")
+                if callee and callee in comps:
+                    c += walk(comps[callee])
+            elif oc == "conditional":
+                for key in ("true_computation", "false_computation"):
+                    callee = _attr_comp(op.line, key)
+                    if callee and callee in comps:
+                        c += walk(comps[callee])
+                for m in re.finditer(r"branch_computations=\{([^}]*)\}", op.line):
+                    for b in m.group(1).split(","):
+                        b = b.strip().lstrip("%")
+                        if b in comps:
+                            c += walk(comps[b])
+            elif oc in _ELEMENTWISE:
+                c.flops = _nelems(op.type_str)
+                c.mem_bytes = _nbytes(op.type_str) + _operand_bytes(op, shapes)
+            elif oc in _TRANSCENDENTAL:
+                c.flops = _nelems(op.type_str)
+                c.transcendentals = _nelems(op.type_str)
+                c.mem_bytes = _nbytes(op.type_str) + _operand_bytes(op, shapes)
+            elif oc == "dynamic-update-slice":
+                # XLA aliases DUS in place: traffic = the update slice
+                # (read + write), not the whole buffer (KV-cache writes
+                # would otherwise swamp the decode memory term)
+                operands = _OPERAND_RE.findall(op.line.split("(", 1)[1])
+                upd = shapes.get(operands[1]) if len(operands) > 1 else None
+                c.mem_bytes = 2.0 * _nbytes(upd) if upd else _nbytes(op.type_str)
+            elif oc in ("dynamic-slice", "gather",
+                        "scatter", "sort", "concatenate", "copy", "transpose",
+                        "reduce", "slice", "pad", "reverse", "convert",
+                        "broadcast"):
+                c.mem_bytes = _nbytes(op.type_str) + _operand_bytes(op, shapes)
+            total += c
+        memo_comp[comp.name] = total
+        return total
+
+    return walk(entry)
+
+
+def _operand_bytes(op: Op, shapes: Dict[str, str]) -> float:
+    args = op.line.split("(", 1)[1]
+    # cut at the first "), " attribute boundary to avoid attr refs
+    depth, end = 1, len(args)
+    for i, ch in enumerate(args):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    names = _OPERAND_RE.findall(args[:end])
+    return float(sum(_nbytes(shapes[n]) for n in names if n in shapes))
+
+
+def _custom_call_flops(op: Op, shapes: Dict[str, str]) -> float:
+    if "DotGeneral" not in op.line and "matmul" not in op.line.lower() and \
+       "Dot" not in op.line:
+        return 0.0
+    operands = _OPERAND_RE.findall(op.line.split("(", 1)[1])
+    out = _nelems(op.type_str)
+    if not operands or operands[0] not in shapes:
+        return 2.0 * out
+    lhs = _shape_list(shapes[operands[0]])
+    k = lhs[0][1][-1] if lhs and lhs[0][1] else 1
+    return 2.0 * out * k
+
+
+def summarize(hlo_text: str) -> Dict[str, float]:
+    c = analyze(hlo_text)
+    return {
+        "flops": c.flops,
+        "transcendentals": c.transcendentals,
+        "mem_bytes": c.mem_bytes,
+        "coll_bytes": c.coll_bytes,
+        "coll_counts": dict(c.coll_counts),
+    }

@@ -1,0 +1,80 @@
+"""MoE dispatch ablation: the paper's §4 hash-model claim in routing.
+
+Token slot placement inside expert capacity buffers, three ways:
+  sort    — arrival-order fill (the standard capacity dispatch; drops
+            only when an expert exceeds capacity)
+  cdf     — learned-CDF slot placement (the Hash-Model index): slot =
+            F̂(score)·C; collisions drop
+  random  — random-hash slot placement: slot = mix(token)%C; collisions
+            drop (the paper's random-hash baseline)
+
+Claim under test (Fig 10 transplanted): the learned CDF spreads tokens
+more uniformly than random hashing, so at equal capacity it drops
+fewer tokens.  `sort` shows the non-hashed optimum for reference.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.models.moe import cdf_dispatch_slots
+
+E, K, T = 32, 4, 65_536
+
+
+def drop_frac_of(slots: np.ndarray, expert_of: np.ndarray, capacity: int) -> float:
+    dest = expert_of * capacity + slots
+    first = np.zeros(E * capacity, bool)
+    order = np.arange(len(dest))
+    winner = np.full(E * capacity, len(dest))
+    np.minimum.at(winner, dest, order)
+    kept = winner[dest] == order
+    return 1.0 - kept.mean()
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    # skewed router: zipf-ish expert popularity + noisy scores
+    popularity = 1.0 / (np.arange(E) + 1.0) ** 0.7
+    logits = rng.normal(0, 1, (T, E)) + np.log(popularity)[None]
+    scores = np.exp(logits) / np.exp(logits).sum(1, keepdims=True)
+    top = np.argsort(-scores, axis=1)[:, :K]
+    flat_e = top.reshape(-1)
+    flat_s = np.take_along_axis(scores, top, axis=1).reshape(-1)
+
+    for cap_factor in (1.0, 1.25, 1.5):
+        capacity = int(T * K / E * cap_factor)
+
+        # sort (arrival order) — capacity overflow only
+        counts = np.bincount(flat_e, minlength=E)
+        dropped_sort = np.maximum(counts - capacity, 0).sum() / len(flat_e)
+
+        # cdf learned placement
+        slots_cdf = np.asarray(
+            jax.jit(
+                lambda s, e: cdf_dispatch_slots(s, e, E, capacity),
+                static_argnums=(),
+            )(jnp.asarray(flat_s, jnp.float32), jnp.asarray(flat_e, jnp.int32))
+        )
+        dropped_cdf = drop_frac_of(slots_cdf, flat_e, capacity)
+
+        # random-hash placement
+        h = (np.arange(len(flat_e), dtype=np.uint64) * np.uint64(0x9E3779B97F4A7C15))
+        h ^= h >> np.uint64(31)
+        slots_rand = (h % np.uint64(capacity)).astype(np.int64)
+        dropped_rand = drop_frac_of(slots_rand, flat_e, capacity)
+
+        emit(
+            f"moe_dispatch/cap{cap_factor}",
+            0.0,
+            f"drop_sort={dropped_sort:.3f};drop_cdf={dropped_cdf:.3f};"
+            f"drop_random={dropped_rand:.3f};"
+            f"cdf_vs_random={(dropped_rand-dropped_cdf)/max(dropped_rand,1e-9):+.0%}",
+        )
+
+
+if __name__ == "__main__":
+    main()

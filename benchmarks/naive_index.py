@@ -1,0 +1,64 @@
+"""§2.3: the naïve learned index — why invocation overhead killed it.
+
+The paper's motivating failure: a 2x32 ReLU net served one lookup at a
+time through TensorFlow+Python costs ~80,000 ns vs ~300 ns for a
+B-Tree.  We reproduce the *mechanism*: the same model called
+per-key through the Python/JAX dispatch path vs batched through one
+jitted call (LIF's answer, and the TPU answer).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import BENCH_N, emit, ns_per_item
+from repro.core import (
+    RMIConfig,
+    build_btree,
+    build_rmi,
+    compile_btree_lookup,
+    compile_lookup,
+    make_keyset,
+)
+from repro.data import gen_weblogs
+
+
+def main() -> None:
+    ks = make_keyset(gen_weblogs(min(BENCH_N, 200_000)))
+    idx = build_rmi(
+        ks, RMIConfig(num_leaves=1, stage0_hidden=(32, 32),
+                      stage0_train_steps=200),
+    )
+    lookup = compile_lookup(idx, ks)
+    rng = np.random.default_rng(0)
+    sample = rng.choice(ks.n, 512)
+    q = ks.norm[sample]
+
+    # one-at-a-time through the framework dispatch path (the §2.3 sin)
+    _ = lookup(jnp.asarray(q[:1]))
+    t0 = time.perf_counter()
+    for i in range(256):
+        jax.block_until_ready(lookup(jnp.asarray(q[i : i + 1])))
+    per_call = (time.perf_counter() - t0) / 256 * 1e9
+    emit("naive_index/single_lookup", per_call / 1e3, "per-key dispatch")
+
+    # batched through one compiled call (LIF / TPU answer)
+    qb = jnp.asarray(ks.norm[rng.choice(ks.n, 100_000)])
+    batched = ns_per_item(lookup, qb, batch=100_000)
+    emit(
+        "naive_index/batched_lookup", batched / 1e3,
+        f"amortization={per_call / batched:.0f}x",
+    )
+
+    bt = build_btree(ks.norm, 128)
+    blookup = compile_btree_lookup(bt, ks.norm)
+    btree_ns = ns_per_item(blookup, qb, batch=100_000)
+    emit("naive_index/btree_batched", btree_ns / 1e3, "")
+
+
+if __name__ == "__main__":
+    main()

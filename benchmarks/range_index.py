@@ -1,0 +1,103 @@
+"""Shared driver for the Fig 4/5/6 range-index tables.
+
+For one dataset: cache-optimized (implicit K-ary) B-Tree at the paper's
+page sizes vs 2-stage RMI at the paper's second-stage sizes (leaf
+counts scaled by N/200M so keys-per-leaf matches the paper's table) —
+reporting Total/Model/Search ns, size MB, size savings, and model error
+± variance, exactly the Fig 4-6 columns.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import BENCH_LOOKUPS, BENCH_N, emit, ns_per_item
+from repro.core import (
+    RMIConfig,
+    build_btree,
+    build_rmi,
+    compile_btree_lookup,
+    compile_lookup,
+    make_keyset,
+)
+from repro.core.btree import btree_descend
+from repro.core.rmi import rmi_predict
+
+PAPER_N = 200_000_000
+PAPER_STAGE2 = (10_000, 50_000, 100_000, 200_000)
+PAGE_SIZES = (16, 32, 64, 128, 256)
+
+
+def run_dataset(tag: str, raw_keys: np.ndarray) -> None:
+    ks = make_keyset(raw_keys)
+    n = ks.n
+    rng = np.random.default_rng(0)
+    sample = rng.choice(n, min(BENCH_LOOKUPS, n))
+    q = jnp.asarray(ks.norm[sample])
+    expect_keys = ks.norm[sample]
+
+    results = {}
+
+    # ---- B-Tree baselines ------------------------------------------------
+    baseline_total = None
+    for page in PAGE_SIZES:
+        bt = build_btree(ks.norm, page_size=page)
+        lookup = compile_btree_lookup(bt, ks.norm)
+        got = np.asarray(lookup(q))
+        assert (ks.norm[np.clip(got, 0, n - 1)] == expect_keys).all()
+        total = ns_per_item(lookup, q, batch=len(sample))
+        keys_dev = jnp.asarray(ks.norm)
+        desc = jax.jit(lambda qq: btree_descend(bt.as_pytree(), qq, page))
+        model = ns_per_item(desc, q, batch=len(sample))
+        if page == 128:
+            baseline_total = total
+        results[f"btree_p{page}"] = (total, model, bt.size_bytes, page // 2, 0.0)
+
+    # ---- Learned indexes ---------------------------------------------------
+    for s2 in PAPER_STAGE2:
+        leaves = max(64, int(s2 * n / PAPER_N))
+        cfg = RMIConfig(num_leaves=leaves, stage0_hidden=(),
+                        stage0_train_steps=0)
+        idx = build_rmi(ks, cfg)
+        lookup = compile_lookup(idx, ks)
+        got = np.asarray(lookup(q))
+        assert (ks.norm[np.clip(got, 0, n - 1)] == expect_keys).all()
+        total = ns_per_item(lookup, q, batch=len(sample))
+        tree = idx.as_pytree()
+        pred = jax.jit(
+            lambda qq: rmi_predict(tree, qq, n=n, num_leaves=idx.num_leaves)[0]
+        )
+        model = ns_per_item(pred, q, batch=len(sample))
+        results[f"learned_s2_{s2}"] = (
+            total, model, idx.model_size_bytes,
+            idx.mean_abs_err, idx.err_variance,
+        )
+
+    # "complex" first stage (2x16 hidden) at the 100k-equivalent size
+    leaves = max(64, int(100_000 * n / PAPER_N))
+    idx = build_rmi(ks, RMIConfig(num_leaves=leaves, stage0_hidden=(16, 16),
+                                  stage0_train_steps=250))
+    lookup = compile_lookup(idx, ks)
+    total = ns_per_item(lookup, q, batch=len(sample))
+    tree = idx.as_pytree()
+    pred = jax.jit(
+        lambda qq: rmi_predict(tree, qq, n=n, num_leaves=idx.num_leaves)[0]
+    )
+    model = ns_per_item(pred, q, batch=len(sample))
+    results["learned_complex"] = (
+        total, model, idx.model_size_bytes, idx.mean_abs_err, idx.err_variance
+    )
+
+    btree_base_size = results["btree_p128"][2]
+    for name, (total, model, size, err, errvar) in results.items():
+        speedup = (total - baseline_total) / baseline_total
+        savings = (size - btree_base_size) / btree_base_size
+        emit(
+            f"{tag}/{name}",
+            total / 1e3,
+            f"model_ns={model:.0f};search_ns={max(total - model, 0):.0f};"
+            f"speedup={speedup:+.0%};size_mb={size/1e6:.3f};"
+            f"size_vs_btree={savings:+.0%};err={err:.1f}±{errvar:.0f}",
+        )

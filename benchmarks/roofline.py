@@ -1,0 +1,138 @@
+"""Roofline analysis over the dry-run artifacts (EXPERIMENTS §Roofline).
+
+Per (arch x shape x mesh) cell, from results/dryrun/*.json:
+
+  t_compute = HLO_FLOPs_per_device / 197e12        (bf16 MXU peak)
+  t_memory  = HLO_bytes_per_device / 819e9         (HBM bw)
+  t_coll    = coll_bytes_per_device / 50e9         (ICI per-link bw)
+
+(The analyzer reports per-device numbers — the compiled module is the
+per-partition program — so no further division by chip count.)
+Also: MODEL_FLOPS (6·N·D train / 2·N·D prefill / 2·N·B decode, with
+N_active for MoE), the useful-compute ratio, the dominant term, the
+roofline fraction t_model_compute/max(term) (what the §Perf loop
+drives up), and a one-line "what would move it".
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+def model_flops(rec: Dict) -> float:
+    n_active = rec["params"]["n_active"]
+    tokens = rec["global_batch"] * rec["seq_len"]
+    if rec["arch"].startswith("seamless"):
+        # enc-dec splits seq between encoder source and decoder target;
+        # each parameter sees ~S/2 tokens (approximation noted in
+        # EXPERIMENTS §Roofline)
+        tokens = tokens // 2
+    if rec["kind"] == "train":
+        return 6.0 * n_active * tokens
+    if rec["kind"] == "prefill":
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * rec["global_batch"]  # decode: 1 new token/req
+
+
+def model_bytes_per_dev(rec: Dict) -> float:
+    """Decode is bandwidth-bound: the useful per-device traffic is one
+    full read of this device's arguments (param shards + KV/state shard
+    + token) per step — exactly memory_analysis' argument bytes."""
+    return float(rec["memory"]["argument_bytes"])
+
+
+def analyze_cell(rec: Dict) -> Dict:
+    h = rec["hlo_analysis"]
+    devs = rec["num_devices"]
+    t_c = h["flops"] / PEAK_FLOPS
+    t_m = h["mem_bytes"] / HBM_BW
+    t_x = h["coll_bytes"] / ICI_BW
+    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(rec)
+    mf_dev = mf / devs
+    bound = max(terms.values())
+    if rec["kind"] == "decode":
+        # bandwidth roofline: useful traffic / achievable traffic
+        t_model = model_bytes_per_dev(rec) / HBM_BW
+        useful = model_bytes_per_dev(rec) / h["mem_bytes"] if h["mem_bytes"] else 0.0
+    else:
+        t_model = mf_dev / PEAK_FLOPS
+        useful = mf_dev / h["flops"] if h["flops"] else 0.0
+    frac = t_model / bound if bound > 0 else 0.0
+    hint = {
+        "compute": "cut recompute (remat policy) / raise useful-flop ratio",
+        "memory": "larger fusion blocks, bf16 accumulators, better layouts",
+        "collective": "reduce TP width / overlap or shrink payloads (bf16, SP)",
+    }[dominant]
+    temp_gib = rec["memory"]["temp_bytes"] / 2**30
+    return {
+        "cell": f'{rec["arch"]}|{rec["shape"]}|{rec["mesh"]}',
+        "t_compute_s": t_c,
+        "t_memory_s": t_m,
+        "t_collective_s": t_x,
+        "dominant": dominant,
+        "model_flops": mf,
+        "useful_ratio": useful,
+        "roofline_frac": frac,
+        "temp_gib_per_dev": temp_gib,
+        "fits_hbm16": temp_gib <= 16.0,
+        "hint": hint,
+    }
+
+
+def main(out_dir: str = "results/dryrun", table_path: str = "results/roofline.md"):
+    cells: List[Dict] = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("status") != "ok":
+            cells.append(
+                {"cell": f'{rec["arch"]}|{rec["shape"]}|{rec["mesh"]}',
+                 "status": rec.get("status"), "reason": rec.get("reason", rec.get("error", ""))[:90]}
+            )
+            continue
+        row = analyze_cell(rec)
+        row["status"] = "ok"
+        cells.append(row)
+
+    lines = [
+        "| cell | t_comp(s) | t_mem(s) | t_coll(s) | dominant | useful | roofline-frac | temp GiB | fits |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for c in cells:
+        if c.get("status") != "ok":
+            lines.append(
+                f'| {c["cell"]} | — | — | — | {c.get("status")} | — | — | — | {c.get("reason","")} |'
+            )
+            continue
+        lines.append(
+            f'| {c["cell"]} | {c["t_compute_s"]:.3f} | {c["t_memory_s"]:.3f} | '
+            f'{c["t_collective_s"]:.3f} | {c["dominant"]} | {c["useful_ratio"]:.2f} | '
+            f'{c["roofline_frac"]:.3f} | {c["temp_gib_per_dev"]:.1f} | '
+            f'{"y" if c["fits_hbm16"] else "NO"} |'
+        )
+    os.makedirs(os.path.dirname(table_path), exist_ok=True)
+    with open(table_path, "w") as f:
+        f.write("\n".join(lines) + "\n")
+    with open(table_path.replace(".md", ".json"), "w") as f:
+        json.dump(cells, f, indent=1)
+    ok = [c for c in cells if c.get("status") == "ok"]
+    print(f"[roofline] {len(ok)} ok cells -> {table_path}")
+    for c in ok:
+        print(
+            f'  {c["cell"]:55s} dom={c["dominant"]:10s} '
+            f'frac={c["roofline_frac"]:.3f} useful={c["useful_ratio"]:.2f}'
+        )
+    return cells
+
+
+if __name__ == "__main__":
+    main()

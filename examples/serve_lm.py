@@ -1,0 +1,22 @@
+"""Serve a small LM with batched requests: continuous batching, paged KV
+with the RMI page table, and a learned-Bloom prefix-cache probe.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+
+from repro.launch import serve as serve_mod
+
+
+def main():
+    out = serve_mod.main([
+        "--arch", "yi-9b", "--reduced",
+        "--requests", "12", "--max-new", "24",
+        "--batch-slots", "4", "--max-len", "128",
+        "--prefix-bloom",
+    ])
+    assert out["completed"] == 12
+    print("serving ok:", out)
+
+
+if __name__ == "__main__":
+    main()

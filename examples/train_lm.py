@@ -1,0 +1,64 @@
+"""End-to-end driver: train a ~100M-param dense LM for a few hundred
+steps on synthetic packed data, with the RMI-backed pipeline, periodic
+checkpoints, and resume.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300]
+
+(~100M params: 12 layers x d_model 512 x d_ff 2048, vocab 32000.)
+"""
+
+import argparse
+import dataclasses
+import sys
+
+from repro.configs.base import ArchConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt", default="/tmp/lix_train_lm")
+    args = ap.parse_args()
+
+    # register a bespoke ~100M config under the dense family
+    cfg = ArchConfig(
+        name="lm-100m",
+        family="dense",
+        num_layers=12,
+        d_model=512,
+        num_heads=8,
+        num_kv_heads=4,
+        d_ff=2048,
+        vocab_size=32_000,
+        attn_chunk=128,
+        remat=False,
+    )
+    import repro.configs as C
+
+    C.ARCHS["lm-100m"] = cfg
+    C.REDUCED["lm-100m"] = cfg
+
+    from repro.launch import train as train_mod
+
+    out = train_mod.main([
+        "--arch", "lm-100m",
+        "--steps", str(args.steps),
+        "--global-batch", str(args.global_batch),
+        "--seq", str(args.seq),
+        "--warmup", "30",
+        "--lr", "6e-4",
+        "--checkpoint-dir", args.ckpt,
+        "--checkpoint-every", "100",
+        "--log-every", "20",
+    ])
+    print(
+        f"trained {args.steps} steps: loss {out['first_loss']:.3f} -> "
+        f"{out['last_loss']:.3f} (straggler events: {out['straggler_events']})"
+    )
+    assert out["last_loss"] < out["first_loss"]
+
+
+if __name__ == "__main__":
+    main()

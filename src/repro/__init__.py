@@ -1,0 +1,8 @@
+"""LIX — Learned Index Structures as a production JAX framework.
+
+Reproduction + TPU-native extension of Kraska et al., "The Case for
+Learned Index Structures" (2017), embedded in a multi-pod LM
+training/serving stack.
+"""
+
+__version__ = "0.1.0"

@@ -1,0 +1,52 @@
+"""Learned index structures — the paper's contribution, TPU-native.
+
+Public API:
+  Range index (§2-3):  make_keyset, RMIConfig, build_rmi, compile_lookup
+  Baseline:            build_btree, compile_btree_lookup
+  Search (§3.4):       core.search strategies
+  Strings (§3.5):      tokenize, compile_string_lookup
+  Point index (§4):    build_model_hashmap, build_random_hashmap
+  Existence (§5):      build_bloom, build_learned_bloom
+  Synthesis (§3.1):    lif.synthesize
+"""
+
+from repro.core.keys import (
+    KeySet,
+    VectorKeySet,
+    make_keyset,
+    make_vector_keyset,
+)
+from repro.core.rmi import (
+    RMIConfig,
+    RMIndex,
+    build_rmi,
+    compile_lookup,
+    rmi_lookup,
+    rmi_predict,
+)
+from repro.core.btree import BTreeIndex, build_btree, compile_btree_lookup
+from repro.core.bloom import BloomFilter, build_bloom, compile_bloom_probe
+from repro.core.learned_bloom import (
+    GRUSpec,
+    LearnedBloom,
+    build_learned_bloom,
+)
+from repro.core.learned_hash import (
+    HashMap,
+    build_hashmap,
+    build_model_hashmap,
+    build_random_hashmap,
+    compile_hash_lookup,
+)
+from repro.core.lif import IndexSpec, synthesize
+from repro.core.strings import compile_string_lookup, tokenize
+
+__all__ = [
+    "KeySet", "VectorKeySet", "make_keyset", "make_vector_keyset",
+    "RMIConfig", "RMIndex", "build_rmi", "compile_lookup", "rmi_lookup",
+    "rmi_predict", "BTreeIndex", "build_btree", "compile_btree_lookup",
+    "BloomFilter", "build_bloom", "compile_bloom_probe", "GRUSpec",
+    "LearnedBloom", "build_learned_bloom", "HashMap", "build_hashmap",
+    "build_model_hashmap", "build_random_hashmap", "compile_hash_lookup",
+    "IndexSpec", "synthesize", "compile_string_lookup", "tokenize",
+]

@@ -1,0 +1,121 @@
+"""Cache/vector-optimized B-Tree baseline (paper's comparison point).
+
+A pointer-chasing B-Tree cannot be expressed efficiently in XLA (and
+would be an unfair strawman on TPU anyway).  We implement the strongest
+TPU-expressible equivalent: an *implicit* K-ary search tree, FAST-style
+[Kim et al., SIGMOD'10] — the paper's own reference for SIMD B-Trees:
+
+  * internal levels are packed arrays of separator keys, fanout F
+    (= page_size); descent at each level is one vectorized gather of the
+    node's F-1 separators + a branchless rank computation;
+  * the leaf "page" of F keys is searched with the same branchless
+    compare (paper: binary search over ~100 cache-resident items is on
+    par with scanning).
+
+`model_ns` / `search_ns` in the benchmarks map to descent time vs leaf
+search time, mirroring the paper's Model(ns)/Search(ns) split.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class BTreeIndex:
+    page_size: int
+    n: int
+    levels: List[np.ndarray]  # top -> bottom, each (num_nodes * (F-1),) separators
+    depth: int
+
+    @property
+    def size_bytes(self) -> int:
+        """Internal-node storage (paper's B-Tree size column counts the
+        index, not the data)."""
+        return sum(int(lv.size) * 4 for lv in self.levels)
+
+    @property
+    def fixed_error(self) -> int:
+        return self.page_size // 2
+
+    def as_pytree(self):
+        return [jnp.asarray(lv) for lv in self.levels]
+
+
+def build_btree(sorted_keys: np.ndarray, page_size: int = 128) -> BTreeIndex:
+    keys = np.asarray(sorted_keys, dtype=np.float32)
+    n = keys.shape[0]
+    f = page_size
+    levels: List[np.ndarray] = []
+    # bottom-up: level above the leaves holds every f-th key as separator
+    seps = keys[::f]  # one separator per leaf page (its first key)
+    while seps.size > 1:
+        levels.append(seps.astype(np.float32))
+        seps = seps[::f]
+    levels.reverse()
+    depth = len(levels)
+    return BTreeIndex(page_size=f, n=n, levels=levels, depth=depth)
+
+
+def btree_descend(tree_levels, q: jnp.ndarray, page_size: int) -> jnp.ndarray:
+    """Vectorized descent: returns the leaf-page index for each query.
+
+    Each level holds, contiguous per node, F-1 (here: F) separators; the
+    child rank is the count of separators <= q within the node — a
+    branchless vector compare (the SIMD trick FAST uses).
+    """
+    f = page_size
+    node = jnp.zeros_like(q, dtype=jnp.int32)
+    for lv in tree_levels:
+        size = lv.shape[0]
+        base = node * f
+        # gather this node's separator block (F separators)
+        offs = jnp.arange(f, dtype=jnp.int32)
+        idx = jnp.clip(base[:, None] + offs[None, :], 0, size - 1)
+        seps = lv[idx]  # (B, F)
+        valid = (base[:, None] + offs[None, :]) < size
+        rank = jnp.sum(jnp.where(valid & (seps <= q[:, None]), 1, 0), axis=1)
+        node = base + jnp.maximum(rank - 1, 0)
+    return node
+
+
+def btree_lookup(
+    tree_levels,
+    sorted_keys: jnp.ndarray,
+    q: jnp.ndarray,
+    page_size: int,
+) -> jnp.ndarray:
+    """Full lookup: descend to a leaf page, branchless search inside it.
+    Returns lower-bound index into sorted_keys."""
+    n = sorted_keys.shape[0]
+    leaf = btree_descend(tree_levels, q, page_size)
+    base = leaf * page_size
+    offs = jnp.arange(page_size, dtype=jnp.int32)
+    idx = jnp.clip(base[:, None] + offs[None, :], 0, n - 1)
+    page = sorted_keys[idx]  # (B, F)
+    in_range = (base[:, None] + offs[None, :]) < n
+    lt = jnp.sum(jnp.where(in_range & (page < q[:, None]), 1, 0), axis=1)
+    return jnp.clip(base + lt, 0, n)
+
+
+def compile_btree_lookup(index: BTreeIndex, sorted_keys_norm: np.ndarray):
+    levels = index.as_pytree()
+    keys = jnp.asarray(sorted_keys_norm)
+    ps = index.page_size
+
+    @jax.jit
+    def lookup(q):
+        return btree_lookup(levels, keys, q, ps)
+
+    return lookup
+
+
+def btree_traversal_ops(index: BTreeIndex) -> int:
+    """Arithmetic-op estimate per lookup (for the §2.1 back-of-envelope)."""
+    return (index.depth + 1) * index.page_size

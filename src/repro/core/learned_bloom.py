@@ -1,0 +1,237 @@
+"""Learned Bloom filter (paper §5): classifier + overflow Bloom filter.
+
+A character-level GRU (the paper uses a W=16 GRU with E=32 char
+embeddings) is trained as a binary classifier keys-vs-nonkeys with log
+loss (Eq. 2).  At build time we pick the threshold τ for the target FPR
+on held-out non-keys, collect the classifier's false-negative keys
+K_τ^- = {x ∈ K : f(x) < τ} and build a *standard* Bloom filter over
+just that subset — preserving the zero-false-negative contract while
+the Bloom filter shrinks with (1 - FNR).
+
+Also provided: the §5.1.2 "model-hash" Bloom variant where f doubles as
+one of the hash functions via d(p) = ⌊p·m⌋.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bloom import BloomFilter, build_bloom
+from repro.core.strings import tokenize
+
+
+# --------------------------------------------------------------------------
+# Tiny char-GRU in raw JAX (scan over characters)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class GRUSpec:
+    vocab: int = 128
+    embed: int = 32      # paper's E
+    width: int = 16      # paper's W
+    max_len: int = 32
+
+    @property
+    def num_params(self) -> int:
+        e, w = self.embed, self.width
+        return self.vocab * e + 3 * (e + w + 1) * w + (w + 1)
+
+    @property
+    def size_bytes(self) -> int:
+        return self.num_params * 4
+
+
+def gru_init(spec: GRUSpec, key: jax.Array) -> Dict[str, jax.Array]:
+    e, w = spec.embed, spec.width
+    k = jax.random.split(key, 8)
+    s = lambda *sh: 1.0 / np.sqrt(sh[0])
+    return {
+        "emb": jax.random.normal(k[0], (spec.vocab, e)) * 0.1,
+        "wz": jax.random.normal(k[1], (e + w, w)) * s(e + w),
+        "bz": jnp.zeros((w,)),
+        "wr": jax.random.normal(k[2], (e + w, w)) * s(e + w),
+        "br": jnp.zeros((w,)),
+        "wh": jax.random.normal(k[3], (e + w, w)) * s(e + w),
+        "bh": jnp.zeros((w,)),
+        "wo": jax.random.normal(k[4], (w, 1)) * s(w),
+        "bo": jnp.zeros((1,)),
+    }
+
+
+def gru_logits(params: Dict[str, jax.Array], tokens: jax.Array) -> jax.Array:
+    """tokens: (B, L) int32 byte values -> (B,) logits."""
+    x = params["emb"][jnp.clip(tokens, 0, params["emb"].shape[0] - 1)]  # (B,L,E)
+    mask = (tokens > 0).astype(x.dtype)  # zero-padding mask
+
+    def step(h, inp):
+        xt, mt = inp
+        cat = jnp.concatenate([xt, h], axis=-1)
+        z = jax.nn.sigmoid(cat @ params["wz"] + params["bz"])
+        r = jax.nn.sigmoid(cat @ params["wr"] + params["br"])
+        cat2 = jnp.concatenate([xt, r * h], axis=-1)
+        hh = jnp.tanh(cat2 @ params["wh"] + params["bh"])
+        hn = (1 - z) * h + z * hh
+        h = mt[:, None] * hn + (1 - mt[:, None]) * h
+        return h, None
+
+    h0 = jnp.zeros((x.shape[0], params["wz"].shape[1]))
+    h, _ = jax.lax.scan(step, h0, (x.transpose(1, 0, 2), mask.T))
+    return (h @ params["wo"] + params["bo"])[:, 0]
+
+
+def gru_train(
+    spec: GRUSpec,
+    pos_tokens: np.ndarray,
+    neg_tokens: np.ndarray,
+    *,
+    steps: int = 600,
+    batch: int = 512,
+    lr: float = 3e-3,
+    seed: int = 0,
+    verbose: bool = False,
+) -> Dict[str, np.ndarray]:
+    params = gru_init(spec, jax.random.PRNGKey(seed))
+    xs = np.concatenate([pos_tokens, neg_tokens]).astype(np.int32)
+    ys = np.concatenate(
+        [np.ones(len(pos_tokens)), np.zeros(len(neg_tokens))]
+    ).astype(np.float32)
+
+    def loss_fn(p, xb, yb):
+        logits = gru_logits(p, xb)
+        return jnp.mean(
+            jnp.maximum(logits, 0) - logits * yb + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+        )
+
+    beta1, beta2, eps = 0.9, 0.999, 1e-8
+    m = jax.tree.map(jnp.zeros_like, params)
+    v = jax.tree.map(jnp.zeros_like, params)
+
+    @jax.jit
+    def update(p, m, v, t, xb, yb):
+        loss, g = jax.value_and_grad(loss_fn)(p, xb, yb)
+        m = jax.tree.map(lambda a, b: beta1 * a + (1 - beta1) * b, m, g)
+        v = jax.tree.map(lambda a, b: beta2 * a + (1 - beta2) * b * b, v, g)
+        p = jax.tree.map(
+            lambda p_, m_, v_: p_
+            - lr * (m_ / (1 - beta1**t)) / (jnp.sqrt(v_ / (1 - beta2**t)) + eps),
+            p, m, v,
+        )
+        return p, m, v, loss
+
+    rng = np.random.default_rng(seed)
+    for t in range(1, steps + 1):
+        idx = rng.integers(0, len(xs), batch)
+        params, m, v, loss = update(
+            params, m, v, float(t), jnp.asarray(xs[idx]), jnp.asarray(ys[idx])
+        )
+        if verbose and t % 200 == 0:
+            print(f"  gru step {t}: loss={float(loss):.4f}")
+    return jax.tree.map(np.asarray, params)
+
+
+# --------------------------------------------------------------------------
+# The learned Bloom filter itself
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class LearnedBloom:
+    spec: GRUSpec
+    params: Dict[str, np.ndarray]
+    tau: float
+    overflow: BloomFilter
+    fnr: float           # fraction of keys below τ (sizes the overflow)
+    measured_fpr: float  # on held-out non-keys
+
+    @property
+    def size_bytes(self) -> int:
+        return self.spec.size_bytes + self.overflow.size_bytes
+
+    def contains(self, strings: Sequence[str]) -> np.ndarray:
+        toks = tokenize(strings, self.spec.max_len).astype(np.int32)
+        logits = np.asarray(
+            jax.jit(gru_logits)(
+                {k: jnp.asarray(v) for k, v in self.params.items()},
+                jnp.asarray(toks),
+            )
+        )
+        probs = 1.0 / (1.0 + np.exp(-logits))
+        above = probs >= self.tau
+        keys_u64 = _string_hash_u64(strings)
+        return above | self.overflow.contains(keys_u64)
+
+
+def _string_hash_u64(strings: Sequence[str]) -> np.ndarray:
+    out = np.empty(len(strings), np.uint64)
+    for i, s in enumerate(strings):
+        h = np.uint64(14695981039346656037)
+        for b in s.encode("utf-8", errors="replace"):
+            h = np.uint64((int(h) ^ b) * 1099511628211 & 0xFFFFFFFFFFFFFFFF)
+        out[i] = h
+    return out
+
+
+def build_learned_bloom(
+    key_strings: Sequence[str],
+    nonkey_strings: Sequence[str],
+    *,
+    target_fpr: float = 0.01,
+    spec: GRUSpec | None = None,
+    train_steps: int = 600,
+    seed: int = 0,
+    verbose: bool = False,
+    params: Dict[str, np.ndarray] | None = None,
+) -> LearnedBloom:
+    """Pass `params` to reuse an already-trained classifier (one model,
+    many FPR targets — the Fig 13 sweep)."""
+    spec = spec or GRUSpec()
+    pos = tokenize(key_strings, spec.max_len).astype(np.int32)
+    rng = np.random.default_rng(seed)
+    neg = list(nonkey_strings)
+    rng.shuffle(neg)
+    split = len(neg) // 2
+    neg_train, neg_heldout = neg[:split], neg[split:]
+    negt = tokenize(neg_train, spec.max_len).astype(np.int32)
+
+    if params is None:
+        params = gru_train(
+            spec, pos, negt, steps=train_steps, seed=seed, verbose=verbose
+        )
+    jparams = {k: jnp.asarray(v) for k, v in params.items()}
+    apply = jax.jit(lambda t: gru_logits(jparams, t))
+
+    def probs_of(tokens: np.ndarray) -> np.ndarray:
+        out = []
+        for s in range(0, len(tokens), 8192):
+            out.append(np.asarray(apply(jnp.asarray(tokens[s : s + 8192]))))
+        z = np.concatenate(out) if out else np.zeros(0)
+        return 1.0 / (1.0 + np.exp(-z))
+
+    # τ for the target FPR on held-out non-keys (paper §5.1.1)
+    ho = tokenize(neg_heldout, spec.max_len).astype(np.int32)
+    p_ho = probs_of(ho)
+    tau = float(np.quantile(p_ho, 1.0 - target_fpr)) if len(p_ho) else 0.5
+    tau = min(max(tau, 1e-6), 1.0 - 1e-9)
+
+    p_keys = probs_of(pos)
+    fn_mask = p_keys < tau
+    fnr = float(fn_mask.mean())
+    fn_keys = _string_hash_u64([key_strings[i] for i in np.where(fn_mask)[0]])
+    if len(fn_keys) == 0:
+        fn_keys = np.zeros(1, np.uint64)
+    overflow = build_bloom(fn_keys, fpr=target_fpr)
+    measured_fpr = float((p_ho >= tau).mean()) if len(p_ho) else 0.0
+    lb = LearnedBloom(
+        spec=spec, params=params, tau=tau, overflow=overflow,
+        fnr=fnr, measured_fpr=measured_fpr,
+    )
+    if verbose:
+        print(
+            f"learned bloom: τ={tau:.4f} FNR={fnr:.3f} FPR={measured_fpr:.4f} "
+            f"model={spec.size_bytes/1e6:.3f}MB overflow={overflow.size_bytes/1e6:.3f}MB"
+        )
+    return lb

@@ -1,0 +1,202 @@
+"""Hash-Model index (paper §4): the scaled CDF as a hash function.
+
+``h(K) = F(K) * M`` — if F is the true CDF of the key distribution the
+keys spread perfectly over M slots.  We reuse the RMI as F (paper §4.1:
+"we can again leverage the recursive model architecture").
+
+TPU adaptation: the paper's linked-list chains are pointer-chasing; we
+store the map as flat arrays with a chained overflow region, and the
+batched lookup walks chains with a fixed-trip-count gather loop (trip
+count = max chain length, known at build).  Conflict and occupancy
+statistics — the paper's Fig 10 metrics — are exact.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.keys import KeySet
+from repro.core.rmi import RMIConfig, RMIndex, build_rmi, rmi_predict
+
+EMPTY = np.int64(-1)
+
+
+# --------------------------------------------------------------------------
+# Baseline random hash: the paper's "2 multiplications, 3 bitshifts,
+# 3 XORs" mix (a murmur3-style finalizer).
+# --------------------------------------------------------------------------
+
+def random_hash_u64(keys: np.ndarray, num_slots: int) -> np.ndarray:
+    h = np.asarray(keys, dtype=np.uint64).copy()
+    h ^= h >> np.uint64(33)
+    h *= np.uint64(0xFF51AFD7ED558CCD)
+    h ^= h >> np.uint64(33)
+    h *= np.uint64(0xC4CEB9FE1A85EC53)
+    h ^= h >> np.uint64(33)
+    return (h % np.uint64(num_slots)).astype(np.int64)
+
+
+def random_hash_u32_jax(keys: jnp.ndarray, num_slots: int) -> jnp.ndarray:
+    """jit-friendly 32-bit variant used inside kernels/serving."""
+    h = keys.astype(jnp.uint32)
+    h ^= h >> 16
+    h *= jnp.uint32(0x7FEB352D)
+    h ^= h >> 15
+    h *= jnp.uint32(0x846CA68B)
+    h ^= h >> 16
+    return (h % jnp.uint32(num_slots)).astype(jnp.int32)
+
+
+# --------------------------------------------------------------------------
+# Hash map with chained overflow, array-of-structures layout.
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class HashMap:
+    """slots: primary array of size M; overflow: chained spill area.
+
+    slot_key[i]   — key stored at primary slot i (EMPTY if none)
+    slot_next[i]  — index into overflow arrays, -1 if chain ends
+    ovf_key/ovf_next — overflow storage
+    """
+
+    num_slots: int
+    slot_key: np.ndarray
+    slot_next: np.ndarray
+    ovf_key: np.ndarray
+    ovf_next: np.ndarray
+    max_chain: int
+    num_conflicts: int
+    num_empty: int
+
+    @property
+    def load_stats(self) -> Dict[str, float]:
+        m = self.num_slots
+        return {
+            "slots": m,
+            "empty_frac": self.num_empty / m,
+            "conflict_frac": self.num_conflicts / max(1, len(self.ovf_key)+ (self.slot_key != EMPTY).sum()),
+            "max_chain": self.max_chain,
+            "overflow_items": int(self.ovf_key.size),
+        }
+
+
+def build_hashmap(keys: np.ndarray, slots_for: np.ndarray, num_slots: int) -> HashMap:
+    """Sequential insert (build time is not the benchmarked metric)."""
+    keys = np.asarray(keys, dtype=np.float64)
+    slot_key = np.full(num_slots, np.nan)
+    slot_next = np.full(num_slots, -1, np.int64)
+    order = np.argsort(slots_for, kind="stable")
+    sorted_slots = slots_for[order]
+    sorted_keys = keys[order]
+    # first key per slot goes to the primary array
+    first_mask = np.ones(len(order), bool)
+    first_mask[1:] = sorted_slots[1:] != sorted_slots[:-1]
+    slot_key[sorted_slots[first_mask]] = sorted_keys[first_mask]
+    # the rest chain into overflow, grouped per slot
+    rest = ~first_mask
+    ovf_key = sorted_keys[rest]
+    ovf_slot = sorted_slots[rest]
+    n_ovf = int(rest.sum())
+    ovf_next = np.full(n_ovf, -1, np.int64)
+    if n_ovf:
+        same = np.zeros(n_ovf, bool)
+        same[:-1] = ovf_slot[:-1] == ovf_slot[1:]
+        ovf_next[:-1][same[:-1]] = np.arange(1, n_ovf)[same[:-1]]
+        firsts = np.ones(n_ovf, bool)
+        firsts[1:] = ovf_slot[1:] != ovf_slot[:-1]
+        slot_next[ovf_slot[firsts]] = np.arange(n_ovf)[firsts]
+    # stats
+    counts = np.bincount(slots_for, minlength=num_slots)
+    num_empty = int((counts == 0).sum())
+    num_conflicts = int(counts[counts > 1].sum() - (counts > 1).sum())
+    max_chain = int(counts.max())
+    return HashMap(
+        num_slots=num_slots,
+        slot_key=slot_key,
+        slot_next=slot_next,
+        ovf_key=ovf_key if n_ovf else np.zeros(1),
+        ovf_next=ovf_next if n_ovf else np.full(1, -1, np.int64),
+        max_chain=max_chain,
+        num_conflicts=num_conflicts,
+        num_empty=num_empty,
+    )
+
+
+def compile_hash_lookup(hm: HashMap, slot_fn: Callable[[jnp.ndarray], jnp.ndarray]):
+    """Returns jitted fn: raw keys -> found (bool).  Walks chains with a
+    fixed trip count = max chain length."""
+    slot_key = jnp.asarray(hm.slot_key)
+    slot_next = jnp.asarray(hm.slot_next)
+    ovf_key = jnp.asarray(hm.ovf_key)
+    ovf_next = jnp.asarray(hm.ovf_next)
+    trips = max(0, hm.max_chain - 1)
+
+    @jax.jit
+    def lookup(raw_q):
+        slot = slot_fn(raw_q)
+        found = slot_key[slot] == raw_q
+        nxt = slot_next[slot]
+
+        def body(_, state):
+            found, nxt = state
+            valid = nxt >= 0
+            safe = jnp.maximum(nxt, 0)
+            found = found | (valid & (ovf_key[safe] == raw_q))
+            nxt = jnp.where(valid, ovf_next[safe], -1)
+            return found, nxt
+
+        found, _ = jax.lax.fori_loop(0, trips, body, (found, nxt))
+        return found
+
+    return lookup
+
+
+# --------------------------------------------------------------------------
+# The two hash functions under test
+# --------------------------------------------------------------------------
+
+def model_hash_slots(
+    index: RMIndex, keys: KeySet, raw_keys: np.ndarray, num_slots: int
+) -> np.ndarray:
+    """h(K) = F(K) * M with F = the RMI position estimate / N.
+
+    Arithmetic mirrors the Pallas probe kernel bit-for-bit (float32
+    pos * (1/N) * M) so build-time and probe-time slots always agree."""
+    tree = index.as_pytree()
+    q = jnp.asarray(keys.normalize(raw_keys))
+    pos, _, _, _ = jax.jit(
+        lambda qq: rmi_predict(tree, qq, n=index.n, num_leaves=index.num_leaves)
+    )(q)
+    slots = (
+        np.asarray(pos, np.float32) * np.float32(num_slots / index.n)
+    ).astype(np.int32)
+    return np.clip(slots.astype(np.int64), 0, num_slots - 1)
+
+
+def build_model_hashmap(
+    raw_keys: np.ndarray, num_slots: int, rmi_config: RMIConfig | None = None
+) -> tuple[HashMap, RMIndex, KeySet]:
+    from repro.core.keys import make_keyset
+
+    ks = make_keyset(raw_keys)
+    # n/4 leaves keeps mean|err| under ~1 key — the regime where the
+    # learned CDF meaningfully beats random hashing (EXPERIMENTS §Paper)
+    cfg = rmi_config or RMIConfig(num_leaves=max(16, ks.n // 4),
+                                  stage0_hidden=())
+    idx = build_rmi(ks, cfg)
+    slots = model_hash_slots(idx, ks, np.asarray(raw_keys, np.float64), num_slots)
+    hm = build_hashmap(np.asarray(raw_keys, np.float64), slots, num_slots)
+    return hm, idx, ks
+
+
+def build_random_hashmap(raw_keys: np.ndarray, num_slots: int) -> HashMap:
+    slots = random_hash_u64(
+        np.asarray(raw_keys, np.float64).view(np.uint64), num_slots
+    )
+    return build_hashmap(np.asarray(raw_keys, np.float64), slots, num_slots)

@@ -1,0 +1,180 @@
+"""Error-bounded search strategies (paper §3.4), vectorized for TPU.
+
+The CPU paper searches one key at a time with data-dependent branches.
+On TPU we search a whole batch in lockstep with a *fixed* trip count
+derived from the index's worst-case error bound: ``ceil(log2(window))``
+iterations of branchless mid-selection.  All three of the paper's
+strategies survive; the prefetch motivation for quaternary search is
+replaced by its statistical one (probe near the prediction first).
+
+All searches return the *lower bound* index: the smallest i in [lo, hi]
+with sorted_keys[i] >= q, assuming that invariant holds at entry (which
+the RMI error bounds guarantee for stored keys).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def _steps_for_window(max_window: int) -> int:
+    return max(1, int(math.ceil(math.log2(max(2, max_window + 1)))) + 1)
+
+
+def lower_bound_full(sorted_keys: jax.Array, q: jax.Array) -> jax.Array:
+    """Plain full-range binary search (baseline; also the fallback)."""
+    n = sorted_keys.shape[0]
+    lo = jnp.zeros_like(q, dtype=jnp.int32)
+    hi = jnp.full_like(lo, n)
+    steps = _steps_for_window(n)
+
+    def body(_, state):
+        lo, hi = state
+        mid = (lo + hi) // 2
+        km = sorted_keys[jnp.clip(mid, 0, n - 1)]
+        right = km < q
+        return jnp.where(right, mid + 1, lo), jnp.where(right, hi, mid)
+
+    lo, hi = lax.fori_loop(0, steps, body, (lo, hi))
+    return lo
+
+
+def model_binary_search(
+    sorted_keys: jax.Array,
+    q: jax.Array,
+    pos: jax.Array,
+    err_lo: jax.Array,
+    err_hi: jax.Array,
+    max_window: int,
+) -> jax.Array:
+    """Model binary search: window = [pos+err_lo, pos+err_hi].
+
+    The first "middle" is the predicted position itself (paper: the first
+    middle point is set to the model prediction).
+    """
+    n = sorted_keys.shape[0]
+    lo = jnp.clip((pos + err_lo).astype(jnp.int32), 0, n)
+    hi = jnp.clip((pos + err_hi).astype(jnp.int32) + 1, 0, n)
+    steps = _steps_for_window(max_window)
+
+    # first probe at the prediction, not the window middle
+    p0 = jnp.clip(pos.astype(jnp.int32), 0, n - 1)
+    kp = sorted_keys[p0]
+    right = kp < q
+    lo = jnp.where(right, jnp.maximum(lo, p0 + 1), lo)
+    hi = jnp.where(right, hi, jnp.minimum(hi, p0))
+
+    def body(_, state):
+        lo, hi = state
+        mid = (lo + hi) // 2
+        km = sorted_keys[jnp.clip(mid, 0, n - 1)]
+        right = km < q
+        return jnp.where(right, mid + 1, lo), jnp.where(right, hi, mid)
+
+    lo, hi = lax.fori_loop(0, steps, body, (lo, hi))
+    return lo
+
+
+def biased_search(
+    sorted_keys: jax.Array,
+    q: jax.Array,
+    pos: jax.Array,
+    err_lo: jax.Array,
+    err_hi: jax.Array,
+    sigma: jax.Array,
+    max_window: int,
+) -> jax.Array:
+    """Biased search: the mid point leans σ away from the prediction.
+
+    Paper: if key > middle, new middle = min(middle + σ, (middle+right)/2).
+    We apply the bias for the first two iterations (σ, then 2σ) and then
+    fall back to plain halving — mirroring how quickly the bias stops
+    helping once the window shrank below σ.
+    """
+    n = sorted_keys.shape[0]
+    lo = jnp.clip((pos + err_lo).astype(jnp.int32), 0, n)
+    hi = jnp.clip((pos + err_hi).astype(jnp.int32) + 1, 0, n)
+    sig = jnp.maximum(sigma.astype(jnp.int32), 1)
+
+    mid = jnp.clip(pos.astype(jnp.int32), 0, n - 1)
+    for mult in (1, 2):
+        km = sorted_keys[jnp.clip(mid, 0, n - 1)]
+        right = km < q
+        lo = jnp.where(right, jnp.maximum(lo, mid + 1), lo)
+        hi = jnp.where(right, hi, jnp.minimum(hi, mid))
+        step = mult * sig
+        mid = jnp.where(
+            right,
+            jnp.minimum(lo + step, (lo + hi) // 2),
+            jnp.maximum(hi - step, (lo + hi) // 2),
+        )
+        mid = jnp.clip(mid, lo, jnp.maximum(hi - 1, lo))
+
+    steps = _steps_for_window(max_window)
+
+    def body(_, state):
+        lo, hi = state
+        m = (lo + hi) // 2
+        km = sorted_keys[jnp.clip(m, 0, n - 1)]
+        right = km < q
+        return jnp.where(right, m + 1, lo), jnp.where(right, hi, m)
+
+    lo, hi = lax.fori_loop(0, steps, body, (lo, hi))
+    return lo
+
+
+def biased_quaternary_search(
+    sorted_keys: jax.Array,
+    q: jax.Array,
+    pos: jax.Array,
+    err_lo: jax.Array,
+    err_hi: jax.Array,
+    sigma: jax.Array,
+    max_window: int,
+) -> jax.Array:
+    """Biased quaternary search: initial probes at pos-σ, pos, pos+σ.
+
+    On TPU the three probes are three parallel gathers (the vector unit
+    is the "prefetcher").  If q lands between two probes the window
+    collapses to ~2σ immediately; otherwise we keep the reduced window
+    and continue with binary search.
+    """
+    n = sorted_keys.shape[0]
+    lo = jnp.clip((pos + err_lo).astype(jnp.int32), 0, n)
+    hi = jnp.clip((pos + err_hi).astype(jnp.int32) + 1, 0, n)
+    sig = jnp.maximum(sigma.astype(jnp.int32), 1)
+    p = jnp.clip(pos.astype(jnp.int32), 0, n - 1)
+
+    probes = (
+        jnp.clip(p - sig, 0, n - 1),
+        p,
+        jnp.clip(p + sig, 0, n - 1),
+    )
+    for pr in probes:
+        km = sorted_keys[pr]
+        right = km < q
+        lo = jnp.where(right, jnp.maximum(lo, pr + 1), lo)
+        hi = jnp.where(right, hi, jnp.minimum(hi, pr))
+
+    steps = _steps_for_window(max_window)
+
+    def body(_, state):
+        lo, hi = state
+        m = (lo + hi) // 2
+        km = sorted_keys[jnp.clip(m, 0, n - 1)]
+        right = km < q
+        return jnp.where(right, m + 1, lo), jnp.where(right, hi, m)
+
+    lo, hi = lax.fori_loop(0, steps, body, (lo, hi))
+    return lo
+
+
+STRATEGIES = {
+    "binary": model_binary_search,
+    "biased": biased_search,
+    "quaternary": biased_quaternary_search,
+}

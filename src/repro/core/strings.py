@@ -1,0 +1,144 @@
+"""String keys (paper §3.5): tokenization + exact lexicographic search.
+
+Tokenization: an n-length string becomes x ∈ R^N with x_i = the byte
+value, truncated/zero-padded to a maximum length N (the paper's scheme
+verbatim).  The RMI stage models consume the normalized vector.
+
+The final error-bounded search must compare *lexicographically*; a
+scalar projection of the vector loses order at ties.  We pack 4 bytes
+per int32 word and run the branchless fixed-trip binary search with a
+vectorized lexicographic compare over the packed words — exact for
+prefixes up to N bytes (beyond-N ties are resolved to the first match,
+the same contract as the paper's truncation).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from jax import lax
+
+
+def tokenize(strings: Sequence[str], max_len: int) -> np.ndarray:
+    """(N,) strings -> (N, max_len) float64 byte values, zero padded."""
+    out = np.zeros((len(strings), max_len), np.float64)
+    for i, s in enumerate(strings):
+        b = s.encode("utf-8", errors="replace")[:max_len]
+        out[i, : len(b)] = np.frombuffer(b, np.uint8)
+    return out
+
+
+def pack_words(tokens: np.ndarray) -> np.ndarray:
+    """(N, L) byte values -> (N, ceil(L/4)) int32, big-endian per word so
+    unsigned word comparison == lexicographic byte comparison."""
+    n, length = tokens.shape
+    w = math.ceil(length / 4)
+    padded = np.zeros((n, w * 4), np.uint32)
+    padded[:, :length] = tokens.astype(np.uint32)
+    words = (
+        (padded[:, 0::4] << 24)
+        | (padded[:, 1::4] << 16)
+        | (padded[:, 2::4] << 8)
+        | padded[:, 3::4]
+    )
+    return words.astype(np.int64).astype(np.int32)  # two's complement carrier
+
+
+def _u(x: jnp.ndarray) -> jnp.ndarray:
+    return x.astype(jnp.uint32)
+
+
+def lex_less(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Row-wise a < b for packed-word matrices (B, W), unsigned lexicographic."""
+    au, bu = _u(a), _u(b)
+    eq = au == bu
+    lt = au < bu
+    # first position where they differ decides; scan left to right
+    prefix_eq = jnp.cumprod(
+        jnp.concatenate([jnp.ones_like(eq[:, :1]), eq[:, :-1]], axis=1), axis=1
+    ).astype(bool)
+    return jnp.any(prefix_eq & lt & ~eq, axis=1)
+
+
+def lower_bound_lex(
+    packed_keys: jnp.ndarray,  # (N, W) packed sorted strings
+    q: jnp.ndarray,            # (B, W) packed queries
+    lo: jnp.ndarray,
+    hi: jnp.ndarray,
+    max_window: int,
+) -> jnp.ndarray:
+    """Error-bounded lower-bound search with lexicographic compare."""
+    n = packed_keys.shape[0]
+    steps = max(1, int(math.ceil(math.log2(max(2, max_window + 1)))) + 1)
+
+    def body(_, state):
+        lo, hi = state
+        mid = (lo + hi) // 2
+        km = packed_keys[jnp.clip(mid, 0, n - 1)]
+        right = lex_less(km, q)
+        return jnp.where(right, mid + 1, lo), jnp.where(right, hi, mid)
+
+    lo, hi = lax.fori_loop(0, steps, body, (lo, hi))
+    return lo
+
+
+def compile_string_lookup(index, keys, strategy: str = "binary"):
+    """jitted fn: (B, L) tokenized queries -> lower-bound indices.
+
+    `index` is an RMIndex built over a VectorKeySet; the window comes
+    from the RMI, the compare from packed words.  The strategy picks how
+    the window is pre-shrunk before the lexicographic binary phase:
+    'binary' uses the raw window; 'biased'/'quaternary' first probe at
+    pos±σ (vectorized) to shrink it — the §3.4 strategies transplanted
+    onto exact string compare.
+    """
+    from repro.core.rmi import rmi_predict
+
+    tree = index.as_pytree()
+    packed = jnp.asarray(pack_words(keys.raw))
+    n, m = index.n, index.num_leaves
+    w = index.max_window
+
+    @jax.jit
+    def lookup(tok_q: jnp.ndarray):  # (B, L) raw byte values
+        qn = (tok_q / keys.scale).astype(jnp.float32)
+        pos, flo, fhi, sig = rmi_predict(tree, qn, n=n, num_leaves=m)
+        lo = jnp.clip(flo.astype(jnp.int32), 0, n)
+        hi = jnp.clip(fhi.astype(jnp.int32) + 1, 0, n)
+        pq = jnp.asarray(pack_words_jax(tok_q))
+        if strategy in ("biased", "quaternary"):
+            p = jnp.clip(pos.astype(jnp.int32), 0, n - 1)
+            s = jnp.maximum(sig.astype(jnp.int32), 1)
+            probes = (jnp.clip(p - s, 0, n - 1), p, jnp.clip(p + s, 0, n - 1))
+            if strategy == "biased":
+                probes = (p,)
+            for pr in probes:
+                km = packed[pr]
+                right = lex_less(km, pq)
+                lo = jnp.where(right, jnp.maximum(lo, pr + 1), lo)
+                hi = jnp.where(right, hi, jnp.minimum(hi, pr))
+        return lower_bound_lex(packed, pq, lo, hi, w)
+
+    return lookup
+
+
+def pack_words_jax(tokens: jnp.ndarray) -> jnp.ndarray:
+    b, length = tokens.shape
+    wlen = math.ceil(length / 4)
+    pad = wlen * 4 - length
+    t = tokens.astype(jnp.uint32)
+    if pad:
+        t = jnp.pad(t, ((0, 0), (0, pad)))
+    words = (
+        (t[:, 0::4] << 24) | (t[:, 1::4] << 16) | (t[:, 2::4] << 8) | t[:, 3::4]
+    )
+    return words.astype(jnp.int32)
+
+
+def sort_strings(strings: List[str]) -> List[str]:
+    return sorted(set(strings))

@@ -1,0 +1,7 @@
+from repro.data.datasets import (
+    gen_lognormal,
+    gen_maps,
+    gen_urls,
+    gen_weblogs,
+    gen_webdocs,
+)

@@ -1,0 +1,6 @@
+from repro.distributed.sharding import (
+    batch_shardings,
+    cache_shardings,
+    param_shardings,
+    opt_state_shardings,
+)

@@ -1,0 +1,281 @@
+"""Logical-axis sharding rules with divisibility-aware fallback.
+
+The MaxText/t5x idea, trimmed to what this framework needs: every param
+leaf is matched *by its tree path* to a right-aligned tuple of logical
+axes; logical axes resolve to mesh axes; a rule only applies if the
+dimension divides the mesh-axis size (else that dim replicates).
+Right-alignment makes scan-over-layers stacking transparent — a leaf
+(L, D, F) and its unstacked (D, F) twin hit the same rule.
+
+Logical axes:
+  tp    — tensor parallel        -> ("model",)
+  fsdp  — weight sharding        -> ("data",)   (only when cfg.fsdp_params)
+  dp    — batch                  -> ("pod", "data") when the pod axis exists
+  sp    — sequence parallel      -> ("data",)   (decode with unshardable batch)
+
+Parallelism recap (DESIGN §6): DP over pod×data, TP over model, EP =
+experts over model, FSDP over data for the ≥100B archs, SP for
+long-context decode.  PP intentionally absent at 2 pods (DESIGN §8).
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+# --- rule table: path pattern -> right-aligned logical axes ----------------
+# ("fsdp","tp") on (..., D_in, D_out): column-parallel weight
+# ("tp","fsdp") on (..., D_in, D_out): row-parallel weight (contracting in)
+_PARAM_RULES: Tuple[Tuple[str, Tuple[Optional[str], ...]], ...] = (
+    (r"(^|/)embed$", ("tp", None)),
+    (r"(^|/)(wq|wk|wv|wz|wi|wf|w_gate|w_up|in_proj|w_dt|x_wq|x_wk|x_wv|"
+     r"proj_w1|proj_w2|frontend|ri|rf|rz|ro|wo_gate)$", ("fsdp", "tp")),
+    (r"(^|/)(wo|w_down|out_proj|x_wo|w_bcdt)$", ("tp", "fsdp")),
+    (r"(^|/)(we_gate|we_up)$", ("tp", "fsdp", None)),  # E -> model (EP), D -> data
+    (r"(^|/)we_down$", ("tp", None, "fsdp")),          # E -> model, D -> data
+    (r"(^|/)router$", (None, None)),
+    (r"(^|/)conv_w$", (None, "tp")),
+    (r"(^|/)a_log$", ("tp", None)),
+    (r"(^|/)(d_skip|dt_bias|conv_b)$", ("tp",)),
+    (r"(^|/)out_ln$", ("tp",)),
+    (r"(^|/)(ln\d?|ln|x_ln|final_norm|enc_norm|proj_b1|proj_b2)$", (None,)),
+)
+
+# cache leaves, matched on full dotted path; B/S resolved dynamically
+_CACHE_RULES: Tuple[Tuple[str, Tuple[Optional[str], ...]], ...] = (
+    (r"(^|/)(k|v|xk|xv)$", ("dp", "kvh", "sp_if_b1", None)),  # (B,H,S,hd)
+    (r"mamba/h$", ("dp", "tp", None)),       # (B, di, ds)
+    (r"mamba/conv$", ("dp", None, "tp")),    # (B, conv-1, di)
+    (r"(^|/)m/c$", ("dp", None, None, "tp")),  # mlstm (B, H, dk, dv)
+    (r"(^|/)m/n$", ("dp", None, None)),
+    (r"(^|/)m/m$", ("dp", None)),
+    (r"(^|/)s/(c|n|m|h)$", ("dp", None)),
+    (r"(^|/)len$", ()),
+)
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name]
+
+
+# --- global sharding policy switch (set per-arch by the launcher) ----------
+# dp_over_model=True: the model axis joins data parallelism; weights stop
+# being Megatron-TP and become FSDP-sharded over the model axis instead.
+# The right layout for small-d_model archs where TP=16 activation
+# all-reduces dwarf compute (§Perf hillclimb, yi-6b).
+_DP_OVER_MODEL = False
+
+
+def set_dp_over_model(flag: bool) -> None:
+    global _DP_OVER_MODEL
+    _DP_OVER_MODEL = bool(flag)
+
+
+def _dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    if _DP_OVER_MODEL and "model" in mesh.shape:
+        axes = axes + ("model",)
+    return axes
+
+
+def _resolve(
+    logical: Optional[str], dim: int, mesh: Mesh, *, fsdp: bool, batch_shardable: bool
+):
+    """One logical axis + concrete dim -> mesh axes or None."""
+    if logical is None:
+        return None
+    if logical == "tp":
+        if _DP_OVER_MODEL:
+            # weights are FSDP-sharded over the model axis instead of TP:
+            # the 'tp' (output/expert) dim carries the shard
+            return "model" if dim % _axis_size(mesh, "model") == 0 else None
+        return "model" if dim % _axis_size(mesh, "model") == 0 else None
+    if logical == "fsdp":
+        if _DP_OVER_MODEL:
+            return None  # the tp dim already shards over model
+        if not fsdp or "data" not in mesh.shape:
+            return None
+        return "data" if dim % _axis_size(mesh, "data") == 0 else None
+    if logical == "dp":
+        axes = _dp_axes(mesh)
+        if not axes:
+            return None
+        total = int(np.prod([_axis_size(mesh, a) for a in axes]))
+        if dim % total == 0:
+            return axes if len(axes) > 1 else axes[0]
+        if dim % _axis_size(mesh, axes[0]) == 0:
+            return axes[0]
+        return None
+    if logical == "kvh":
+        return "model" if dim % _axis_size(mesh, "model") == 0 else None
+    if logical == "sp_if_b1":
+        # sequence parallel only when the batch could not shard
+        if batch_shardable:
+            return None
+        if "data" in mesh.shape and dim % _axis_size(mesh, "data") == 0:
+            return "data"
+        return None
+    raise ValueError(f"unknown logical axis {logical}")
+
+
+def _match(rules, path: str):
+    for pat, spec in rules:
+        if re.search(pat, path):
+            return spec
+    return None
+
+
+def _path_str(path) -> str:
+    parts = []
+    for entry in path:
+        if hasattr(entry, "key"):
+            parts.append(str(entry.key))
+        elif hasattr(entry, "idx"):
+            parts.append(str(entry.idx))
+    return "/".join(parts)
+
+
+def _spec_for_leaf(
+    path: str, shape: Tuple[int, ...], mesh: Mesh, rules, *, fsdp: bool,
+    batch_shardable: bool = True,
+) -> P:
+    logical = _match(rules, path)
+    if logical is None:
+        return P()
+    nd = len(shape)
+    la = len(logical)
+    out = [None] * nd
+    # right-aligned application; leading (stacking) dims replicate
+    for i, ax in enumerate(logical):
+        pos = nd - la + i
+        if pos < 0:
+            continue
+        out[pos] = _resolve(
+            ax, shape[pos], mesh, fsdp=fsdp, batch_shardable=batch_shardable
+        )
+    return P(*out)
+
+
+def maybe_constrain(x, *spec):
+    """with_sharding_constraint iff the named axes exist on the current
+    mesh (no-op in single-device tests).  Logical names: 'dp' expands to
+    the present data axes, 'tp' to 'model'."""
+    try:
+        from jax._src import mesh as mesh_lib
+
+        mesh = mesh_lib.thread_resources.env.physical_mesh
+        if mesh.empty:
+            return x
+        axes = set(mesh.axis_names)
+    except Exception:
+        return x
+    if not axes:
+        return x
+    parts = []
+    for s in spec:
+        if s == "dp":
+            dp = tuple(a for a in ("pod", "data") if a in axes)
+            parts.append(dp if len(dp) > 1 else (dp[0] if dp else None))
+        elif s == "tp":
+            parts.append("model" if "model" in axes else None)
+        else:
+            parts.append(s)
+    # only constrain dims that divide; GSPMD rejects otherwise
+    sizes = dict(mesh.shape)
+    for i, p in enumerate(parts):
+        if p is None:
+            continue
+        names = p if isinstance(p, tuple) else (p,)
+        total = 1
+        for n in names:
+            total *= sizes.get(n, 1)
+        if x.shape[i] % total != 0:
+            parts[i] = None
+    return jax.lax.with_sharding_constraint(x, P(*parts))
+
+
+def param_shardings(abstract_params, cfg, mesh: Mesh):
+    """Pytree of NamedShardings matching `abstract_params`."""
+
+    def one(path, leaf):
+        spec = _spec_for_leaf(
+            _path_str(path), leaf.shape, mesh, _PARAM_RULES, fsdp=cfg.fsdp_params
+        )
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, abstract_params)
+
+
+def _used_axes(parts) -> set:
+    used = set()
+    for p in parts:
+        if p is None:
+            continue
+        if isinstance(p, (tuple, list)):
+            used.update(p)
+        else:
+            used.add(p)
+    return used
+
+
+def opt_state_shardings(abstract_opt, cfg, mesh: Mesh):
+    """ZeRO-1: optimizer moments/master follow the param spec; if a leaf
+    leaves dim 0 unsharded and dim 0 divides the data axis, shard it
+    there (elementwise update => any sharding is valid).  This is the
+    scatter-state/all-gather-params trade at the PartitionSpec level."""
+    dsize = mesh.shape.get("data", 1)
+
+    def one(path, leaf):
+        spec = _spec_for_leaf(
+            _path_str(path), leaf.shape, mesh, _PARAM_RULES, fsdp=cfg.fsdp_params
+        )
+        parts = list(spec) + [None] * (leaf.ndim - len(spec))
+        if (
+            leaf.ndim >= 1
+            and parts
+            and parts[0] is None
+            and "data" not in _used_axes(parts)
+            and leaf.shape[0] % dsize == 0
+            and leaf.size > 1024
+        ):
+            parts[0] = "data"
+        return NamedSharding(mesh, P(*parts))
+
+    return jax.tree_util.tree_map_with_path(one, abstract_opt)
+
+
+def batch_shardings(abstract_batch, mesh: Mesh):
+    """Inputs: batch dim over all dp axes (with divisibility fallback)."""
+
+    def one(path, leaf):
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        ax = _resolve("dp", leaf.shape[0], mesh, fsdp=False, batch_shardable=True)
+        return NamedSharding(mesh, P(ax, *([None] * (leaf.ndim - 1))))
+
+    return jax.tree_util.tree_map_with_path(one, abstract_batch)
+
+
+def cache_shardings(abstract_cache, cfg, mesh: Mesh, *, batch_size: int):
+    """KV caches / recurrent state.  If the batch shards over dp we use
+    it; otherwise (long_500k: B=1) the sequence dim of KV shards over
+    `data` (sequence parallelism)."""
+    axes = _dp_axes(mesh)
+    total = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+    batch_shardable = bool(axes) and batch_size % total == 0
+
+    def one(path, leaf):
+        return NamedSharding(
+            mesh,
+            _spec_for_leaf(
+                _path_str(path), leaf.shape, mesh, _CACHE_RULES,
+                fsdp=False, batch_shardable=batch_shardable,
+            ),
+        )
+
+    return jax.tree_util.tree_map_with_path(one, abstract_cache)

@@ -1,0 +1,84 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Each op picks the kernel when it applies (shape/platform) and falls
+back to the pure-jnp reference otherwise; callers never touch
+pallas_call directly.  `interpret` defaults to True because this
+container is CPU-only; on TPU the launcher flips it to False.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.bloom_probe import bloom_probe_pallas
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.hash_probe import hash_probe_pallas
+from repro.kernels.rmi_lookup import rmi_lookup_pallas, stage0_flat
+
+
+def rmi_lookup_op(index, sorted_keys_norm, q_norm, *, block_q=1024, interpret=True):
+    """Batched RMI lookup via the fused kernel.  `index` is an RMIndex."""
+    return rmi_lookup_pallas(
+        jnp.asarray(q_norm),
+        stage0_flat(index.stage0_params),
+        jnp.asarray(index.leaf_w),
+        jnp.asarray(index.leaf_b),
+        jnp.asarray(index.err_lo),
+        jnp.asarray(index.err_hi),
+        jnp.asarray(sorted_keys_norm),
+        hidden=tuple(index.config.stage0_hidden),
+        n=index.n,
+        num_leaves=index.num_leaves,
+        max_window=index.max_window,
+        block_q=block_q,
+        interpret=interpret,
+    )
+
+
+def bloom_probe_op(bf, queries_u32, *, interpret=True):
+    """Batched Bloom probe via kernel.  `bf` is a core.BloomFilter."""
+    return bloom_probe_pallas(
+        jnp.asarray(queries_u32),
+        jnp.asarray(bf.words),
+        num_bits=bf.num_bits,
+        k=bf.num_hashes,
+        interpret=interpret,
+    )
+
+
+def hash_probe_op(hm, index, keys, q_raw, *, interpret=True):
+    """Batched hash-model probe.  `hm` HashMap, `index` linear-stage RMI."""
+    kn = keys.normalize(q_raw)
+    slot_key_norm = keys.normalize(hm.slot_key)  # NaN-safe: NaN != q
+    ovf_key_norm = keys.normalize(hm.ovf_key)
+    return hash_probe_pallas(
+        jnp.asarray(kn),
+        jnp.asarray(index.stage0_params["w0"]),
+        jnp.asarray(index.stage0_params["b0"]),
+        jnp.asarray(index.leaf_w),
+        jnp.asarray(index.leaf_b),
+        jnp.asarray(slot_key_norm),
+        jnp.asarray(hm.slot_next.astype("int32")),
+        jnp.asarray(ovf_key_norm),
+        jnp.asarray(hm.ovf_next.astype("int32")),
+        n=index.n,
+        num_leaves=index.num_leaves,
+        num_slots=hm.num_slots,
+        trips=max(0, hm.max_chain - 1),
+        interpret=interpret,
+    )
+
+
+def attention_op(q, k, v, *, causal=True, use_kernel=True, interpret=True,
+                 blk_q=128, blk_k=128):
+    """GQA attention: flash kernel when shapes tile; reference otherwise."""
+    s = q.shape[2]
+    if use_kernel and s % min(blk_q, s) == 0 and s >= 8:
+        bq, bk = min(blk_q, s), min(blk_k, s)
+        if s % bq == 0 and s % bk == 0:
+            return flash_attention(
+                q, k, v, causal=causal, blk_q=bq, blk_k=bk, interpret=interpret
+            )
+    return ref.mha_reference(q, k, v, causal=causal)

@@ -1,0 +1,110 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each function mirrors one kernel's semantics with straight-line jnp —
+no tiling, no scratch, no tricks.  Kernel tests sweep shapes/dtypes and
+assert_allclose against these.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def rmi_lookup_reference(
+    q: jax.Array,
+    stage0: tuple,
+    leaf_w: jax.Array,
+    leaf_b: jax.Array,
+    err_lo: jax.Array,
+    err_hi: jax.Array,
+    sorted_keys: jax.Array,
+    *,
+    n: int,
+    num_leaves: int,
+) -> jax.Array:
+    """Exact lower-bound via full searchsorted, but window-clamped the
+    same way the kernel is (predictions outside the window behave
+    identically)."""
+    h = q[:, None]
+    nl = len(stage0) // 2
+    for i in range(nl):
+        h = h @ stage0[2 * i] + stage0[2 * i + 1][None, :]
+        if i < nl - 1:
+            h = jnp.maximum(h, 0.0)
+    p0 = h[:, 0]
+    leaf = jnp.clip(
+        jnp.floor(p0 * (num_leaves / n)).astype(jnp.int32), 0, num_leaves - 1
+    )
+    pos = jnp.clip(leaf_w[leaf] * q + leaf_b[leaf], 0.0, float(n - 1))
+    lo = jnp.clip((pos + err_lo[leaf]).astype(jnp.int32), 0, n)
+    hi = jnp.clip((pos + err_hi[leaf]).astype(jnp.int32) + 1, 0, n)
+    # lower bound within [lo, hi] — oracle via searchsorted then clamp
+    full = jnp.searchsorted(sorted_keys, q, side="left").astype(jnp.int32)
+    return jnp.clip(full, lo, hi)
+
+
+def bloom_probe_reference(
+    queries_u32: jax.Array, words: jax.Array, *, num_bits: int, k: int
+) -> jax.Array:
+    def mix(h, seed):
+        h = h ^ jnp.uint32(seed * 0x9E3779B9 & 0xFFFFFFFF)
+        h ^= h >> 16
+        h *= jnp.uint32(0x7FEB352D)
+        h ^= h >> 15
+        h *= jnp.uint32(0x846CA68B)
+        h ^= h >> 16
+        return h
+
+    q = queries_u32.astype(jnp.uint32)
+    h1, h2 = mix(q, 1), mix(q, 2) | jnp.uint32(1)
+    hit = jnp.ones(q.shape, bool)
+    for i in range(k):
+        bit = (h1 + jnp.uint32(i) * h2) % jnp.uint32(num_bits)
+        hit &= (words[(bit >> 5).astype(jnp.int32)] & (jnp.uint32(1) << (bit & jnp.uint32(31)))) != 0
+    return hit
+
+
+def hash_probe_reference(
+    q, s0_w, s0_b, leaf_w, leaf_b, slot_key, slot_next, ovf_key, ovf_next,
+    *, n: int, num_leaves: int, num_slots: int,
+) -> jax.Array:
+    p0 = q * s0_w[0, 0] + s0_b[0]
+    leaf = jnp.clip(
+        jnp.floor(p0 * (num_leaves / n)).astype(jnp.int32), 0, num_leaves - 1
+    )
+    pos = jnp.clip(leaf_w[leaf] * q + leaf_b[leaf], 0.0, float(n - 1))
+    slot = jnp.clip(
+        (pos * jnp.float32(num_slots / n)).astype(jnp.int32), 0, num_slots - 1
+    )
+    found = slot_key[slot] == q
+    nxt = slot_next[slot]
+    # walk chains to exhaustion (python loop over max possible)
+    for _ in range(int(ovf_key.shape[0]) + 1):
+        valid = nxt >= 0
+        if not bool(jnp.any(valid)):
+            break
+        safe = jnp.maximum(nxt, 0)
+        found = found | (valid & (ovf_key[safe] == q))
+        nxt = jnp.where(valid, ovf_next[safe], -1)
+    return found
+
+
+def mha_reference(
+    q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True
+) -> jax.Array:
+    """(B, Hq, S, D) GQA attention, fp32 softmax, no tiling."""
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    kr = jnp.repeat(k, group, axis=1)
+    vr = jnp.repeat(v, group, axis=1)
+    s_ = jnp.einsum(
+        "bhqd,bhkd->bhqk", q.astype(jnp.float32), kr.astype(jnp.float32)
+    ) / np.sqrt(d)
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        s_ = jnp.where(mask[None, None], s_, -1e30)
+    p = jax.nn.softmax(s_, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vr.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,153 @@
+"""Fused RMI lookup Pallas kernel: stage-0 MLP + leaf FMA + bounded search.
+
+This is the paper's hot spot (§2.1's back-of-envelope: the model must
+beat ~50 cycles/B-Tree-node) moved to where the paper says it belongs —
+an ML accelerator.  One kernel invocation performs, for a tile of
+queries entirely inside VMEM:
+
+  1. stage-0 MLP (dense VPU/MXU math),
+  2. leaf-model selection (vector gather from the SoA leaf arrays),
+  3. leaf FMA -> position + error window,
+  4. fixed-trip-count branchless binary search over the sorted keys.
+
+VMEM budget (v5e ≈ 16 MiB/core): leaf SoA (M ≤ 200k: 4 arrays × 800 KB
+= 3.2 MB) + sorted keys (N ≤ 2M f32 = 8 MB) + query tile. At pod scale
+the sorted array is sharded over chips (≈ 780K keys/chip for the
+paper's 200M on 256 chips), so the whole lookup is VMEM-resident —
+the TPU answer to the paper's "B-Trees are cache-efficient" objection.
+
+Dynamic gathers from VMEM (`jnp.take`) lower to Mosaic vector gathers;
+we validate in interpret mode on CPU (the container has no TPU).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+
+def _search_steps(max_window: int) -> int:
+    return max(1, int(math.ceil(math.log2(max(2, max_window + 1)))) + 1)
+
+
+def _rmi_kernel(
+    # refs, in order: q, stage0 params (w,b per layer), leaf arrays, keys, out
+    *refs,
+    hidden: Tuple[int, ...],
+    n: int,
+    num_leaves: int,
+    steps: int,
+):
+    nl = len(hidden) + 1
+    q_ref = refs[0]
+    params = refs[1 : 1 + 2 * nl]
+    leaf_w_ref, leaf_b_ref, err_lo_ref, err_hi_ref, keys_ref = refs[
+        1 + 2 * nl : 6 + 2 * nl
+    ]
+    out_ref = refs[-1]
+
+    q = q_ref[...]  # (block_q,)
+    # ---- stage 0: tiny MLP, dense math --------------------------------
+    h = q[:, None]
+    for i in range(nl):
+        w, b = params[2 * i][...], params[2 * i + 1][...]
+        h = h @ w + b[None, :]
+        if i < nl - 1:
+            h = jnp.maximum(h, 0.0)
+    p0 = h[:, 0]
+
+    # ---- leaf select + FMA --------------------------------------------
+    leaf = jnp.clip(
+        jnp.floor(p0 * (num_leaves / n)).astype(jnp.int32), 0, num_leaves - 1
+    )
+    slope = jnp.take(leaf_w_ref[...], leaf)
+    inter = jnp.take(leaf_b_ref[...], leaf)
+    pos = jnp.clip(slope * q + inter, 0.0, float(n - 1))
+    lo = jnp.clip(
+        (pos + jnp.take(err_lo_ref[...], leaf)).astype(jnp.int32), 0, n
+    )
+    hi = jnp.clip(
+        (pos + jnp.take(err_hi_ref[...], leaf)).astype(jnp.int32) + 1, 0, n
+    )
+
+    # ---- first probe at the prediction (model binary search §3.4) -----
+    keys = keys_ref[...]
+    p0i = jnp.clip(pos.astype(jnp.int32), 0, n - 1)
+    kp = jnp.take(keys, p0i)
+    right = kp < q
+    lo = jnp.where(right, jnp.maximum(lo, p0i + 1), lo)
+    hi = jnp.where(right, hi, jnp.minimum(hi, p0i))
+
+    # ---- fixed-trip branchless binary search --------------------------
+    def body(_, state):
+        lo, hi = state
+        mid = (lo + hi) // 2
+        km = jnp.take(keys, jnp.clip(mid, 0, n - 1))
+        r = km < q
+        return jnp.where(r, mid + 1, lo), jnp.where(r, hi, mid)
+
+    lo, hi = jax.lax.fori_loop(0, steps, body, (lo, hi))
+    out_ref[...] = lo
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("hidden", "n", "num_leaves", "max_window", "block_q", "interpret"),
+)
+def rmi_lookup_pallas(
+    q: jax.Array,                      # (B,) normalized queries
+    stage0: Tuple[jax.Array, ...],     # (w0, b0, w1, b1, ...) flattened
+    leaf_w: jax.Array,                 # (M,)
+    leaf_b: jax.Array,                 # (M,)
+    err_lo: jax.Array,                 # (M,)
+    err_hi: jax.Array,                 # (M,)
+    sorted_keys: jax.Array,            # (N,)
+    *,
+    hidden: Tuple[int, ...],
+    n: int,
+    num_leaves: int,
+    max_window: int,
+    block_q: int = 1024,
+    interpret: bool = True,
+) -> jax.Array:
+    b = q.shape[0]
+    bq = min(block_q, b)
+    padded = (b + bq - 1) // bq * bq
+    if padded != b:
+        q = jnp.pad(q, (0, padded - b))
+    steps = _search_steps(max_window)
+    grid = (padded // bq,)
+
+    full = lambda a: pl.BlockSpec(a.shape, lambda i: (0,) * a.ndim)
+    in_specs = [pl.BlockSpec((bq,), lambda i: (i,))]
+    in_specs += [full(p) for p in stage0]
+    in_specs += [full(leaf_w), full(leaf_b), full(err_lo), full(err_hi)]
+    in_specs += [full(sorted_keys)]
+
+    out = pl.pallas_call(
+        functools.partial(
+            _rmi_kernel, hidden=hidden, n=n, num_leaves=num_leaves, steps=steps
+        ),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bq,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((padded,), jnp.int32),
+        interpret=interpret,
+    )(q, *stage0, leaf_w, leaf_b, err_lo, err_hi, sorted_keys)
+    return out[:b]
+
+
+def stage0_flat(params: Dict[str, np.ndarray]) -> Tuple[jax.Array, ...]:
+    """RMIndex.stage0_params dict -> ordered (w0, b0, w1, b1, ...) tuple."""
+    nl = len(params) // 2
+    out = []
+    for i in range(nl):
+        out.append(jnp.asarray(params[f"w{i}"]))
+        out.append(jnp.asarray(params[f"b{i}"]))
+    return tuple(out)

@@ -1,0 +1,238 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST stay the first statements in this module —
+jax locks the device count at first init, and the production meshes
+need 512 placeholder host devices.  Do not set that flag anywhere
+global (smoke tests and benchmarks must see 1 device).
+
+For each cell this lowers the real step function (train_step with
+AdamW+ZeRO-1, prefill, or decode) with ShapeDtypeStruct inputs and the
+production NamedShardings, compiles it, and records:
+
+  * memory_analysis()        — proves the cell fits per-device HBM
+  * cost_analysis()          — XLA's per-device FLOPs/bytes (1 loop trip)
+  * hlo_analysis.summarize() — trip-count-corrected FLOPs / memory /
+                               collective bytes (benchmarks/hlo_analysis)
+
+One JSON per cell lands in --out; benchmarks/roofline.py turns them
+into EXPERIMENTS.md §Roofline.  Run `--all` to sweep (each cell in a
+subprocess: isolates compile-cache memory and failures).
+"""
+
+import argparse
+import json
+import subprocess
+import sys
+import time
+import traceback
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS, SHAPES, get_arch, shape_supported
+from repro.distributed.sharding import (
+    batch_shardings,
+    cache_shardings,
+    opt_state_shardings,
+    param_shardings,
+)
+from repro.launch.mesh import make_production_mesh
+from repro.models import get_model
+from repro.train.optimizer import OptimizerConfig, adamw_init
+from repro.train.train_step import make_train_step
+
+
+def count_params(abstract_params, cfg) -> Dict[str, float]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(abstract_params)
+    total = 0
+    expert = 0
+    for path, leaf in flat:
+        n = int(np.prod(leaf.shape))
+        total += n
+        keys = "/".join(str(getattr(e, "key", "")) for e in path)
+        if "we_gate" in keys or "we_up" in keys or "we_down" in keys:
+            expert += n
+    active = total
+    if cfg.num_experts:
+        frac = cfg.experts_per_token / cfg.num_experts
+        active = total - expert * (1.0 - frac)
+    return {"n_params": float(total), "n_active": float(active)}
+
+
+def build_cell(arch: str, shape_name: str, multi_pod: bool,
+               microbatches: int = 8, dp_over_model: bool | None = None):
+    cfg = get_arch(arch)
+    shape = SHAPES[shape_name]
+    api = get_model(cfg)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    from repro.distributed.sharding import set_dp_over_model
+    set_dp_over_model(
+        cfg.dp_over_model if dp_over_model is None else dp_over_model
+    )
+
+    abstract_params = jax.eval_shape(api.init, jax.random.PRNGKey(0))
+    psh = param_shardings(abstract_params, cfg, mesh)
+
+    spec = api.batch_spec(shape)
+    abstract_batch = {
+        k: jax.ShapeDtypeStruct(s, dt) for k, (s, dt) in spec.items()
+    }
+
+    if shape.kind == "train":
+        abstract_opt = jax.eval_shape(adamw_init, abstract_params)
+        osh = opt_state_shardings(abstract_opt, cfg, mesh)
+        bsh = batch_shardings(abstract_batch, mesh)
+        # grad accumulation: 8 microbatches keeps layer-boundary
+        # activations (L x B_ub x S x D) inside v5e HBM at 4k train
+        accum = os.environ.get("LIX_ACCUM_DTYPE", "float32")
+        step = make_train_step(
+            api.loss, OptimizerConfig(), microbatches=microbatches,
+            accum_dtype=jnp.bfloat16 if accum == "bfloat16" else jnp.float32,
+        )
+        fn = jax.jit(
+            step,
+            in_shardings=(psh, osh, bsh),
+            out_shardings=(psh, osh, None),
+            donate_argnums=(0, 1),
+        )
+        args = (abstract_params, abstract_opt, abstract_batch)
+    elif shape.kind == "prefill":
+        bsh = batch_shardings(abstract_batch, mesh)
+        fn = jax.jit(api.prefill, in_shardings=(psh, bsh))
+        args = (abstract_params, abstract_batch)
+    else:  # decode
+        abstract_cache = jax.eval_shape(
+            lambda: api.init_cache(shape.global_batch, shape.seq_len)
+        )
+        csh = cache_shardings(
+            abstract_cache, cfg, mesh, batch_size=shape.global_batch
+        )
+        tok = abstract_batch["token"]
+        tsh = batch_shardings({"token": tok}, mesh)["token"]
+        fn = jax.jit(
+            api.decode,
+            in_shardings=(psh, csh, tsh),
+            out_shardings=(None, csh),
+            donate_argnums=(1,),
+        )
+        args = (abstract_params, abstract_cache, tok)
+
+    with mesh:
+        lowered = fn.lower(*args)
+        compiled = lowered.compile()
+    return cfg, mesh, abstract_params, compiled
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str) -> Dict:
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    cell_id = f"{arch}__{shape_name}__{mesh_name}"
+    path = os.path.join(out_dir, cell_id + ".json")
+    cfg = get_arch(arch)
+    shape = SHAPES[shape_name]
+    ok, reason = shape_supported(cfg, shape)
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "kind": shape.kind, "seq_len": shape.seq_len,
+        "global_batch": shape.global_batch,
+        "num_devices": 512 if multi_pod else 256,
+    }
+    if not ok:
+        rec["status"] = "skipped"
+        rec["reason"] = reason
+        _write(path, rec)
+        print(f"[dryrun] {cell_id}: SKIPPED ({reason})")
+        return rec
+
+    t0 = time.time()
+    try:
+        cfg, mesh, abstract_params, compiled = build_cell(
+            arch, shape_name, multi_pod
+        )
+        mem = compiled.memory_analysis()
+        ca = compiled.cost_analysis() or {}
+        hlo = compiled.as_text()
+        from benchmarks.hlo_analysis import summarize
+
+        analysis = summarize(hlo)
+        rec.update(
+            status="ok",
+            compile_s=round(time.time() - t0, 1),
+            memory={
+                "argument_bytes": mem.argument_size_in_bytes,
+                "output_bytes": mem.output_size_in_bytes,
+                "temp_bytes": mem.temp_size_in_bytes,
+                "alias_bytes": mem.alias_size_in_bytes,
+                "code_bytes": mem.generated_code_size_in_bytes,
+            },
+            xla_cost={
+                "flops_1trip": float(ca.get("flops", -1)),
+                "bytes_1trip": float(ca.get("bytes accessed", -1)),
+                "transcendentals_1trip": float(ca.get("transcendentals", -1)),
+            },
+            hlo_analysis=analysis,
+            params=count_params(abstract_params, cfg),
+        )
+        print(
+            f"[dryrun] {cell_id}: OK compile={rec['compile_s']}s "
+            f"temp={mem.temp_size_in_bytes/2**30:.2f}GiB/dev "
+            f"flops/dev={analysis['flops']:.3e} "
+            f"coll/dev={analysis['coll_bytes']/2**20:.1f}MiB"
+        )
+    except Exception as e:  # record the failure, keep sweeping
+        rec["status"] = "failed"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+        print(f"[dryrun] {cell_id}: FAILED {rec['error'][:200]}")
+    _write(path, rec)
+    return rec
+
+
+def _write(path: str, rec: Dict) -> None:
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1, default=str)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all", help="arch id or 'all'")
+    ap.add_argument("--shape", default="all", choices=["all", *SHAPES])
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--subprocess", action="store_true",
+                    help="run each cell in a fresh subprocess")
+    args = ap.parse_args()
+
+    archs = list(ARCHS) if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    cells = [(a, s, m) for a in archs for s in shapes for m in meshes]
+    multi = len(cells) > 1
+    for a, s, m in cells:
+        mesh_name = "2x16x16" if m else "16x16"
+        path = os.path.join(args.out, f"{a}__{s}__{mesh_name}.json")
+        if args.skip_existing and os.path.exists(path):
+            with open(path) as f:
+                if json.load(f).get("status") in ("ok", "skipped"):
+                    print(f"[dryrun] {a}__{s}__{mesh_name}: cached")
+                    continue
+        if args.subprocess and multi:
+            cmd = [
+                sys.executable, "-m", "repro.launch.dryrun",
+                "--arch", a, "--shape", s,
+                "--mesh", "multi" if m else "single", "--out", args.out,
+            ]
+            subprocess.run(cmd, check=False)
+        else:
+            run_cell(a, s, m, args.out)
+
+
+if __name__ == "__main__":
+    main()

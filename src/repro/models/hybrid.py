@@ -1,0 +1,237 @@
+"""Jamba-style hybrid: (7 Mamba : 1 attention) superblocks with MoE.
+
+One superblock = 8 layers; positions 0-6 are Mamba mixers, position 7
+is GQA attention.  FFN alternates MoE (even positions, 16e top-2) and
+dense SwiGLU (odd).  The 8 positions are unrolled inside the scanned
+superblock (compact HLO: 8 layers of code, 9 superblocks of scan).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_lib
+from repro.models import layers as L
+from repro.models import mamba as M
+from repro.models import moe as moe_lib
+from repro.models import transformer as T
+
+
+def _n_super(cfg) -> int:
+    assert cfg.num_layers % cfg.attn_period == 0
+    return cfg.num_layers // cfg.attn_period
+
+
+def _init_ffn(cfg, key, moe: bool) -> Dict[str, jax.Array]:
+    dt = L.dtype_of(cfg.dtype)
+    d, f = cfg.d_model, (cfg.moe_d_ff or cfg.d_ff)
+    ks = jax.random.split(key, 4)
+    if moe:
+        e = cfg.num_experts
+        return {
+            "router": moe_lib.moe_router_init(ks[0], d, e, dt),
+            "we_gate": jax.vmap(lambda k: L.init_dense(k, d, f, dt))(
+                jax.random.split(ks[1], e)
+            ),
+            "we_up": jax.vmap(lambda k: L.init_dense(k, d, f, dt))(
+                jax.random.split(ks[2], e)
+            ),
+            "we_down": jax.vmap(lambda k: L.init_dense(k, f, d, dt))(
+                jax.random.split(ks[3], e)
+            ),
+            "ln2": jnp.ones((d,), dt),
+        }
+    return {
+        "w_gate": L.init_dense(ks[0], d, cfg.d_ff, dt),
+        "w_up": L.init_dense(ks[1], d, cfg.d_ff, dt),
+        "w_down": L.init_dense(ks[2], cfg.d_ff, d, dt),
+        "ln2": jnp.ones((d,), dt),
+    }
+
+
+def _init_attn(cfg, key) -> Dict[str, jax.Array]:
+    dt = L.dtype_of(cfg.dtype)
+    hd = cfg.head_dim or cfg.d_model // cfg.num_heads
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    return {
+        "ln1": jnp.ones((d,), dt),
+        "wq": L.init_dense(ks[0], d, cfg.num_heads * hd, dt),
+        "wk": L.init_dense(ks[1], d, cfg.num_kv_heads * hd, dt),
+        "wv": L.init_dense(ks[2], d, cfg.num_kv_heads * hd, dt),
+        "wo": L.init_dense(ks[3], cfg.num_heads * hd, d, dt),
+    }
+
+
+def init_superblock(cfg, key) -> Dict[str, Any]:
+    per = cfg.attn_period
+    ks = jax.random.split(key, 2 * per + 1)
+    p: Dict[str, Any] = {}
+    for i in range(per):
+        if i < per - 1:
+            p[f"mix{i}"] = M.init_mamba_params(cfg, ks[2 * i])
+        else:
+            p[f"mix{i}"] = _init_attn(cfg, ks[2 * i])
+        p[f"ffn{i}"] = _init_ffn(cfg, ks[2 * i + 1], moe=(i % cfg.moe_every == 0))
+    return p
+
+
+def init_params(cfg, key) -> Dict[str, Any]:
+    dt = L.dtype_of(cfg.dtype)
+    ns = _n_super(cfg)
+    k_emb, k_blocks = jax.random.split(key)
+    blocks = jax.vmap(lambda k: init_superblock(cfg, k))(
+        jax.random.split(k_blocks, ns)
+    )
+    return {
+        "embed": (
+            jax.random.normal(k_emb, (cfg.padded_vocab, cfg.d_model), jnp.float32)
+            * 0.02
+        ).astype(dt),
+        "blocks": blocks,
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+    }
+
+
+def _ffn_apply(cfg, p, x, moe: bool):
+    h = L.rmsnorm(x, p["ln2"])
+    if moe:
+        y, aux = moe_lib.moe_ffn(
+            h, p["router"], p["we_gate"], p["we_up"], p["we_down"],
+            experts_per_token=cfg.experts_per_token,
+            capacity_factor=cfg.capacity_factor,
+            dispatch=cfg.moe_dispatch,
+        )
+        return x + y, aux["moe_aux_loss"]
+    return x + L.swiglu(h, p["w_gate"], p["w_up"], p["w_down"]), jnp.float32(0)
+
+
+def superblock_train(cfg, p, x, positions):
+    """Per-LAYER remat inside the superblock: the backward pass holds one
+    layer's internals at a time (mamba chunk states are further rematted
+    inside mamba_train)."""
+    per = cfg.attn_period
+    aux_total = jnp.float32(0)
+
+    def layer(i, pp, h):
+        if i < per - 1:
+            h = M.mamba_train(cfg, pp[f"mix{i}"], h)
+        else:
+            h, _ = T._attn_train(cfg, pp[f"mix{i}"], h, positions)
+        h, aux = _ffn_apply(cfg, pp[f"ffn{i}"], h, moe=(i % cfg.moe_every == 0))
+        return h, aux
+
+    for i in range(per):
+        fn = functools.partial(layer, i)
+        if cfg.remat:
+            fn = jax.checkpoint(
+                fn, policy=jax.checkpoint_policies.nothing_saveable,
+                static_argnums=(),
+            )
+        x, aux = fn(p, x)
+        aux_total += aux
+    return x, aux_total
+
+
+def forward_train(cfg, params, tokens) -> Tuple[jax.Array, jax.Array]:
+    x = L.embed(tokens, params["embed"])
+    positions = jnp.arange(tokens.shape[1])
+    block = functools.partial(superblock_train, cfg)
+
+    def scan_fn(h, p):
+        h = L.pin_dp(h)
+        h, aux = block(p, h, positions)
+        return h, aux
+
+    x, auxes = jax.lax.scan(scan_fn, x, params["blocks"])
+    x = L.rmsnorm(x, params["final_norm"])
+    return L.logits_from_hidden(x, params["embed"]), jnp.sum(auxes)
+
+
+def loss_fn(cfg, params, batch):
+    logits, aux = forward_train(cfg, params, batch["tokens"])
+    loss, metrics = L.cross_entropy(logits, batch["labels"], batch.get("mask"))
+    metrics["aux"] = aux
+    return loss + cfg.moe_aux_weight * aux, metrics
+
+
+# ---------------------------------------------------------------------------
+# Decode: mamba states (O(1)) + KV cache only for the attention layers
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch: int, max_len: int):
+    ns = _n_super(cfg)
+    nm = cfg.attn_period - 1
+    dt = L.dtype_of(cfg.dtype)
+    hd = cfg.head_dim or cfg.d_model // cfg.num_heads
+    mstate = M.init_mamba_state(cfg, batch)
+    stack = lambda tree, k: jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (k, *a.shape)), tree
+    )
+    return {
+        "mamba": stack(stack(mstate, nm), ns),
+        "k": jnp.zeros((ns, batch, cfg.num_kv_heads, max_len, hd), dt),
+        "v": jnp.zeros((ns, batch, cfg.num_kv_heads, max_len, hd), dt),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def decode_step(cfg, params, cache, token):
+    pos = cache["len"]
+    x = L.embed(token[:, None], params["embed"])
+    per = cfg.attn_period
+
+    def super_fn(h, xs):
+        h = L.pin_dp(h)
+        p, mstates, kc, vc = xs
+        new_m = []
+        for i in range(per):
+            if i < per - 1:
+                st = jax.tree.map(lambda a, i=i: a[i], mstates)
+                h, st2 = M.mamba_decode(cfg, p[f"mix{i}"], h, st)
+                new_m.append(st2)
+            else:
+                h, kc, vc = T.block_decode_attn_only(cfg, p[f"mix{i}"], h, kc, vc, pos)
+            h, _ = _ffn_apply(cfg, p[f"ffn{i}"], h, moe=(i % cfg.moe_every == 0))
+        m_stacked = jax.tree.map(lambda *a: jnp.stack(a), *new_m)
+        return h, (m_stacked, kc, vc)
+
+    x, (m2, k2, v2) = jax.lax.scan(
+        super_fn, x, (params["blocks"], cache["mamba"], cache["k"], cache["v"])
+    )
+    x = L.rmsnorm(x[:, 0], params["final_norm"])
+    logits = L.logits_from_hidden(x, params["embed"])
+    return logits, {"mamba": m2, "k": k2, "v": v2, "len": pos + 1}
+
+
+def prefill(cfg, params, tokens):
+    """Parallel hybrid prefill: train-style forward collecting the final
+    mamba state per SSM layer and the full KV of each attention layer."""
+    b, s = tokens.shape
+    x = L.embed(tokens, params["embed"])
+    positions = jnp.arange(s)
+    per = cfg.attn_period
+
+    def super_fn(h, p):
+        h = L.pin_dp(h)
+        new_m = []
+        kv = None
+        for i in range(per):
+            if i < per - 1:
+                h, st = M.mamba_train(cfg, p[f"mix{i}"], h, return_state=True)
+                new_m.append(st)
+            else:
+                h, kv = T._attn_train(cfg, p[f"mix{i}"], h, positions)
+            h, _ = _ffn_apply(cfg, p[f"ffn{i}"], h, moe=(i % cfg.moe_every == 0))
+        m_stacked = jax.tree.map(lambda *a: jnp.stack(a), *new_m)
+        return h, (m_stacked, kv[0], kv[1])
+
+    x, (m_all, ks, vs) = jax.lax.scan(super_fn, x, params["blocks"])
+    x = L.rmsnorm(x[:, -1], params["final_norm"])
+    logits = L.logits_from_hidden(x, params["embed"])
+    cache = {"mamba": m_all, "k": ks, "v": vs, "len": jnp.int32(s)}
+    return logits, cache

@@ -1,0 +1,138 @@
+"""Shared neural-net layers: norms, RoPE, SwiGLU, embeddings, losses.
+
+Everything is a pure function over explicit param pytrees (no flax) so
+that stacking params for scan-over-layers and attaching NamedShardings
+stays trivial.  Initializers return numpy-free jnp arrays; abstract
+init goes through jax.eval_shape.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[name]
+
+
+def remat_policy_of(cfg):
+    """Resolve the ArchConfig remat_policy to a jax checkpoint policy."""
+    if cfg.remat_policy == "block_io":
+        return jax.checkpoint_policies.save_only_these_names(
+            "attn_out", "ffn_out"
+        )
+    return jax.checkpoint_policies.nothing_saveable
+
+
+def name_ckpt(x: jax.Array, name: str) -> jax.Array:
+    from jax.ad_checkpoint import checkpoint_name
+
+    return checkpoint_name(x, name)
+
+
+def pin_dp(x: jax.Array) -> jax.Array:
+    """Pin the batch dim of an activation to the data-parallel mesh axes.
+
+    Scan-over-layers carries are where GSPMD propagation can drop the
+    batch sharding in favour of a hidden-dim sharding (observed: 16x
+    activation replication on the jamba train cell).  Calling this at
+    the top of every layer-scan body makes the intended layout explicit.
+    No-op when no mesh is active (single-device tests)."""
+    from repro.distributed.sharding import maybe_constrain
+
+    return maybe_constrain(x, "dp", *([None] * (x.ndim - 1)))
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps)).astype(dt) * scale
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, D); positions: (S,) or broadcastable to x's S dim."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (D/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (S, D/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    cos = cos.astype(x.dtype)
+    sin = sin.astype(x.dtype)
+    o1 = x1 * cos - x2 * sin
+    o2 = x2 * cos + x1 * sin
+    out = jnp.stack([o1, o2], axis=-1).reshape(x.shape)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Dense / SwiGLU
+# ---------------------------------------------------------------------------
+
+def init_dense(key, in_dim: int, out_dim: int, dtype) -> jax.Array:
+    scale = 1.0 / np.sqrt(in_dim)
+    return (jax.random.normal(key, (in_dim, out_dim), jnp.float32) * scale).astype(dtype)
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array) -> jax.Array:
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    return jnp.einsum("...f,fd->...d", jax.nn.silu(g) * u, w_down)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / logits / loss
+# ---------------------------------------------------------------------------
+
+def embed(tokens: jax.Array, table: jax.Array) -> jax.Array:
+    return jnp.take(table, tokens, axis=0)
+
+
+def logits_from_hidden(h: jax.Array, table: jax.Array) -> jax.Array:
+    """Tied output head: h (..., D) @ table^T (V, D) -> (..., V)."""
+    return jnp.einsum("...d,vd->...v", h, table)
+
+
+def cross_entropy(
+    logits: jax.Array, labels: jax.Array, mask: jax.Array | None = None,
+    z_loss: float = 1e-4,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Stable CE in fp32 with optional z-loss; mean over masked tokens.
+
+    Written to stay efficient when the vocab dim is TP-sharded: the max
+    and sum reductions become small (B, S) all-reduces under GSPMD, and
+    the label log-prob uses a one-hot contraction instead of
+    take_along_axis (which would all-gather the full logits)."""
+    lf = logits.astype(jnp.float32)
+    mx = jax.lax.stop_gradient(jnp.max(lf, axis=-1, keepdims=True))
+    sumexp = jnp.sum(jnp.exp(lf - mx), axis=-1)
+    lse = jnp.log(sumexp) + mx[..., 0]
+    onehot = jax.nn.one_hot(labels, lf.shape[-1], dtype=lf.dtype)
+    ll = jnp.sum(lf * onehot, axis=-1)
+    nll = lse - ll
+    per_tok = nll + z_loss * lse**2
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    m = mask.astype(jnp.float32)
+    denom = jnp.maximum(m.sum(), 1.0)
+    loss = (per_tok * m).sum() / denom
+    metrics = {"loss": loss, "nll": (nll * m).sum() / denom}
+    return loss, metrics

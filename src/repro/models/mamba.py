@@ -1,0 +1,156 @@
+"""Mamba (selective SSM) block — the sub-quadratic half of Jamba.
+
+Training runs the selective scan as a chunk-boundary lax.scan (state
+only crosses chunk boundaries; within-chunk work recomputes under
+remat), keeping activation memory linear in chunk size rather than
+sequence length.  Decode is a single-step state update: O(1) per token
+in sequence length — the reason jamba runs `long_500k`.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+
+
+def init_mamba_params(cfg, key) -> Dict[str, jax.Array]:
+    dt = L.dtype_of(cfg.dtype)
+    d = cfg.d_model
+    di = cfg.mamba_d_inner or 2 * d
+    ds = cfg.mamba_d_state
+    conv = cfg.mamba_d_conv
+    ks = jax.random.split(key, 8)
+    # S4D-real initialization for A
+    a_log = jnp.log(jnp.broadcast_to(jnp.arange(1, ds + 1, dtype=jnp.float32), (di, ds)))
+    return {
+        "ln": jnp.ones((d,), dt),
+        "in_proj": L.init_dense(ks[0], d, 2 * di, dt),
+        "conv_w": (jax.random.normal(ks[1], (conv, di), jnp.float32) * 0.1).astype(dt),
+        "conv_b": jnp.zeros((di,), dt),
+        "w_bcdt": L.init_dense(ks[2], di, 2 * ds + cfg.dt_rank, dt),
+        "w_dt": L.init_dense(ks[3], cfg.dt_rank, di, dt),
+        "dt_bias": jnp.zeros((di,), jnp.float32)
+        + jnp.log(jnp.expm1(jnp.float32(0.01))),
+        "a_log": a_log,                       # (di, ds) fp32
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "out_proj": L.init_dense(ks[4], di, d, dt),
+    }
+
+
+def mamba_train(cfg, p, x, *, chunk: int = 256, return_state: bool = False):
+    """x (B, S, D) -> (B, S, D). Chunked selective scan.
+
+    Memory discipline: the (B, S, di, ds) discretized tensors a_bar/bx
+    are NEVER materialized over the full sequence — they are computed
+    inside the (rematted) per-chunk scan body, so the live set is one
+    chunk's worth plus the (nch, B, di, ds) boundary states.  The
+    backward pass recomputes each chunk from its boundary (the standard
+    SSM chunkwise training trade).
+
+    With return_state=True also returns the final recurrent state
+    (parallel prefill for serving)."""
+    b, s, d = x.shape
+    di = cfg.mamba_d_inner or 2 * d
+    ds = cfg.mamba_d_state
+    h = L.rmsnorm(x, p["ln"])
+    xz = h @ p["in_proj"]
+    xi, z = jnp.split(xz, 2, axis=-1)                     # (B, S, di)
+
+    # causal depthwise conv over time
+    conv = cfg.mamba_d_conv
+    xpad = jnp.pad(xi, ((0, 0), (conv - 1, 0), (0, 0)))
+    xc = sum(
+        xpad[:, i : i + s] * p["conv_w"][i][None, None, :] for i in range(conv)
+    ) + p["conv_b"]
+    xc = jax.nn.silu(xc)
+
+    bcdt = xc @ p["w_bcdt"]
+    bmat, cmat, dt_low = jnp.split(bcdt, [ds, 2 * ds], axis=-1)
+    dt = jax.nn.softplus(
+        (dt_low @ p["w_dt"]).astype(jnp.float32) + p["dt_bias"]
+    )                                                     # (B, S, di)
+    a = -jnp.exp(p["a_log"])                              # (di, ds)
+    xcf = xc.astype(jnp.float32)
+    bf = bmat.astype(jnp.float32)
+    cf = cmat.astype(jnp.float32)
+
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+    nch = s // chunk
+    to_chunks = lambda t: t.reshape(b, nch, chunk, *t.shape[2:]).transpose(
+        1, 2, 0, *range(3, t.ndim + 1)
+    )
+    xs = (to_chunks(dt), to_chunks(xcf), to_chunks(bf), to_chunks(cf))
+
+    def chunk_fn(h0, inp):
+        dtc, xcc, bc, cc = inp                            # (chunk, B, ...)
+
+        def step(hh, t):
+            dtt, xct, bt, ct = t
+            a_bar = jnp.exp(dtt[..., None] * a[None])     # (B, di, ds)
+            bx = (dtt * xct)[..., None] * bt[:, None, :]
+            hh = a_bar * hh + bx
+            yt = jnp.einsum("bdn,bn->bd", hh, ct)
+            return hh, yt
+
+        return jax.lax.scan(step, h0, (dtc, xcc, bc, cc))
+
+    if cfg.remat:
+        chunk_fn = jax.checkpoint(
+            chunk_fn, policy=jax.checkpoint_policies.nothing_saveable
+        )
+    h0 = jnp.zeros((b, di, ds), jnp.float32)
+    h_final, ys = jax.lax.scan(chunk_fn, h0, xs)          # ys (nch, chunk, B, di)
+    y = ys.transpose(2, 0, 1, 3).reshape(b, s, di)
+    y = y + p["d_skip"] * xcf
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = x + y @ p["out_proj"]
+    if return_state:
+        state = {"h": h_final, "conv": xi[:, s - (conv - 1):, :]}
+        return out, state
+    return out
+
+
+def init_mamba_state(cfg, batch: int):
+    di = cfg.mamba_d_inner or 2 * cfg.d_model
+    return {
+        "h": jnp.zeros((batch, di, cfg.mamba_d_state), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.mamba_d_conv - 1, di), L.dtype_of(cfg.dtype)),
+    }
+
+
+def mamba_decode(cfg, p, x, state) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """x (B, 1, D), O(1) state update."""
+    b = x.shape[0]
+    ds = cfg.mamba_d_state
+    h = L.rmsnorm(x, p["ln"])
+    xz = h @ p["in_proj"]
+    xi, z = jnp.split(xz, 2, axis=-1)                     # (B, 1, di)
+    xi1 = xi[:, 0]
+
+    hist = jnp.concatenate([state["conv"], xi], axis=1)   # (B, conv, di)
+    xc = jnp.einsum("bcd,cd->bd", hist, p["conv_w"]) + p["conv_b"]
+    xc = jax.nn.silu(xc)
+    new_conv = hist[:, 1:]
+
+    bcdt = xc @ p["w_bcdt"]
+    bmat, cmat, dt_low = jnp.split(bcdt, [ds, 2 * ds], axis=-1)
+    dt = jax.nn.softplus(
+        (dt_low @ p["w_dt"]).astype(jnp.float32) + p["dt_bias"]
+    )                                                     # (B, di)
+    a = -jnp.exp(p["a_log"])
+    a_bar = jnp.exp(dt[..., None] * a[None])              # (B, di, ds)
+    bx = (dt * xc.astype(jnp.float32))[..., None] * bmat.astype(jnp.float32)[
+        :, None, :
+    ]
+    hnew = a_bar * state["h"] + bx
+    y = jnp.einsum("bdn,bn->bd", hnew, cmat.astype(jnp.float32))
+    y = y + p["d_skip"] * xc.astype(jnp.float32)
+    y = y.astype(x.dtype)[:, None] * jax.nn.silu(z)
+    out = x + y @ p["out_proj"]
+    return out, {"h": hnew, "conv": new_conv}

@@ -1,0 +1,140 @@
+"""Uniform model API over all architecture families.
+
+`get_model(cfg)` returns a `ModelAPI` whose members are cfg-bound pure
+functions — the single surface that train/serve/dryrun code touches.
+`batch_spec(shape)` declares the exact input pytree for each shape so
+`input_specs()` can build ShapeDtypeStructs without family-specific
+knowledge leaking upward.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict
+
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import encdec, hybrid, transformer, vlm, xlstm_model
+
+# source frames for enc-dec decode shapes (~2 min of audio at 50 fps)
+ENCDEC_DECODE_SRC_LEN = 3072
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelAPI:
+    cfg: ArchConfig
+    init: Callable                  # key -> params
+    loss: Callable                  # (params, batch) -> (loss, metrics)
+    prefill: Callable               # (params, batch) -> (logits, cache)
+    decode: Callable                # (params, cache, token) -> (logits, cache)
+    init_cache: Callable            # (batch, max_len) -> cache
+    batch_spec: Callable            # ShapeConfig -> {name: (shape, dtype)}
+
+
+def _lm_batch_spec(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        return {
+            "tokens": ((b, s), jnp.int32),
+            "labels": ((b, s), jnp.int32),
+        }
+    if shape.kind == "prefill":
+        return {"tokens": ((b, s), jnp.int32)}
+    return {"token": ((b,), jnp.int32)}  # decode
+
+
+def _vlm_batch_spec(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    ti, f = cfg.frontend_tokens, cfg.frontend_dim
+    st = s - ti
+    if shape.kind == "train":
+        return {
+            "tokens": ((b, st), jnp.int32),
+            "patches": ((b, ti, f), jnp.bfloat16),
+            "labels": ((b, st), jnp.int32),
+        }
+    if shape.kind == "prefill":
+        return {
+            "tokens": ((b, st), jnp.int32),
+            "patches": ((b, ti, f), jnp.bfloat16),
+        }
+    return {"token": ((b,), jnp.int32)}
+
+
+def _audio_batch_spec(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    f = cfg.frontend_dim
+    if shape.kind == "train":
+        src, tgt = s // 2, s // 2
+        return {
+            "frames": ((b, src, f), jnp.bfloat16),
+            "tokens": ((b, tgt), jnp.int32),
+            "labels": ((b, tgt), jnp.int32),
+        }
+    if shape.kind == "prefill":
+        return {
+            "frames": ((b, s // 2, f), jnp.bfloat16),
+            "tokens": ((b, s // 2), jnp.int32),
+        }
+    return {"token": ((b,), jnp.int32)}
+
+
+def get_model(cfg: ArchConfig) -> ModelAPI:
+    if cfg.family in ("dense", "moe"):
+        mod = transformer
+        return ModelAPI(
+            cfg=cfg,
+            init=functools.partial(mod.init_params, cfg),
+            loss=functools.partial(mod.loss_fn, cfg),
+            prefill=lambda p, b: mod.prefill(cfg, p, b["tokens"]),
+            decode=functools.partial(mod.decode_step, cfg),
+            init_cache=functools.partial(mod.init_cache, cfg),
+            batch_spec=functools.partial(_lm_batch_spec, cfg),
+        )
+    if cfg.family == "ssm":
+        mod = xlstm_model
+        return ModelAPI(
+            cfg=cfg,
+            init=functools.partial(mod.init_params, cfg),
+            loss=functools.partial(mod.loss_fn, cfg),
+            prefill=lambda p, b: mod.prefill(cfg, p, b["tokens"]),
+            decode=functools.partial(mod.decode_step, cfg),
+            init_cache=functools.partial(mod.init_cache, cfg),
+            batch_spec=functools.partial(_lm_batch_spec, cfg),
+        )
+    if cfg.family == "hybrid":
+        mod = hybrid
+        return ModelAPI(
+            cfg=cfg,
+            init=functools.partial(mod.init_params, cfg),
+            loss=functools.partial(mod.loss_fn, cfg),
+            prefill=lambda p, b: mod.prefill(cfg, p, b["tokens"]),
+            decode=functools.partial(mod.decode_step, cfg),
+            init_cache=functools.partial(mod.init_cache, cfg),
+            batch_spec=functools.partial(_lm_batch_spec, cfg),
+        )
+    if cfg.family == "vlm":
+        return ModelAPI(
+            cfg=cfg,
+            init=functools.partial(vlm.init_params, cfg),
+            loss=functools.partial(vlm.loss_fn, cfg),
+            prefill=lambda p, b: vlm.prefill(cfg, p, b["tokens"], b["patches"]),
+            decode=functools.partial(vlm.decode_step, cfg),
+            init_cache=functools.partial(vlm.init_cache, cfg),
+            batch_spec=functools.partial(_vlm_batch_spec, cfg),
+        )
+    if cfg.family == "audio":
+        return ModelAPI(
+            cfg=cfg,
+            init=functools.partial(encdec.init_params, cfg),
+            loss=functools.partial(encdec.loss_fn, cfg),
+            prefill=lambda p, b: encdec.prefill(cfg, p, b["frames"], b["tokens"]),
+            decode=functools.partial(encdec.decode_step, cfg),
+            init_cache=lambda b, s: encdec.init_cache(
+                cfg, b, s, ENCDEC_DECODE_SRC_LEN
+            ),
+            batch_spec=functools.partial(_audio_batch_spec, cfg),
+        )
+    raise ValueError(f"unknown family: {cfg.family}")

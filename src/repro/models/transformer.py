@@ -1,0 +1,246 @@
+"""Decoder-only transformer (dense GQA or MoE FFN), scan-over-layers.
+
+Covers yi-6b/9b, mistral-large/nemo, olmoe, moonshot and the backbone
+of llava.  Params are plain dict pytrees with the layer dimension
+stacked in front (scan-over-layers keeps the HLO compact regardless of
+depth and lets XLA latency-hide the per-layer collectives).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_lib
+from repro.models import layers as L
+from repro.models import moe as moe_lib
+
+
+def _head_dim(cfg) -> int:
+    return cfg.head_dim or cfg.d_model // cfg.num_heads
+
+
+def init_block_params(cfg, key) -> Dict[str, jax.Array]:
+    """One layer's params; callers vmap this over layer keys to stack."""
+    dt = L.dtype_of(cfg.dtype)
+    hd = _head_dim(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 10)
+    p = {
+        "ln1": jnp.ones((d,), dt),
+        "ln2": jnp.ones((d,), dt),
+        "wq": L.init_dense(ks[0], d, cfg.num_heads * hd, dt),
+        "wk": L.init_dense(ks[1], d, cfg.num_kv_heads * hd, dt),
+        "wv": L.init_dense(ks[2], d, cfg.num_kv_heads * hd, dt),
+        "wo": L.init_dense(ks[3], cfg.num_heads * hd, d, dt),
+    }
+    if cfg.num_experts:
+        f = cfg.moe_d_ff or cfg.d_ff
+        e = cfg.num_experts
+        p["router"] = moe_lib.moe_router_init(ks[4], d, e, dt)
+        p["we_gate"] = jax.vmap(
+            lambda k: L.init_dense(k, d, f, dt)
+        )(jax.random.split(ks[5], e))
+        p["we_up"] = jax.vmap(
+            lambda k: L.init_dense(k, d, f, dt)
+        )(jax.random.split(ks[6], e))
+        p["we_down"] = jax.vmap(
+            lambda k: L.init_dense(k, f, d, dt)
+        )(jax.random.split(ks[7], e))
+    else:
+        p["w_gate"] = L.init_dense(ks[4], d, cfg.d_ff, dt)
+        p["w_up"] = L.init_dense(ks[5], d, cfg.d_ff, dt)
+        p["w_down"] = L.init_dense(ks[6], cfg.d_ff, d, dt)
+    return p
+
+
+def init_params(cfg, key) -> Dict[str, Any]:
+    dt = L.dtype_of(cfg.dtype)
+    k_emb, k_blocks, k_out = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_blocks, cfg.num_layers)
+    blocks = jax.vmap(lambda k: init_block_params(cfg, k))(layer_keys)
+    params = {
+        "embed": (
+            jax.random.normal(k_emb, (cfg.padded_vocab, cfg.d_model), jnp.float32)
+            * 0.02
+        ).astype(dt),
+        "blocks": blocks,
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+    }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+def _attn_train(cfg, p, x, positions):
+    hd = _head_dim(cfg)
+    b, s, _ = x.shape
+    h = L.rmsnorm(x, p["ln1"])
+    q = (h @ p["wq"]).reshape(b, s, cfg.num_heads, hd).transpose(0, 2, 1, 3)
+    k = (h @ p["wk"]).reshape(b, s, cfg.num_kv_heads, hd).transpose(0, 2, 1, 3)
+    v = (h @ p["wv"]).reshape(b, s, cfg.num_kv_heads, hd).transpose(0, 2, 1, 3)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    o = attn_lib.chunked_attention(q, k, v, causal=True, chunk=cfg.attn_chunk)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, -1)
+    out = L.name_ckpt(x + o @ p["wo"], "attn_out")
+    return out, (k, v)
+
+
+def _ffn(cfg, p, x):
+    h = L.rmsnorm(x, p["ln2"])
+    if cfg.num_experts:
+        y, aux = moe_lib.moe_ffn(
+            h, p["router"], p["we_gate"], p["we_up"], p["we_down"],
+            experts_per_token=cfg.experts_per_token,
+            capacity_factor=cfg.capacity_factor,
+            dispatch=cfg.moe_dispatch,
+        )
+        return L.name_ckpt(x + y, "ffn_out"), aux["moe_aux_loss"]
+    out = L.name_ckpt(
+        x + L.swiglu(h, p["w_gate"], p["w_up"], p["w_down"]), "ffn_out"
+    )
+    return out, jnp.float32(0)
+
+
+def block_train(cfg, p, x, positions):
+    x, _ = _attn_train(cfg, p, x, positions)
+    x, aux = _ffn(cfg, p, x)
+    return x, aux
+
+
+def forward_train(cfg, params, tokens) -> Tuple[jax.Array, jax.Array]:
+    """tokens (B, S) -> logits (B, S, V); also returns total moe aux loss."""
+    x = L.embed(tokens, params["embed"])
+    positions = jnp.arange(tokens.shape[1])
+
+    block = functools.partial(block_train, cfg)
+    if cfg.remat:
+        block = jax.checkpoint(block, policy=L.remat_policy_of(cfg))
+
+    def scan_fn(h, p):
+        h = L.pin_dp(h)
+        h, aux = block(p, h, positions)
+        return h, aux
+
+    x, auxes = jax.lax.scan(scan_fn, x, params["blocks"])
+    x = L.rmsnorm(x, params["final_norm"])
+    logits = L.logits_from_hidden(x, params["embed"])
+    return logits, jnp.sum(auxes)
+
+
+def loss_fn(cfg, params, batch) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    logits, aux = forward_train(cfg, params, batch["tokens"])
+    loss, metrics = L.cross_entropy(
+        logits, batch["labels"], batch.get("mask")
+    )
+    total = loss + cfg.moe_aux_weight * aux
+    metrics["aux"] = aux
+    return total, metrics
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + single-token decode over a static-size KV cache
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch: int, max_len: int):
+    dt = L.dtype_of(cfg.dtype)
+    hd = _head_dim(cfg)
+    shape = (cfg.num_layers, batch, cfg.num_kv_heads, max_len, hd)
+    return {
+        "k": jnp.zeros(shape, dt),
+        "v": jnp.zeros(shape, dt),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill(cfg, params, tokens) -> Tuple[jax.Array, Any]:
+    """tokens (B, S) -> (last-position logits (B, V), cache of len S)."""
+    x = L.embed(tokens, params["embed"])
+    positions = jnp.arange(tokens.shape[1])
+
+    def scan_fn(h, p):
+        h = L.pin_dp(h)
+        h2, kv = _attn_train(cfg, p, h, positions)
+        h3, _ = _ffn(cfg, p, h2)
+        return h3, kv
+
+    x, (ks, vs) = jax.lax.scan(scan_fn, x, params["blocks"])
+    x = L.rmsnorm(x[:, -1], params["final_norm"])
+    logits = L.logits_from_hidden(x, params["embed"])
+    cache = {"k": ks, "v": vs, "len": jnp.int32(tokens.shape[1])}
+    return logits, cache
+
+
+def block_decode(cfg, p, x, kc, vc, pos):
+    """x (B, 1, D); kc/vc (B, Hkv, S, hd). Returns (x', kc', vc')."""
+    hd = _head_dim(cfg)
+    b = x.shape[0]
+    h = L.rmsnorm(x, p["ln1"])
+    q = (h @ p["wq"]).reshape(b, 1, cfg.num_heads, hd).transpose(0, 2, 1, 3)
+    k = (h @ p["wk"]).reshape(b, 1, cfg.num_kv_heads, hd).transpose(0, 2, 1, 3)
+    v = (h @ p["wv"]).reshape(b, 1, cfg.num_kv_heads, hd).transpose(0, 2, 1, 3)
+    posv = jnp.full((1,), pos, jnp.int32)
+    q = L.apply_rope(q, posv, cfg.rope_theta)
+    k = L.apply_rope(k, posv, cfg.rope_theta)
+    kc, vc = attn_lib.update_kv_cache(kc, vc, k, v, pos)
+    o = attn_lib.decode_attention(q, kc, vc, pos + 1)
+    o = o.transpose(0, 2, 1, 3).reshape(b, 1, -1)
+    x = x + o @ p["wo"]
+    x, _ = _ffn(cfg, p, x)
+    return x, kc, vc
+
+
+def block_decode_attn_only(cfg, p, x, kc, vc, pos):
+    """Attention mixer without the FFN (hybrid archs attach their own)."""
+    hd = _head_dim(cfg)
+    b = x.shape[0]
+    h = L.rmsnorm(x, p["ln1"])
+    q = (h @ p["wq"]).reshape(b, 1, cfg.num_heads, hd).transpose(0, 2, 1, 3)
+    k = (h @ p["wk"]).reshape(b, 1, cfg.num_kv_heads, hd).transpose(0, 2, 1, 3)
+    v = (h @ p["wv"]).reshape(b, 1, cfg.num_kv_heads, hd).transpose(0, 2, 1, 3)
+    posv = jnp.full((1,), pos, jnp.int32)
+    q = L.apply_rope(q, posv, cfg.rope_theta)
+    k = L.apply_rope(k, posv, cfg.rope_theta)
+    kc, vc = attn_lib.update_kv_cache(kc, vc, k, v, pos)
+    o = attn_lib.decode_attention(q, kc, vc, pos + 1)
+    o = o.transpose(0, 2, 1, 3).reshape(b, 1, -1)
+    return x + o @ p["wo"], kc, vc
+
+
+def decode_step(cfg, params, cache, token) -> Tuple[jax.Array, Any]:
+    """token (B,) int32 -> (logits (B, V), updated cache).
+
+    The KV cache travels in the fori_loop CARRY and is updated in place
+    with dynamic_update_index — XLA aliases loop-carried buffers, so the
+    step holds ONE cache copy.  (The earlier scan-over-(xs=cache) form
+    emitted a fresh cache as ys: ~2x cache in temp, measured 24 GiB vs
+    12.9 GiB of actual KV on yi-9b decode_32k.)"""
+    pos = cache["len"]
+    x = L.embed(token[:, None], params["embed"])
+
+    def body(i, carry):
+        h, kc_all, vc_all = carry
+        h = L.pin_dp(h)
+        p = jax.tree.map(
+            lambda a: jax.lax.dynamic_index_in_dim(a, i, 0, keepdims=False),
+            params["blocks"],
+        )
+        kc = jax.lax.dynamic_index_in_dim(kc_all, i, 0, keepdims=False)
+        vc = jax.lax.dynamic_index_in_dim(vc_all, i, 0, keepdims=False)
+        h, kc, vc = block_decode(cfg, p, h, kc, vc, pos)
+        kc_all = jax.lax.dynamic_update_index_in_dim(kc_all, kc, i, 0)
+        vc_all = jax.lax.dynamic_update_index_in_dim(vc_all, vc, i, 0)
+        return h, kc_all, vc_all
+
+    x, ks, vs = jax.lax.fori_loop(
+        0, cfg.num_layers, body, (x, cache["k"], cache["v"])
+    )
+    x = L.rmsnorm(x[:, 0], params["final_norm"])
+    logits = L.logits_from_hidden(x, params["embed"])
+    return logits, {"k": ks, "v": vs, "len": pos + 1}

@@ -1,0 +1,89 @@
+"""VLM backbone (llava-next-mistral style): transformer + patch projector.
+
+The vision tower is a STUB per the assignment: input_specs feeds
+precomputed anyres patch embeddings (B, n_patches, frontend_dim); a
+two-layer MLP projector (the actual llava design) lifts them to
+d_model.  Sequence = [image tokens ; text tokens]; loss masks image
+positions.  Decode is the plain transformer path (images live in the
+prompt/prefill).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import transformer as T
+
+
+def init_params(cfg, key) -> Dict[str, Any]:
+    dt = L.dtype_of(cfg.dtype)
+    k_t, k_p1, k_p2 = jax.random.split(key, 3)
+    params = T.init_params(cfg, k_t)
+    params["proj_w1"] = L.init_dense(k_p1, cfg.frontend_dim, cfg.d_model, dt)
+    params["proj_b1"] = jnp.zeros((cfg.d_model,), dt)
+    params["proj_w2"] = L.init_dense(k_p2, cfg.d_model, cfg.d_model, dt)
+    params["proj_b2"] = jnp.zeros((cfg.d_model,), dt)
+    return params
+
+
+def _project(params, patches):
+    h = patches.astype(params["proj_w1"].dtype) @ params["proj_w1"] + params["proj_b1"]
+    return jax.nn.gelu(h) @ params["proj_w2"] + params["proj_b2"]
+
+
+def forward_train(cfg, params, tokens, patches) -> Tuple[jax.Array, jax.Array]:
+    """tokens (B, S_text); patches (B, T_img, F) -> logits over text part."""
+    img = _project(params, patches)                       # (B, T_img, D)
+    txt = L.embed(tokens, params["embed"])
+    x = jnp.concatenate([img, txt], axis=1)
+    positions = jnp.arange(x.shape[1])
+
+    import functools
+    block = functools.partial(T.block_train, cfg)
+    if cfg.remat:
+        block = jax.checkpoint(block, policy=jax.checkpoint_policies.nothing_saveable)
+
+    def scan_fn(h, p):
+        h = L.pin_dp(h)
+        h, aux = block(p, h, positions)
+        return h, aux
+
+    x, auxes = jax.lax.scan(scan_fn, x, params["blocks"])
+    x = L.rmsnorm(x, params["final_norm"])
+    logits = L.logits_from_hidden(x[:, patches.shape[1]:], params["embed"])
+    return logits, jnp.sum(auxes)
+
+
+def loss_fn(cfg, params, batch):
+    logits, aux = forward_train(cfg, params, batch["tokens"], batch["patches"])
+    loss, metrics = L.cross_entropy(logits, batch["labels"], batch.get("mask"))
+    metrics["aux"] = aux
+    return loss, metrics
+
+
+init_cache = T.init_cache
+decode_step = T.decode_step
+
+
+def prefill(cfg, params, tokens, patches):
+    """Prefill over [image ; text]: reuse the transformer prefill on the
+    concatenated embedding sequence."""
+    img = _project(params, patches)
+    txt = L.embed(tokens, params["embed"])
+    x = jnp.concatenate([img, txt], axis=1)
+    positions = jnp.arange(x.shape[1])
+
+    def scan_fn(h, p):
+        h = L.pin_dp(h)
+        h2, kv = T._attn_train(cfg, p, h, positions)
+        h3, _ = T._ffn(cfg, p, h2)
+        return h3, kv
+
+    x, (ks, vs) = jax.lax.scan(scan_fn, x, params["blocks"])
+    x = L.rmsnorm(x[:, -1], params["final_norm"])
+    logits = L.logits_from_hidden(x, params["embed"])
+    return logits, {"k": ks, "v": vs, "len": jnp.int32(x.shape[1])}

@@ -1,0 +1,221 @@
+"""xLSTM blocks (Beck et al. 2024): mLSTM (matrix memory) + sLSTM.
+
+The assigned xlstm-1.3b is 48 blocks in a 7:1 mLSTM:sLSTM interleave —
+we scan over 6 superblocks of (7 mLSTM + 1 sLSTM).  Both cells use
+exponential gating with the max-stabilizer m_t; mLSTM keeps a per-head
+(d_k × d_v) matrix state (constant-size → runs long_500k), sLSTM a
+scalar-per-unit state with a recurrent head-wise hidden connection.
+
+Training scans over time in chunks (state crosses boundaries; the rest
+recomputes under remat); decode is a single fused state update.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+def _dims(cfg):
+    d = cfg.d_model
+    h = cfg.num_heads
+    dv = (cfg.xlstm_proj_factor * d) // h     # value dim per head
+    dk = dv // 2                              # qk dim per head (0.5 factor)
+    return d, h, dk, dv
+
+
+def init_mlstm_params(cfg, key) -> Dict[str, jax.Array]:
+    dt = L.dtype_of(cfg.dtype)
+    d, h, dk, dv = _dims(cfg)
+    ks = jax.random.split(key, 8)
+    return {
+        "ln": jnp.ones((d,), dt),
+        "wq": L.init_dense(ks[0], d, h * dk, dt),
+        "wk": L.init_dense(ks[1], d, h * dk, dt),
+        "wv": L.init_dense(ks[2], d, h * dv, dt),
+        "wz": L.init_dense(ks[3], d, h * dv, dt),   # output gate path
+        "wi": L.init_dense(ks[4], d, h, dt),        # input gate (per head)
+        "wf": L.init_dense(ks[5], d, h, dt),        # forget gate (per head)
+        "wo": L.init_dense(ks[6], h * dv, d, dt),
+        "out_ln": jnp.ones((h * dv,), dt),
+    }
+
+
+def _mlstm_step(qt, kt, vt, it, ft, state):
+    """One timestep. qt/kt: (B,H,dk); vt: (B,H,dv); it/ft: (B,H)."""
+    c, n, m = state                           # (B,H,dk,dv), (B,H,dk), (B,H)
+    m_new = jnp.maximum(ft + m, it)
+    i = jnp.exp(it - m_new)
+    f = jnp.exp(ft + m - m_new)
+    c = f[..., None, None] * c + i[..., None, None] * (
+        kt[..., :, None] * vt[..., None, :]
+    )
+    n = f[..., None] * n + i[..., None] * kt
+    denom = jnp.maximum(
+        jnp.abs(jnp.einsum("bhk,bhk->bh", n, qt)), 1.0
+    )
+    ht = jnp.einsum("bhkv,bhk->bhv", c, qt) / denom[..., None]
+    return ht, (c, n, m_new)
+
+
+def mlstm_train(cfg, p, x, *, chunk: int = 256, return_state: bool = False):
+    """Chunkwise mLSTM: the (B, H, dk, dv) matrix state crosses chunk
+    boundaries; within-chunk steps recompute under remat, so backward
+    residuals are bounded by one chunk (the xLSTM chunkwise-parallel
+    training trade, sequential variant)."""
+    b, s, d = x.shape
+    _, h, dk, dv = _dims(cfg)
+    hin = L.rmsnorm(x, p["ln"])
+    q = (hin @ p["wq"]).reshape(b, s, h, dk).astype(jnp.float32)
+    k = (hin @ p["wk"]).reshape(b, s, h, dk).astype(jnp.float32) / jnp.sqrt(
+        jnp.float32(dk)
+    )
+    v = (hin @ p["wv"]).reshape(b, s, h, dv).astype(jnp.float32)
+    ig = (hin @ p["wi"]).astype(jnp.float32)              # (B,S,H) pre-act
+    fg = jax.nn.log_sigmoid((hin @ p["wf"]).astype(jnp.float32))
+
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+    nch = s // chunk
+    to_chunks = lambda t: t.reshape(b, nch, chunk, *t.shape[2:]).transpose(
+        1, 2, 0, *range(3, t.ndim + 1)
+    )
+    xs = tuple(to_chunks(t) for t in (q, k, v, ig, fg))
+
+    def chunk_fn(state, inp):
+        def step(st, t):
+            qt, kt, vt, it, ft = t
+            ht, st = _mlstm_step(qt, kt, vt, it, ft, st)
+            return st, ht
+
+        return jax.lax.scan(step, state, inp)
+
+    if cfg.remat:
+        chunk_fn = jax.checkpoint(
+            chunk_fn, policy=jax.checkpoint_policies.nothing_saveable
+        )
+    c0 = jnp.zeros((b, h, dk, dv), jnp.float32)
+    n0 = jnp.zeros((b, h, dk), jnp.float32)
+    m0 = jnp.full((b, h), -1e30, jnp.float32)
+    (cN, nN, mN), hs = jax.lax.scan(chunk_fn, (c0, n0, m0), xs)  # (nch,chunk,B,H,dv)
+    hs = hs.transpose(2, 0, 1, 3, 4).reshape(b, s, h * dv)
+    hs = L.rmsnorm(hs.astype(x.dtype), p["out_ln"])
+    z = jax.nn.silu(hin @ p["wz"])
+    out = x + (hs * z) @ p["wo"]
+    if return_state:
+        return out, {"c": cN, "n": nN, "m": mN}
+    return out
+
+
+def init_slstm_params(cfg, key) -> Dict[str, jax.Array]:
+    dt = L.dtype_of(cfg.dtype)
+    d = cfg.d_model
+    ks = jax.random.split(key, 10)
+    return {
+        "ln": jnp.ones((d,), dt),
+        "wi": L.init_dense(ks[0], d, d, dt),
+        "wf": L.init_dense(ks[1], d, d, dt),
+        "wz": L.init_dense(ks[2], d, d, dt),
+        "wo_gate": L.init_dense(ks[3], d, d, dt),
+        "ri": L.init_dense(ks[4], d, d, dt),   # recurrent (head-wise in
+        "rf": L.init_dense(ks[5], d, d, dt),   # the paper; dense here —
+        "rz": L.init_dense(ks[6], d, d, dt),   # noted in DESIGN.md)
+        "ro": L.init_dense(ks[7], d, d, dt),
+        "wo": L.init_dense(ks[8], d, d, dt),
+    }
+
+
+def _slstm_step(p, xt, state):
+    """xt: (B, D) pre-activations computed outside; recurrent part here."""
+    c, n, m, hprev = state
+    xi, xf, xz, xo = xt
+    it = (xi + hprev @ p["ri"]).astype(jnp.float32)
+    ft = jax.nn.log_sigmoid((xf + hprev @ p["rf"]).astype(jnp.float32))
+    zt = jnp.tanh((xz + hprev @ p["rz"]).astype(jnp.float32))
+    ot = jax.nn.sigmoid((xo + hprev @ p["ro"]).astype(jnp.float32))
+    m_new = jnp.maximum(ft + m, it)
+    i = jnp.exp(it - m_new)
+    f = jnp.exp(ft + m - m_new)
+    c = f * c + i * zt
+    n = f * n + i
+    h = ot * (c / jnp.maximum(n, 1.0))
+    return (c, n, m_new, h.astype(xi.dtype)), h
+
+
+def slstm_train(cfg, p, x, *, return_state: bool = False):
+    b, s, d = x.shape
+    hin = L.rmsnorm(x, p["ln"])
+    xi = hin @ p["wi"]
+    xf = hin @ p["wf"]
+    xz = hin @ p["wz"]
+    xo = hin @ p["wo_gate"]
+
+    def step(state, inp):
+        return _slstm_step(p, inp, state)
+
+    c0 = jnp.zeros((b, d), jnp.float32)
+    n0 = jnp.zeros((b, d), jnp.float32)
+    m0 = jnp.full((b, d), -1e30, jnp.float32)
+    h0 = jnp.zeros((b, d), x.dtype)
+    xs = tuple(a.transpose(1, 0, 2) for a in (xi, xf, xz, xo))
+    (cN, nN, mN, hN), hs = jax.lax.scan(step, (c0, n0, m0, h0), xs)
+    hs = hs.transpose(1, 0, 2).astype(x.dtype)
+    out = x + hs @ p["wo"]
+    if return_state:
+        return out, {"c": cN, "n": nN, "m": mN, "h": hN}
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Decode-time state (O(1) in sequence length)
+# ---------------------------------------------------------------------------
+
+def init_mlstm_state(cfg, batch: int):
+    _, h, dk, dv = _dims(cfg)
+    return {
+        "c": jnp.zeros((batch, h, dk, dv), jnp.float32),
+        "n": jnp.zeros((batch, h, dk), jnp.float32),
+        "m": jnp.full((batch, h), -1e30, jnp.float32),
+    }
+
+
+def mlstm_decode(cfg, p, x, state):
+    b = x.shape[0]
+    _, h, dk, dv = _dims(cfg)
+    hin = L.rmsnorm(x, p["ln"])                           # (B,1,D)
+    q = (hin @ p["wq"]).reshape(b, h, dk).astype(jnp.float32)
+    k = (hin @ p["wk"]).reshape(b, h, dk).astype(jnp.float32) / jnp.sqrt(
+        jnp.float32(dk)
+    )
+    v = (hin @ p["wv"]).reshape(b, h, dv).astype(jnp.float32)
+    ig = (hin @ p["wi"]).reshape(b, h).astype(jnp.float32)
+    fg = jax.nn.log_sigmoid((hin @ p["wf"]).reshape(b, h).astype(jnp.float32))
+    ht, (c, n, m) = _mlstm_step(q, k, v, ig, fg, (state["c"], state["n"], state["m"]))
+    hs = L.rmsnorm(ht.reshape(b, 1, h * dv).astype(x.dtype), p["out_ln"])
+    z = jax.nn.silu(hin @ p["wz"])
+    return x + (hs * z) @ p["wo"], {"c": c, "n": n, "m": m}
+
+
+def init_slstm_state(cfg, batch: int):
+    d = cfg.d_model
+    dt = L.dtype_of(cfg.dtype)
+    return {
+        "c": jnp.zeros((batch, d), jnp.float32),
+        "n": jnp.zeros((batch, d), jnp.float32),
+        "m": jnp.full((batch, d), -1e30, jnp.float32),
+        "h": jnp.zeros((batch, d), dt),
+    }
+
+
+def slstm_decode(cfg, p, x, state):
+    hin = L.rmsnorm(x, p["ln"])[:, 0]
+    xt = (hin @ p["wi"], hin @ p["wf"], hin @ p["wz"], hin @ p["wo_gate"])
+    (c, n, m, h), hs = _slstm_step(
+        p, xt, (state["c"], state["n"], state["m"], state["h"])
+    )
+    out = x + (hs.astype(x.dtype) @ p["wo"])[:, None]
+    return out, {"c": c, "n": n, "m": m, "h": h}

@@ -1,0 +1,136 @@
+"""Full xLSTM LM: embedding + (7 mLSTM : 1 sLSTM) superblocks + head.
+
+Scan runs over superblocks (stacked params); inside one superblock the
+7 mLSTM layers are an inner scan and the sLSTM closes the block.
+Decode state is O(1) in sequence length — this arch runs long_500k.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import xlstm as X
+
+
+def _n_super(cfg) -> int:
+    assert cfg.num_layers % cfg.xlstm_slstm_every == 0
+    return cfg.num_layers // cfg.xlstm_slstm_every
+
+
+def init_params(cfg, key) -> Dict[str, Any]:
+    dt = L.dtype_of(cfg.dtype)
+    ns = _n_super(cfg)
+    nm = cfg.xlstm_slstm_every - 1            # mLSTM layers per superblock
+    k_emb, k_m, k_s = jax.random.split(key, 3)
+
+    def super_params(k):
+        km, ks_ = jax.random.split(k)
+        mkeys = jax.random.split(km, nm)
+        return {
+            "mlstm": jax.vmap(lambda kk: X.init_mlstm_params(cfg, kk))(mkeys),
+            "slstm": X.init_slstm_params(cfg, ks_),
+        }
+
+    blocks = jax.vmap(super_params)(jax.random.split(k_m, ns))
+    return {
+        "embed": (
+            jax.random.normal(k_emb, (cfg.padded_vocab, cfg.d_model), jnp.float32)
+            * 0.02
+        ).astype(dt),
+        "blocks": blocks,
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+    }
+
+
+def forward_train(cfg, params, tokens) -> Tuple[jax.Array, jax.Array]:
+    x = L.embed(tokens, params["embed"])
+
+    mblock = functools.partial(X.mlstm_train, cfg)
+    sblock = functools.partial(X.slstm_train, cfg)
+    if cfg.remat:
+        mblock = jax.checkpoint(mblock, policy=jax.checkpoint_policies.nothing_saveable)
+        sblock = jax.checkpoint(sblock, policy=jax.checkpoint_policies.nothing_saveable)
+
+    def super_fn(h, bp):
+        h = L.pin_dp(h)
+        def inner(hh, mp):
+            return mblock(mp, hh), None
+
+        h, _ = jax.lax.scan(inner, h, bp["mlstm"])
+        h = sblock(bp["slstm"], h)
+        return h, None
+
+    x, _ = jax.lax.scan(super_fn, x, params["blocks"])
+    x = L.rmsnorm(x, params["final_norm"])
+    return L.logits_from_hidden(x, params["embed"]), jnp.float32(0)
+
+
+def loss_fn(cfg, params, batch):
+    logits, _ = forward_train(cfg, params, batch["tokens"])
+    return L.cross_entropy(logits, batch["labels"], batch.get("mask"))
+
+
+def init_cache(cfg, batch: int, max_len: int):
+    """Recurrent state only — no KV cache, O(1) in max_len."""
+    ns = _n_super(cfg)
+    nm = cfg.xlstm_slstm_every - 1
+    stack = lambda tree, k: jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (k, *a.shape)), tree
+    )
+    mstate = stack(X.init_mlstm_state(cfg, batch), nm)
+    return {
+        "m": jax.tree.map(lambda a: jnp.broadcast_to(a, (ns, *a.shape)), mstate),
+        "s": stack(X.init_slstm_state(cfg, batch), ns),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def decode_step(cfg, params, cache, token):
+    x = L.embed(token[:, None], params["embed"])
+
+    def super_fn(h, xs):
+        h = L.pin_dp(h)
+        bp, mstate, sstate = xs
+
+        def inner(hh, ms):
+            mp, st = ms
+            hh, st2 = X.mlstm_decode(cfg, mp, hh, st)
+            return hh, st2
+
+        h, m2 = jax.lax.scan(inner, h, (bp["mlstm"], mstate))
+        h, s2 = X.slstm_decode(cfg, bp["slstm"], h, sstate)
+        return h, (m2, s2)
+
+    x, (m2, s2) = jax.lax.scan(
+        super_fn, x, (params["blocks"], cache["m"], cache["s"])
+    )
+    x = L.rmsnorm(x[:, 0], params["final_norm"])
+    logits = L.logits_from_hidden(x, params["embed"])
+    return logits, {"m": m2, "s": s2, "len": cache["len"] + 1}
+
+
+def prefill(cfg, params, tokens):
+    """Parallel prefill: train-style forward that collects the final
+    recurrent state per layer (O(1) cache regardless of prompt length)."""
+    x = L.embed(tokens, params["embed"])
+
+    def super_fn(h, bp):
+        h = L.pin_dp(h)
+        def inner(hh, mp):
+            hh, st = X.mlstm_train(cfg, mp, hh, return_state=True)
+            return hh, st
+
+        h, mstates = jax.lax.scan(inner, h, bp["mlstm"])
+        h, sstate = X.slstm_train(cfg, bp["slstm"], h, return_state=True)
+        return h, (mstates, sstate)
+
+    x, (m_all, s_all) = jax.lax.scan(super_fn, x, params["blocks"])
+    x = L.rmsnorm(x[:, -1], params["final_norm"])
+    logits = L.logits_from_hidden(x, params["embed"])
+    cache = {"m": m_all, "s": s_all, "len": jnp.int32(tokens.shape[1])}
+    return logits, cache

@@ -1,0 +1,2 @@
+from repro.serve.kvcache import PagedKVAllocator
+from repro.serve.engine import ServeEngine

@@ -1,0 +1,89 @@
+"""AdamW with fp32 master weights, built from scratch (no optax).
+
+State layout (all fp32): {"m": .., "v": .., "master": .., "count": ..}.
+Model params stay bf16 for compute; the master copy is the source of
+truth.  m/v/master are exactly the leaves ZeRO-1 shards over the data
+axis (distributed/sharding.opt_state_shardings).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+
+def lr_schedule(cfg: OptimizerConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup + cosine decay to min_lr_frac."""
+    step = step.astype(jnp.float32)
+    warm = cfg.lr * step / max(1, cfg.warmup_steps)
+    progress = jnp.clip(
+        (step - cfg.warmup_steps) / max(1, cfg.total_steps - cfg.warmup_steps),
+        0.0, 1.0,
+    )
+    cos = cfg.lr * (
+        cfg.min_lr_frac
+        + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * progress))
+    )
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def adamw_init(params) -> Dict[str, Any]:
+    f32 = lambda p: p.astype(jnp.float32)
+    return {
+        "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        "v": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        "master": jax.tree.map(f32, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(
+    cfg: OptimizerConfig, params, grads, state
+) -> Tuple[Any, Dict[str, Any], Dict[str, jax.Array]]:
+    count = state["count"] + 1
+    t = count.astype(jnp.float32)
+    lr = lr_schedule(cfg, count)
+
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+
+    def upd(g, m, v, master):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.beta1 * m + (1 - cfg.beta1) * g
+        v = cfg.beta2 * v + (1 - cfg.beta2) * g * g
+        mhat = m / (1 - cfg.beta1**t)
+        vhat = v / (1 - cfg.beta2**t)
+        step = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * master
+        master = master - lr * step
+        return m, v, master
+
+    out = jax.tree.map(upd, grads, state["m"], state["v"], state["master"])
+    m = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    v = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    master = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_params = jax.tree.map(
+        lambda ms, p: ms.astype(p.dtype), master, params
+    )
+    new_state = {"m": m, "v": v, "master": master, "count": count}
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,6 @@
+import os
+
+# keep benchmark imports cheap inside tests; NEVER set device-count
+# flags here (the dry-run owns that, in its own process).
+os.environ.setdefault("LIX_BENCH_N", "20000")
+os.environ.setdefault("LIX_BENCH_LOOKUPS", "2000")

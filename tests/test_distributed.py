@@ -1,0 +1,205 @@
+"""Sharding rules, checkpoint/fault-tolerance, compression, pipeline."""
+
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import ARCHS
+from repro.distributed.fault_tolerance import (
+    CheckpointManager,
+    StragglerPolicy,
+    latest_step,
+    restore_checkpoint,
+    save_checkpoint,
+)
+from repro.distributed.collectives import dequantize_int8, quantize_int8
+from repro.distributed.sharding import _CACHE_RULES, _PARAM_RULES, _spec_for_leaf
+from repro.data.pipeline import DataPipeline, make_synthetic_corpus
+
+
+class FakeMesh:
+    """Duck-typed mesh: only .shape is consulted by the rules engine."""
+
+    def __init__(self, **axes):
+        self.shape = dict(axes)
+
+
+PROD = FakeMesh(data=16, model=16)
+PROD3 = FakeMesh(pod=2, data=16, model=16)
+
+
+@pytest.mark.parametrize("mesh", [PROD, PROD3], ids=["16x16", "2x16x16"])
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_param_rules_always_divisible(arch, mesh):
+    """Every sharded dim must divide its mesh axes, for every full arch."""
+    from repro.models import get_model
+
+    cfg = ARCHS[arch]
+    api = get_model(cfg)
+    abstract = jax.eval_shape(api.init, jax.random.PRNGKey(0))
+    flat, _ = jax.tree_util.tree_flatten_with_path(abstract)
+    for path, leaf in flat:
+        pstr = "/".join(str(getattr(e, "key", "")) for e in path)
+        spec = _spec_for_leaf(pstr, leaf.shape, mesh, _PARAM_RULES,
+                              fsdp=cfg.fsdp_params)
+        for dim, part in zip(leaf.shape, tuple(spec)):
+            if part is None:
+                continue
+            names = part if isinstance(part, tuple) else (part,)
+            total = int(np.prod([mesh.shape[n] for n in names]))
+            assert dim % total == 0, (arch, pstr, leaf.shape, spec)
+
+
+def test_kv_heads_fall_back_to_replication():
+    """4 KV heads on a 16-way model axis must not shard."""
+    spec = _spec_for_leaf("k", (48, 128, 4, 32768, 128), PROD, _CACHE_RULES,
+                          fsdp=False, batch_shardable=True)
+    assert spec[2] is None  # kv head dim replicated
+    assert spec[1] is not None  # batch sharded
+
+
+def test_sequence_parallel_kicks_in_for_batch_1():
+    spec = _spec_for_leaf("k", (9, 1, 8, 524288, 128), PROD, _CACHE_RULES,
+                          fsdp=False, batch_shardable=False)
+    assert spec[3] == "data"  # sequence dim sharded
+    assert spec[1] is None
+
+
+def test_vocab_padding_divides_model_axis():
+    for cfg in ARCHS.values():
+        assert cfg.padded_vocab % 16 == 0
+
+
+# --------------------------------------------------------------------------
+# checkpointing / fault tolerance
+# --------------------------------------------------------------------------
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "a": jnp.asarray(rng.normal(0, 1, (4, 8)), jnp.float32),
+        "nested": {"b": jnp.asarray(rng.integers(0, 5, (3,)), jnp.int32)},
+    }
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    t = _tree()
+    save_checkpoint(str(tmp_path), 7, t)
+    restored, step = restore_checkpoint(str(tmp_path), t)
+    assert step == 7
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_keep_last_and_latest(tmp_path):
+    t = _tree()
+    for s in (10, 20, 30, 40):
+        save_checkpoint(str(tmp_path), s, t, keep_last=2)
+    names = sorted(os.listdir(tmp_path))
+    assert "step_0000000030" in names and "step_0000000040" in names
+    assert "step_0000000010" not in names
+    assert latest_step(str(tmp_path)) == 40
+
+
+def test_checkpoint_ignores_partial_tmp(tmp_path):
+    t = _tree()
+    save_checkpoint(str(tmp_path), 5, t)
+    # simulate a crash mid-write of step 6
+    os.makedirs(tmp_path / "step_0000000006.tmp")
+    restored, step = restore_checkpoint(str(tmp_path), t)
+    assert step == 5
+
+
+def test_checkpoint_latest_falls_back_when_dir_missing(tmp_path):
+    t = _tree()
+    save_checkpoint(str(tmp_path), 5, t)
+    save_checkpoint(str(tmp_path), 9, t)
+    import shutil
+    shutil.rmtree(tmp_path / "step_0000000009")
+    assert latest_step(str(tmp_path)) == 5
+
+
+def test_checkpoint_manager_restore_or_init(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), every=10)
+    t = _tree()
+    got, step = mgr.restore_or_init(t, lambda: t)
+    assert step == 0
+    mgr.save(10, t)
+    got, step = mgr.restore_or_init(t, lambda: t)
+    assert step == 10
+
+
+def test_straggler_policy_flags_slow_steps():
+    p = StragglerPolicy(factor=2.0, min_samples=3)
+    for _ in range(10):
+        assert not p.observe(1.0)
+    assert p.observe(5.0)
+    assert p.events == 1
+    assert not p.observe(1.0)
+
+
+# --------------------------------------------------------------------------
+# gradient compression
+# --------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.floats(-1e4, 1e4, allow_nan=False), min_size=1, max_size=64))
+def test_property_int8_quantization_error_bounded(xs):
+    x = jnp.asarray(np.array(xs, np.float32))
+    q, scale = quantize_int8(x)
+    deq = dequantize_int8(q, scale)
+    err = np.abs(np.asarray(deq) - np.asarray(x))
+    assert (err <= float(scale) * 0.5 + 1e-6).all()
+
+
+def test_error_feedback_converges_in_mean():
+    """Repeated compress+feedback of a constant recovers it on average."""
+    x = jnp.asarray(np.full((32,), 0.001, np.float32) +
+                    np.random.default_rng(0).normal(0, 1, 32).astype(np.float32))
+    err = jnp.zeros_like(x)
+    total = jnp.zeros_like(x)
+    for _ in range(50):
+        q, scale = quantize_int8(x + err)
+        deq = dequantize_int8(q, scale)
+        err = (x + err) - deq
+        total = total + deq
+    np.testing.assert_allclose(np.asarray(total / 50), np.asarray(x), atol=1e-3)
+
+
+# --------------------------------------------------------------------------
+# data pipeline
+# --------------------------------------------------------------------------
+
+def test_pipeline_doc_lookup_matches_searchsorted():
+    corpus = make_synthetic_corpus(total_tokens=100_000, mean_doc_len=90)
+    rng = np.random.default_rng(0)
+    offsets = rng.integers(0, corpus.total_tokens - 1, 2_000)
+    got = corpus.lookup_documents(offsets)
+    want = np.searchsorted(corpus.doc_starts, offsets, side="right") - 1
+    assert (got == want).all()
+
+
+def test_pipeline_shards_partition_the_global_batch():
+    corpus = make_synthetic_corpus(total_tokens=50_000)
+    full = DataPipeline(corpus, global_batch=8, seq_len=16).batch_at(3)
+    parts = [
+        DataPipeline(corpus, global_batch=8, seq_len=16,
+                     shard_index=i, num_shards=4).batch_at(3)
+        for i in range(4)
+    ]
+    np.testing.assert_array_equal(
+        full["tokens"], np.concatenate([p["tokens"] for p in parts])
+    )
+
+
+def test_pipeline_deterministic_across_restart():
+    corpus = make_synthetic_corpus(total_tokens=50_000)
+    p1 = DataPipeline(corpus, global_batch=4, seq_len=32)
+    p2 = DataPipeline(corpus, global_batch=4, seq_len=32)
+    np.testing.assert_array_equal(
+        p1.batch_at(17)["tokens"], p2.batch_at(17)["tokens"]
+    )

@@ -1,0 +1,66 @@
+"""Point/existence index tests: Fig 10 + Fig 13 invariants."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    GRUSpec,
+    build_bloom,
+    build_learned_bloom,
+    build_model_hashmap,
+    build_random_hashmap,
+)
+from repro.data import gen_lognormal, gen_urls
+
+
+def test_hashmap_build_invariants():
+    keys = gen_lognormal(8_000)
+    hm = build_random_hashmap(keys, len(keys))
+    stored = int((~np.isnan(hm.slot_key)).sum()) + int(
+        (hm.ovf_next != -1).sum() + (hm.ovf_next == -1).sum()
+    ) - 1  # ovf arrays are 1-padded when empty
+    assert hm.num_empty + (~np.isnan(hm.slot_key)).sum() == hm.num_slots
+    assert hm.max_chain >= 1
+
+
+def test_model_hash_beats_random_on_empty_slots():
+    """The paper's Fig 10 direction: learned CDF spreads keys better."""
+    keys = gen_lognormal(30_000)
+    for frac in (0.75, 1.0):
+        m = int(len(keys) * frac)
+        hm_m, _, _ = build_model_hashmap(keys, m)
+        hm_r = build_random_hashmap(keys, m)
+        assert hm_m.num_empty < hm_r.num_empty, (
+            frac, hm_m.num_empty, hm_r.num_empty
+        )
+
+
+def test_bloom_no_false_negatives_and_fpr():
+    rng = np.random.default_rng(0)
+    keys = np.unique(rng.integers(1, 1 << 40, 20_000).astype(np.uint64))
+    bf = build_bloom(keys, fpr=0.01)
+    assert bf.contains(keys).all()
+    neg = rng.integers(1 << 41, 1 << 42, 20_000).astype(np.uint64)
+    fpr = bf.contains(neg).mean()
+    assert fpr < 0.03, fpr
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=100, max_value=3000), st.integers(0, 2**31))
+def test_property_bloom_never_false_negative(n, seed):
+    rng = np.random.default_rng(seed)
+    keys = rng.integers(0, 1 << 60, n).astype(np.uint64)
+    bf = build_bloom(keys, fpr=0.02)
+    assert bf.contains(keys).all()
+
+
+@pytest.mark.slow
+def test_learned_bloom_contract_and_size():
+    keys, nonkeys = gen_urls(2_000, 6_000)
+    lb = build_learned_bloom(
+        keys, nonkeys, target_fpr=0.01,
+        spec=GRUSpec(width=8, embed=8, max_len=24), train_steps=200,
+    )
+    assert lb.contains(keys).all(), "learned bloom broke the no-FN contract"
+    assert lb.measured_fpr <= 0.05

@@ -1,0 +1,97 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret mode)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import RMIConfig, build_bloom, build_model_hashmap, build_rmi, make_keyset
+from repro.data import gen_lognormal, gen_maps
+from repro.kernels import ops, ref
+from repro.kernels.bloom_probe import bloom_probe_pallas
+from repro.kernels.flash_attention import flash_attention
+
+
+@pytest.mark.parametrize("n,leaves,hidden,block_q", [
+    (5_000, 64, (), 256),
+    (20_000, 256, (16,), 1024),
+    (8_000, 128, (16, 16), 512),
+])
+def test_rmi_kernel_vs_searchsorted(n, leaves, hidden, block_q):
+    ks = make_keyset(gen_maps(n))
+    idx = build_rmi(ks, RMIConfig(num_leaves=leaves, stage0_hidden=hidden,
+                                  stage0_train_steps=60))
+    rng = np.random.default_rng(0)
+    sample = rng.choice(ks.n, 1500)
+    q = jnp.asarray(ks.norm[sample])
+    got = np.asarray(ops.rmi_lookup_op(idx, ks.norm, q, block_q=block_q))
+    want = np.searchsorted(ks.norm, ks.norm[sample], side="left")
+    assert (got == want).all()
+
+
+def test_rmi_kernel_nondivisible_batch_padding():
+    ks = make_keyset(gen_maps(4_000))
+    idx = build_rmi(ks, RMIConfig(num_leaves=64, stage0_hidden=(),
+                                  stage0_train_steps=0))
+    q = jnp.asarray(ks.norm[:777])
+    got = np.asarray(ops.rmi_lookup_op(idx, ks.norm, q, block_q=256))
+    assert got.shape == (777,)
+    want = np.searchsorted(ks.norm, ks.norm[:777], side="left")
+    assert (got == want).all()
+
+
+@pytest.mark.parametrize("num_bits,k", [(1 << 14, 3), (1 << 16, 7), (1 << 18, 10)])
+def test_bloom_kernel_vs_ref(num_bits, k):
+    rng = np.random.default_rng(0)
+    keys = rng.integers(0, 1 << 31, 5_000).astype(np.uint64)
+    bf = build_bloom(keys, num_bits=num_bits, num_hashes=k)
+    q = jnp.asarray(rng.integers(0, 1 << 32, 3_000, dtype=np.uint32))
+    got = np.asarray(bloom_probe_pallas(q, jnp.asarray(bf.words),
+                                        num_bits=bf.num_bits, k=bf.num_hashes))
+    want = np.asarray(ref.bloom_probe_reference(
+        q, jnp.asarray(bf.words), num_bits=bf.num_bits, k=bf.num_hashes))
+    assert (got == want).all()
+
+
+def test_hash_kernel_membership():
+    keys = gen_lognormal(10_000)
+    hm, idx, ks = build_model_hashmap(keys, len(keys))
+    rng = np.random.default_rng(0)
+    present = keys[rng.choice(len(keys), 1_000)]
+    absent = rng.uniform(0, 1e9, 1_000)
+    absent = absent[~np.isin(absent, keys)]
+    assert np.asarray(ops.hash_probe_op(hm, idx, ks, present)).all()
+    assert not np.asarray(ops.hash_probe_op(hm, idx, ks, absent)).any()
+
+
+@pytest.mark.parametrize("shape", [
+    (1, 4, 2, 128, 32),
+    (2, 8, 8, 128, 64),
+    (1, 8, 1, 256, 64),
+    (2, 4, 4, 64, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_vs_reference(shape, dtype, causal):
+    b, hq, hkv, s, d = shape
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(k1, (b, hq, s, d), dtype)
+    k = jax.random.normal(k2, (b, hkv, s, d), dtype)
+    v = jax.random.normal(k3, (b, hkv, s, d), dtype)
+    got = flash_attention(q, k, v, causal=causal, blk_q=64, blk_k=64)
+    want = ref.mha_reference(q, k, v, causal=causal)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        atol=tol, rtol=tol,
+    )
+
+
+def test_attention_op_fallback_for_odd_seq():
+    """Non-tiling seq lens take the reference path, same numerics."""
+    q = jax.random.normal(jax.random.PRNGKey(0), (1, 2, 48, 16))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 2, 48, 16))
+    v = jax.random.normal(jax.random.PRNGKey(2), (1, 2, 48, 16))
+    got = ops.attention_op(q, k, v, causal=True, blk_q=128, blk_k=128)
+    want = ref.mha_reference(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)

@@ -1,0 +1,125 @@
+"""Per-arch smoke + decode/prefill consistency for the LM substrate."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import REDUCED, SHAPES
+from repro.models import get_model
+
+
+def _train_batch(api, cfg, b=2, s=32, seed=0):
+    rng = np.random.default_rng(seed)
+    shape = type("S", (), {"global_batch": b, "seq_len": s, "kind": "train"})()
+    batch = {}
+    for k, (shp, dt) in api.batch_spec(shape).items():
+        if dt == jnp.int32:
+            batch[k] = jnp.asarray(rng.integers(0, cfg.vocab_size, shp), jnp.int32)
+        else:
+            batch[k] = jnp.asarray(rng.normal(0, 1, shp), dt)
+    return batch
+
+
+@pytest.mark.parametrize("name", sorted(REDUCED))
+def test_arch_smoke_train_and_decode(name):
+    cfg = REDUCED[name]
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    batch = _train_batch(api, cfg)
+    loss, metrics = jax.jit(api.loss)(params, batch)
+    assert np.isfinite(float(loss)), name
+    assert float(loss) > 0
+
+    cache = api.init_cache(2, 16)
+    logits, cache2 = jax.jit(api.decode)(params, cache, jnp.zeros((2,), jnp.int32))
+    assert logits.shape == (2, cfg.padded_vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all(), name
+    # cache length advanced
+    assert int(cache2["len"]) == 1
+
+
+@pytest.mark.parametrize("name", ["yi-9b", "xlstm-1.3b", "jamba-1.5-large-398b",
+                                  "seamless-m4t-large-v2"])
+def test_prefill_matches_sequential_decode(name):
+    """Prefill(prompt) then decode(t) must equal decoding the whole
+    prompt step by step — the parallel/sequential consistency contract.
+
+    MoE archs get a generous capacity factor: capacity-based dropping is
+    batch-size dependent by design (prefill sees T tokens at once,
+    decode sees B), so exact consistency only holds drop-free."""
+    import dataclasses
+
+    cfg = REDUCED[name]
+    if cfg.num_experts:
+        cfg = dataclasses.replace(cfg, capacity_factor=64.0)
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    b, s = 2, 8
+    shape = type("S", (), {"global_batch": b, "seq_len": s * 2, "kind": "prefill"})()
+    batch = {}
+    for k, (shp, dt) in api.batch_spec(shape).items():
+        if dt == jnp.int32:
+            batch[k] = jnp.asarray(rng.integers(0, cfg.vocab_size, shp), jnp.int32)
+        else:
+            batch[k] = jnp.asarray(rng.normal(0, 1, shp), dt)
+
+    logits_prefill, _ = jax.jit(api.prefill)(params, batch)
+
+    tokens = batch["tokens"]
+    cache = api.init_cache(b, tokens.shape[1] + 4)
+    if name == "seamless-m4t-large-v2":
+        # decode path needs the encoder cross-KV; rebuild it via prefill
+        # of a 1-token prompt then feed the rest sequentially
+        from repro.models import encdec
+        enc_out = encdec.encode(cfg, params, batch["frames"])
+        xk, xv = [], []
+        # per-layer cross KV like prefill does
+        import jax as _jax
+        def kv_of(p):
+            return encdec._enc_kv(cfg, p, enc_out)
+        ks_, vs_ = _jax.vmap(kv_of)(params["dec"])
+        cache = encdec.init_cache(cfg, b, tokens.shape[1] + 4, enc_out.shape[1])
+        cache["xk"], cache["xv"] = ks_, vs_
+    logits = None
+    decode = jax.jit(api.decode)
+    for t in range(tokens.shape[1]):
+        logits, cache = decode(params, cache, tokens[:, t])
+    np.testing.assert_allclose(
+        np.asarray(logits_prefill, np.float32),
+        np.asarray(logits, np.float32),
+        atol=2e-2, rtol=2e-2,
+    )
+
+
+def test_vlm_loss_masks_to_text_positions():
+    cfg = REDUCED["llava-next-mistral-7b"]
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    b = 2
+    st = 24
+    rng = np.random.default_rng(0)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (b, st)), jnp.int32),
+        "patches": jnp.asarray(rng.normal(0, 1, (b, cfg.frontend_tokens, cfg.frontend_dim)), jnp.bfloat16),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (b, st)), jnp.int32),
+    }
+    loss, _ = jax.jit(api.loss)(params, batch)
+    assert np.isfinite(float(loss))
+
+
+def test_moe_cdf_and_sort_dispatch_agree_when_no_drops():
+    """With generous capacity both dispatches compute the same FFN."""
+    import dataclasses
+    cfg = dataclasses.replace(
+        REDUCED["olmoe-1b-7b"], capacity_factor=8.0, moe_dispatch="sort"
+    )
+    cfg_cdf = dataclasses.replace(cfg, moe_dispatch="cdf")
+    api_s = get_model(cfg)
+    api_c = get_model(cfg_cdf)
+    params = api_s.init(jax.random.PRNGKey(0))
+    batch = _train_batch(api_s, cfg)
+    l_s, _ = jax.jit(api_s.loss)(params, batch)
+    l_c, _ = jax.jit(api_c.loss)(params, batch)
+    np.testing.assert_allclose(float(l_s), float(l_c), rtol=1e-3)

@@ -1,0 +1,143 @@
+"""Range-index unit + property tests: the B-Tree-strength guarantee."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    IndexSpec,
+    RMIConfig,
+    build_btree,
+    build_rmi,
+    compile_btree_lookup,
+    compile_lookup,
+    make_keyset,
+    synthesize,
+)
+from repro.core.models import linear_fit, segmented_linear_fit
+from repro.core.rmi import rmi_lookup, rmi_predict
+from repro.data import gen_lognormal, gen_maps, gen_weblogs
+
+
+def test_linear_fit_exact():
+    x = np.linspace(0, 1, 100)
+    y = 3.5 * x + 2.0
+    slope, intercept = linear_fit(x, y)
+    assert abs(slope - 3.5) < 1e-9 and abs(intercept - 2.0) < 1e-9
+
+
+def test_segmented_fit_matches_per_segment():
+    rng = np.random.default_rng(0)
+    x = rng.random(1000)
+    y = rng.random(1000)
+    seg = rng.integers(0, 7, 1000)
+    slope, intercept, cnt = segmented_linear_fit(x, y, seg, 8)
+    for s in range(7):
+        m = seg == s
+        sl, ic = linear_fit(x[m], y[m])
+        assert abs(slope[s] - sl) < 1e-6
+        assert abs(intercept[s] - ic) < 1e-6
+    assert cnt[7] == 0  # empty segment interpolated, not NaN
+    assert np.isfinite(intercept[7])
+
+
+@pytest.mark.parametrize("gen", [gen_maps, gen_weblogs, gen_lognormal])
+@pytest.mark.parametrize("hidden", [(), (8,)])
+def test_rmi_error_bounds_contain_all_stored_keys(gen, hidden):
+    """The paper §2 contract: every stored key falls inside its window."""
+    ks = make_keyset(gen(20_000))
+    idx = build_rmi(
+        ks, RMIConfig(num_leaves=200, stage0_hidden=hidden,
+                      stage0_train_steps=60),
+    )
+    tree = idx.as_pytree()
+    q = jnp.asarray(ks.norm)
+    pos, lo, hi, _ = rmi_predict(tree, q, n=idx.n, num_leaves=idx.num_leaves)
+    truth = np.arange(idx.n)
+    lo_n = np.asarray(lo)
+    hi_n = np.asarray(hi)
+    # lower-bound target: first index with key == this key (f32 ties)
+    first = np.searchsorted(ks.norm, ks.norm, side="left")
+    assert (lo_n <= truth + 1e-6).all()
+    assert (hi_n >= first - 1e-6).all()
+
+
+@pytest.mark.parametrize("strategy", ["binary", "biased", "quaternary"])
+def test_rmi_lookup_equals_searchsorted(strategy):
+    ks = make_keyset(gen_maps(15_000))
+    idx = build_rmi(ks, RMIConfig(num_leaves=128, stage0_hidden=(),
+                                  stage0_train_steps=0))
+    rng = np.random.default_rng(1)
+    sample = rng.choice(ks.n, 2_000)
+    q = jnp.asarray(ks.norm[sample])
+    got = np.asarray(
+        rmi_lookup(
+            idx.as_pytree(), jnp.asarray(ks.norm), q, n=idx.n,
+            num_leaves=idx.num_leaves, max_window=idx.max_window,
+            strategy=strategy,
+        )
+    )
+    want = np.searchsorted(ks.norm, ks.norm[sample], side="left")
+    assert (got == want).all()
+
+
+def test_hybrid_fallback_marks_bad_leaves_and_stays_correct():
+    ks = make_keyset(gen_weblogs(20_000))
+    idx = build_rmi(
+        ks, RMIConfig(num_leaves=64, stage0_hidden=(), stage0_train_steps=0,
+                      hybrid_threshold=32),
+    )
+    assert idx.is_btree.any(), "expected some leaves above threshold"
+    lookup = compile_lookup(idx, ks)
+    rng = np.random.default_rng(2)
+    sample = rng.choice(ks.n, 2_000)
+    got = np.asarray(lookup(jnp.asarray(ks.norm[sample])))
+    want = np.searchsorted(ks.norm, ks.norm[sample], side="left")
+    assert (got == want).all()
+
+
+def test_btree_baseline_correct():
+    ks = make_keyset(gen_lognormal(12_000))
+    for page in (16, 64, 256):
+        bt = build_btree(ks.norm, page_size=page)
+        lookup = compile_btree_lookup(bt, ks.norm)
+        rng = np.random.default_rng(3)
+        sample = rng.choice(ks.n, 1_000)
+        got = np.asarray(lookup(jnp.asarray(ks.norm[sample])))
+        want = np.searchsorted(ks.norm, ks.norm[sample], side="left")
+        assert (got == want).all(), page
+
+
+def test_lif_synthesis_respects_budget():
+    ks = make_keyset(gen_maps(10_000))
+    spec = IndexSpec(max_size_bytes=50_000)
+    grid = {"num_leaves": (256, 1024), "stage0_hidden": ((), (8,))}
+    idx, lookup, cands = synthesize(ks, spec, grid, train_steps=40)
+    assert idx.model_size_bytes <= 50_000
+    sample = np.random.default_rng(0).choice(ks.n, 500)
+    got = np.asarray(lookup(jnp.asarray(ks.norm[sample])))
+    want = np.searchsorted(ks.norm, ks.norm[sample], side="left")
+    assert (got == want).all()
+    assert len(cands) == 4
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    st.lists(
+        st.floats(min_value=-1e9, max_value=1e9, allow_nan=False),
+        min_size=16, max_size=400, unique=True,
+    )
+)
+def test_property_rmi_windows_hold_for_any_keyset(raw):
+    """Hypothesis: for ANY key set, stored keys land inside the window."""
+    try:
+        ks = make_keyset(np.array(raw))
+    except ValueError:
+        return
+    idx = build_rmi(ks, RMIConfig(num_leaves=8, stage0_hidden=(),
+                                  stage0_train_steps=0))
+    lookup = compile_lookup(idx, ks)
+    got = np.asarray(lookup(jnp.asarray(ks.norm)))
+    want = np.searchsorted(ks.norm, ks.norm, side="left")
+    assert (got == want).all()

@@ -1,0 +1,57 @@
+"""String index: tokenization order, packed lexicographic compare, lookup."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import RMIConfig, build_rmi, compile_string_lookup, make_vector_keyset, tokenize
+from repro.core.strings import lex_less, lower_bound_lex, pack_words
+from repro.data import gen_webdocs
+
+ascii_text = st.text(
+    alphabet=st.characters(min_codepoint=32, max_codepoint=126),
+    min_size=0, max_size=12,
+)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(ascii_text, min_size=2, max_size=30, unique=True))
+def test_property_packed_compare_is_lexicographic(strings):
+    max_len = 12
+    s = sorted(strings)
+    toks = tokenize(s, max_len)
+    packed = jnp.asarray(pack_words(toks))
+    # pairwise: packed order must match byte-truncated string order
+    a = packed[:-1]
+    b = packed[1:]
+    lt = np.asarray(lex_less(a, b))
+    trunc = [x.encode()[:max_len] for x in s]
+    want = np.array([trunc[i] < trunc[i + 1] for i in range(len(s) - 1)])
+    assert (lt == want).all()
+
+
+def test_lower_bound_lex_matches_bisect():
+    docs = gen_webdocs(3_000)
+    toks = tokenize(docs, 16)
+    packed = jnp.asarray(pack_words(toks))
+    rng = np.random.default_rng(0)
+    sample = rng.choice(len(docs), 400)
+    q = packed[sample]
+    n = len(docs)
+    lo = jnp.zeros(len(sample), jnp.int32)
+    hi = jnp.full(len(sample), n, jnp.int32)
+    got = np.asarray(lower_bound_lex(packed, q, lo, hi, n))
+    assert (got == sample).all()  # unique keys -> exact position
+
+
+def test_string_index_end_to_end():
+    docs = gen_webdocs(5_000)
+    vks = make_vector_keyset(tokenize(docs, 16))
+    idx = build_rmi(vks, RMIConfig(num_leaves=64, stage0_hidden=(8,),
+                                   stage0_train_steps=60))
+    for strategy in ("binary", "biased", "quaternary"):
+        lookup = compile_string_lookup(idx, vks, strategy=strategy)
+        rng = np.random.default_rng(1)
+        sample = rng.choice(vks.n, 500)
+        got = np.asarray(lookup(jnp.asarray(vks.raw[sample])))
+        assert (got == sample).all(), strategy
