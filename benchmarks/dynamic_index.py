@@ -1,0 +1,107 @@
+"""Dynamic-index workload: the writable index service under writes.
+
+Three questions, all ns/lookup CSV rows:
+
+  1. What does the delta buffer cost readers?  Sweep the staged-write
+     fill 0-100% of capacity and time the jitted merged lookup (RMI
+     over the base + one fused branchless search over the delta)
+     against the static RMI baseline on the same key set.  The paper's
+     static numbers are the floor; the service must stay within ~2x of
+     it at 10% fill to be a serious §3.3 answer.
+  2. What does a mixed 90/10 read/write stream cost end to end
+     (staging + merged lookups + any compactions amortized in)?
+  3. Does compaction restore the static rate (post-compaction row)?
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import BENCH_LOOKUPS, BENCH_N, emit, ns_per_item
+from repro.core import RMIConfig, build_rmi, compile_lookup, make_keyset
+from repro.data import gen_weblogs
+from repro.index_service import IndexService, ServiceConfig
+
+DELTA_CAPACITY = 4096
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    raw = gen_weblogs(BENCH_N)
+    ks = make_keyset(raw)
+    n = ks.n
+    b = min(BENCH_LOOKUPS, n)
+
+    cfg = RMIConfig(num_leaves=max(16, n // 64), stage0_hidden=(),
+                    stage0_train_steps=0)
+    sample = rng.choice(n, b)
+    qn = jnp.asarray(ks.norm[sample])
+
+    # ---- static floor: the read-only RMI of §3 ---------------------------
+    static_lookup = compile_lookup(build_rmi(ks, cfg), ks)
+    t_static = ns_per_item(static_lookup, qn, batch=b)
+    emit("dynamic_index/static_rmi", t_static / 1e3, f"n={n}")
+
+    # ---- merged path vs delta fill ---------------------------------------
+    svc = IndexService(ks.raw, ServiceConfig(
+        delta_capacity=DELTA_CAPACITY, rmi=cfg))
+    fresh = iter(np.setdiff1d(
+        rng.integers(0, 1 << 52, 3 * DELTA_CAPACITY).astype(np.float64),
+        ks.raw,
+    ))
+    filled = 0
+    for pct in (0, 10, 25, 50, 100):
+        target = int(DELTA_CAPACITY * pct / 100)
+        if target > filled:
+            svc.insert(np.array([next(fresh) for _ in range(target - filled)]))
+            filled = target
+        snap, _, _, dk, dp = svc._capture()
+        fn = snap.merged_lookup_fn(svc.config.strategy)
+        t = ns_per_item(fn, qn, dk, dp, batch=b)
+        emit(
+            f"dynamic_index/fill_{pct}pct",
+            t / 1e3,
+            f"delta={target};vs_static={t / t_static:.2f}x",
+        )
+
+    # ---- mixed 90/10 read/write stream -----------------------------------
+    svc = IndexService(ks.raw, ServiceConfig(
+        delta_capacity=DELTA_CAPACITY, rmi=cfg))
+    writes_per_round = max(1, b // 10)
+    new_keys = np.setdiff1d(
+        rng.integers(0, 1 << 52, 20 * writes_per_round).astype(np.float64),
+        ks.raw,
+    )
+    import time
+    ops = 0
+    t0 = time.perf_counter()
+    for r in range(10):
+        w = new_keys[r * writes_per_round:(r + 1) * writes_per_round]
+        svc.insert(w)
+        svc.lookup_batch(raw[rng.choice(n, b - writes_per_round)]
+                         ).block_until_ready()
+        ops += b
+    t_mixed = (time.perf_counter() - t0) / ops * 1e9
+    emit(
+        "dynamic_index/mixed_90_10",
+        t_mixed / 1e3,
+        f"compactions={svc.stats['compactions']};vs_static={t_mixed / t_static:.2f}x",
+    )
+
+    # ---- after compaction the merged path is the static path -------------
+    svc.flush()
+    snap, _, _, dk, dp = svc._capture()
+    fn = snap.merged_lookup_fn(svc.config.strategy)
+    qn2 = jnp.asarray(snap.keys.normalize(raw[sample]))
+    t_post = ns_per_item(fn, qn2, dk, dp, batch=b)
+    emit(
+        "dynamic_index/post_compaction",
+        t_post / 1e3,
+        f"version={svc.version};leaves_refit={svc.stats['leaves_refit']};"
+        f"vs_static={t_post / t_static:.2f}x",
+    )
+
+
+if __name__ == "__main__":
+    main()

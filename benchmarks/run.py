@@ -15,6 +15,7 @@ def main() -> None:
     from benchmarks import (
         fig4_maps, fig5_weblog, fig6_lognormal, fig7_strings, fig8_search,
         fig10_hash, fig13_bloom, naive_index, moe_dispatch, paged_kv,
+        dynamic_index,
     )
 
     suites = [
@@ -28,6 +29,7 @@ def main() -> None:
         ("naive_index", naive_index.main),
         ("moe_dispatch", moe_dispatch.main),
         ("paged_kv", paged_kv.main),
+        ("dynamic_index", dynamic_index.main),
     ]
     print("name,us_per_call,derived")
     failures = []

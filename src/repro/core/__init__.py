@@ -21,8 +21,10 @@ from repro.core.rmi import (
     RMIndex,
     build_rmi,
     compile_lookup,
+    refit_rmi,
     rmi_lookup,
     rmi_predict,
+    stage0_segments,
 )
 from repro.core.btree import BTreeIndex, build_btree, compile_btree_lookup
 from repro.core.bloom import BloomFilter, build_bloom, compile_bloom_probe
@@ -43,8 +45,9 @@ from repro.core.strings import compile_string_lookup, tokenize
 
 __all__ = [
     "KeySet", "VectorKeySet", "make_keyset", "make_vector_keyset",
-    "RMIConfig", "RMIndex", "build_rmi", "compile_lookup", "rmi_lookup",
-    "rmi_predict", "BTreeIndex", "build_btree", "compile_btree_lookup",
+    "RMIConfig", "RMIndex", "build_rmi", "compile_lookup", "refit_rmi",
+    "rmi_lookup", "rmi_predict", "stage0_segments",
+    "BTreeIndex", "build_btree", "compile_btree_lookup",
     "BloomFilter", "build_bloom", "compile_bloom_probe", "GRUSpec",
     "LearnedBloom", "build_learned_bloom", "HashMap", "build_hashmap",
     "build_model_hashmap", "build_random_hashmap", "compile_hash_lookup",

@@ -188,6 +188,20 @@ def _q1(q: jnp.ndarray) -> jnp.ndarray:
 # Builder (stage-wise training, Algorithm 1)
 # --------------------------------------------------------------------------
 
+def stage0_segments(
+    stage0_params: Dict[str, np.ndarray], norm: np.ndarray, *, n: int, m: int
+) -> np.ndarray:
+    """Leaf assignment for every key with lookup-time arithmetic."""
+    pred0 = np.asarray(
+        jax.jit(
+            lambda q: mlp_apply(
+                {k: jnp.asarray(v) for k, v in stage0_params.items()}, q
+            )
+        )(norm)
+    )
+    return np.clip(np.floor(pred0 * (m / n)).astype(np.int64), 0, m - 1)
+
+
 def build_rmi(
     keys: Union[KeySet, VectorKeySet],
     config: RMIConfig,
@@ -216,23 +230,46 @@ def build_rmi(
         seed=config.seed,
         verbose=verbose,
     )
-
-    # stage-0 prediction for *all* keys with lookup-time arithmetic
-    pred0 = np.asarray(
-        jax.jit(lambda q: mlp_apply({k: jnp.asarray(v) for k, v in s0.items()}, q))(
-            norm
-        )
-    )
-    seg = np.clip(np.floor(pred0 * (m / n)).astype(np.int64), 0, m - 1)
+    s0 = {k: np.asarray(v) for k, v in s0.items()}
+    seg = stage0_segments(s0, norm, n=n, m=m)
 
     # ---- stage 1: per-leaf linear fits ------------------------------------
     if in_dim == 1:
         slope, intercept, cnt = segmented_linear_fit(norm, y, seg, m)
         leaf_w = slope.astype(np.float32)
         leaf_b = intercept.astype(np.float32)
-        pred1 = leaf_w[seg] * norm + leaf_b[seg]
     else:
         leaf_w, leaf_b, cnt = _segmented_multivariate_fit(norm, y, seg, m)
+    return _finalize_rmi(
+        config, n, in_dim, s0, leaf_w.astype(np.float32),
+        leaf_b.astype(np.float32), cnt, norm, y, seg, verbose=verbose,
+    )
+
+
+def _finalize_rmi(
+    config: RMIConfig,
+    n: int,
+    in_dim: int,
+    s0: Dict[str, np.ndarray],
+    leaf_w: np.ndarray,
+    leaf_b: np.ndarray,
+    cnt: np.ndarray,
+    norm: np.ndarray,
+    y: np.ndarray,
+    seg: np.ndarray,
+    *,
+    verbose: bool = False,
+) -> RMIndex:
+    """Error bounds, per-leaf spans, hybrid replacement, final RMIndex.
+
+    Always recomputed over *all* keys with the final leaf parameters, so
+    the B-Tree-strength window guarantee holds no matter how the leaf
+    parameters were obtained (cold fit or warm reuse in `refit_rmi`).
+    """
+    m = config.num_leaves
+    if in_dim == 1:
+        pred1 = leaf_w[seg] * norm + leaf_b[seg]
+    else:
         pred1 = np.sum(leaf_w[seg] * norm, axis=-1) + leaf_b[seg]
     pred1 = np.clip(pred1.astype(np.float32), 0.0, float(n - 1))
 
@@ -316,6 +353,106 @@ def _segmented_multivariate_fit(
     ata += 1e-6 * np.eye(da)[None]
     sol = np.linalg.solve(ata, aty[..., None])[..., 0]
     return sol[:, :d].astype(np.float32), sol[:, d].astype(np.float32), cnt
+
+
+# --------------------------------------------------------------------------
+# Warm-start refit (the index_service compaction path)
+# --------------------------------------------------------------------------
+
+def refit_rmi(
+    old: RMIndex,
+    old_keys: KeySet,
+    new_keys: KeySet,
+    *,
+    config: Optional[RMIConfig] = None,
+    verbose: bool = False,
+) -> Tuple[RMIndex, int]:
+    """Warm-start rebuild after the key set changed (e.g. a delta-buffer
+    compaction merged inserts/deletes into the base array).
+
+    Stage 0 is reused verbatim — no gradient steps — with its input
+    layer affine-rescaled for the new normalization constants and its
+    output layer scaled by n_new/n_old.  Stage-1 leaves whose spans hold
+    exactly the same raw keys as before (merely shifted by upstream
+    inserts/deletes) keep their learned slope, with the intercept
+    translated by the shift; only changed leaves get fresh fits.  Error
+    bounds are recomputed over *all* keys by `_finalize_rmi`, so the
+    lookup guarantee never depends on the change detection — a missed
+    or spurious "clean" verdict costs fit quality, not correctness.
+
+    Returns (index, num_leaves_refit).  Scalar keys only, and the leaf
+    count must match `old`; callers fall back to `build_rmi` otherwise.
+    """
+    cfg = config or old.config
+    if old.in_dim != 1 or new_keys.norm.ndim != 1:
+        raise ValueError("refit_rmi supports scalar keys only")
+    if cfg.num_leaves != old.num_leaves:
+        raise ValueError("refit_rmi needs an unchanged leaf count")
+
+    norm = new_keys.norm
+    n = new_keys.n
+    n_old = old.n
+    m = cfg.num_leaves
+    y = np.arange(n, dtype=np.float32)
+
+    # affine map between normalization frames: x_old = a * x_new + c
+    span_old = old_keys.hi - old_keys.lo
+    span_new = new_keys.hi - new_keys.lo
+    a = span_new / span_old
+    c = (new_keys.lo - old_keys.lo) / span_old
+
+    s0 = {k: np.asarray(v, np.float64) for k, v in old.stage0_params.items()}
+    n_layers = len(s0) // 2
+    s0["b0"] = s0["b0"] + c * s0["w0"][0]
+    s0["w0"] = s0["w0"] * a
+    last = n_layers - 1
+    r = n / n_old  # uniform-growth output correction
+    s0[f"w{last}"] = s0[f"w{last}"] * r
+    s0[f"b{last}"] = s0[f"b{last}"] * r
+    s0 = {k: v.astype(np.float32) for k, v in s0.items()}
+
+    seg = stage0_segments(s0, norm, n=n, m=m)
+    cnt = np.bincount(seg, minlength=m).astype(np.float64)
+    seg_lo = np.full(m, n, np.int64)
+    seg_hi = np.full(m, -1, np.int64)
+    pos_idx = np.arange(n, dtype=np.int64)
+    np.minimum.at(seg_lo, seg, pos_idx)
+    np.maximum.at(seg_hi, seg, pos_idx)
+
+    # fresh fits everywhere (vectorized bincount passes — the cheap part),
+    # then carry over clean leaves
+    slope, intercept, _ = segmented_linear_fit(norm, y, seg, m)
+    leaf_w = slope.astype(np.float64)
+    leaf_b = intercept.astype(np.float64)
+
+    old_raw, new_raw = old_keys.raw, new_keys.raw
+    old_lo = old.seg_lo.astype(np.int64)
+    old_hi = old.seg_hi.astype(np.int64)
+    num_refit = 0
+    for leaf in np.nonzero(cnt > 0)[0]:
+        nlo, nhi = seg_lo[leaf], seg_hi[leaf]
+        olo, ohi = old_lo[leaf], old_hi[leaf]
+        if (
+            nhi - nlo == ohi - olo
+            and np.array_equal(new_raw[nlo : nhi + 1], old_raw[olo : ohi + 1])
+        ):
+            # identical keys, uniformly shifted positions: rescale params
+            w = float(old.leaf_w[leaf])
+            leaf_w[leaf] = w * a
+            leaf_b[leaf] = float(old.leaf_b[leaf]) + w * c + float(nlo - olo)
+        else:
+            num_refit += 1
+
+    idx = _finalize_rmi(
+        cfg, n, 1, s0, leaf_w.astype(np.float32), leaf_b.astype(np.float32),
+        cnt, norm, y, seg, verbose=False,
+    )
+    if verbose:
+        print(
+            f"RMI refit: n={n_old}->{n} leaves_refit={num_refit}/{m} "
+            f"max_window={idx.max_window}"
+        )
+    return idx, num_refit
 
 
 # --------------------------------------------------------------------------

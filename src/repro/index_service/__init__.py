@@ -1,0 +1,35 @@
+"""Writable learned indexes: delta buffers, background re-train,
+versioned snapshot swap (the paper's §3.3 inserts/updates challenge).
+
+Public API:
+  Write path:    DeltaBuffer (staging), Compactor / CompactionStats
+  Consistency:   IndexSnapshot, VersionManager, build_snapshot
+  Front end:     IndexService, ServiceConfig — batched mixed
+                 get/range/insert/delete/contains ops
+"""
+
+from repro.index_service.compact import (
+    CompactionStats,
+    Compactor,
+    merge_delta,
+)
+from repro.index_service.delta import (
+    DeltaBuffer,
+    combine_for_device,
+    count_less,
+    live_mask,
+    member,
+)
+from repro.index_service.service import IndexService, ServiceConfig
+from repro.index_service.snapshot import (
+    IndexSnapshot,
+    VersionManager,
+    build_snapshot,
+)
+
+__all__ = [
+    "CompactionStats", "Compactor", "merge_delta",
+    "DeltaBuffer", "combine_for_device", "count_less", "live_mask", "member",
+    "IndexService", "ServiceConfig",
+    "IndexSnapshot", "VersionManager", "build_snapshot",
+]

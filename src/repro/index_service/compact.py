@@ -1,0 +1,109 @@
+"""Compactor: merge a frozen delta into the base array and publish a
+new snapshot.
+
+The merge is the LSM minor-compaction step specialized to one level:
+tombstoned base keys are dropped, staged inserts are woven in (with
+their values, when the index carries a payload), and the RMI is rebuilt
+through the warm-start path (`refit_rmi` via `build_snapshot`) — the
+trained stage-0 model is reused and only the leaves whose key content
+changed are refit, so compaction cost is dominated by the O(n) merge,
+not by model training.
+
+Compaction runs on whatever thread calls it (the service wraps it in a
+background worker); it touches only the frozen delta and the old
+snapshot, both immutable during the run, so no locks are needed here.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.core.rmi import RMIConfig
+from repro.index_service.delta import DeltaBuffer
+from repro.index_service.snapshot import IndexSnapshot, build_snapshot
+
+
+@dataclasses.dataclass
+class CompactionStats:
+    version: int
+    n_before: int
+    n_after: int
+    n_inserts: int
+    n_deletes: int
+    leaves_refit: int       # -1 = cold rebuild (warm path unavailable)
+    seconds: float
+
+
+def merge_delta(
+    snap: IndexSnapshot, delta: DeltaBuffer
+) -> Tuple[np.ndarray, Optional[np.ndarray]]:
+    """(merged_keys, merged_vals): base minus tombstones, plus staged
+    inserts.  Both inputs sorted; output sorted unique."""
+    base = snap.keys.raw
+    keep = np.ones(base.size, bool)
+    if delta.del_keys.size:
+        hit = np.searchsorted(delta.del_keys, base)
+        hitc = np.clip(hit, 0, delta.del_keys.size - 1)
+        keep = delta.del_keys[hitc] != base
+    kept = base[keep]
+    merged = np.concatenate([kept, delta.ins_keys])
+    order = np.argsort(merged, kind="stable")
+    merged = merged[order]
+    vals = None
+    if snap.vals is not None:
+        vals = np.concatenate([snap.vals[keep], delta.ins_vals])[order]
+    return merged, vals
+
+
+class Compactor:
+    """Builds successor snapshots.  ``min_keys`` guards the degenerate
+    all-deleted case (an index needs >= 2 distinct keys)."""
+
+    def __init__(
+        self,
+        *,
+        config: Optional[RMIConfig] = None,
+        bloom_fpr: Optional[float] = None,
+        warm: bool = True,
+        min_keys: int = 2,
+        verbose: bool = False,
+    ):
+        self.config = config
+        self.bloom_fpr = bloom_fpr
+        self.warm = warm
+        self.min_keys = min_keys
+        self.verbose = verbose
+
+    def compact(
+        self, snap: IndexSnapshot, frozen: DeltaBuffer
+    ) -> Tuple[IndexSnapshot, CompactionStats]:
+        t0 = time.perf_counter()
+        merged, vals = merge_delta(snap, frozen)
+        if merged.size < self.min_keys:
+            raise ValueError(
+                f"compaction would leave {merged.size} keys "
+                f"(< {self.min_keys}); retain the delta instead"
+            )
+        new, refit = build_snapshot(
+            merged,
+            vals=vals,
+            config=self.config or snap.index.config,
+            version=snap.version + 1,
+            bloom_fpr=self.bloom_fpr,
+            warm_from=snap if self.warm else None,
+            verbose=self.verbose,
+        )
+        stats = CompactionStats(
+            version=new.version,
+            n_before=snap.n,
+            n_after=new.n,
+            n_inserts=frozen.num_inserts,
+            n_deletes=frozen.num_deletes,
+            leaves_refit=refit,
+            seconds=time.perf_counter() - t0,
+        )
+        return new, stats

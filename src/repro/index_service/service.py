@@ -1,0 +1,445 @@
+"""Writable learned-index service: batched mixed-op front end.
+
+Composes the subsystem: a versioned base snapshot (RMI + sorted keys +
+Bloom filter), an active delta buffer absorbing writes, an optional
+frozen delta mid-compaction, and a compactor that publishes successor
+snapshots through the version manager's atomic swap — on a background
+thread when configured, so reads and writes keep flowing while the RMI
+warm-rebuilds.
+
+Request routing (paper section in parentheses):
+
+  * ``get`` / ``range_lookup``  — RMI bounded search over the base (§3)
+    fused with one branchless binary search over the staged delta, then
+    an exact host refinement (float32-collision proof);
+  * ``contains``                — Bloom screen over the base (§5) short-
+    circuits definite misses before any index probe; delta levels are
+    consulted exactly;
+  * ``insert`` / ``delete``     — staged into the active delta (§3.3's
+    open problem, LSM-style); compaction merges them into the next
+    snapshot version.
+
+Every public op records count/latency; ``stats_summary()`` reports
+ns/op, hit rates, Bloom screens, and compaction telemetry.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.rmi import RMIConfig
+from repro.index_service.compact import CompactionStats, Compactor
+from repro.index_service.delta import (
+    DeltaBuffer,
+    combine_for_device,
+    count_less,
+    live_mask,
+    member,
+)
+from repro.index_service.snapshot import VersionManager, build_snapshot
+
+
+@dataclasses.dataclass
+class ServiceConfig:
+    delta_capacity: int = 4096
+    compact_fraction: float = 0.75   # delta fill that triggers compaction
+    bloom_fpr: Optional[float] = None  # None = no existence screen
+    strategy: str = "binary"         # §3.4 search strategy for the base
+    background: bool = False         # compact on a worker thread
+    snapshot_dir: Optional[str] = None
+    keep_snapshots: int = 2
+    rmi: Optional[RMIConfig] = None  # None = linear stage-0 sized to n
+
+
+def _default_rmi(n: int) -> RMIConfig:
+    return RMIConfig(
+        num_leaves=max(16, n // 64), stage0_hidden=(), stage0_train_steps=0
+    )
+
+
+class IndexService:
+    def __init__(
+        self,
+        raw_keys: np.ndarray,
+        config: Optional[ServiceConfig] = None,
+        *,
+        vals: Optional[np.ndarray] = None,
+        _manager: Optional[VersionManager] = None,
+    ):
+        self.config = config or ServiceConfig()
+        cfg = self.config
+        if _manager is not None:
+            self._mgr = _manager
+        else:
+            raw = np.asarray(raw_keys, np.float64)
+            if vals is None:
+                raw = np.unique(raw)
+            else:
+                vals = np.asarray(vals, np.int64)
+                order = np.argsort(raw, kind="stable")
+                raw, vals = raw[order], vals[order]
+                if raw.size and (np.diff(raw) == 0).any():
+                    raise ValueError("duplicate keys with distinct values")
+            snap, _ = build_snapshot(
+                raw,
+                vals=vals,
+                config=cfg.rmi or _default_rmi(raw.size),
+                version=0,
+                bloom_fpr=cfg.bloom_fpr,
+            )
+            self._mgr = VersionManager(
+                snap, directory=cfg.snapshot_dir, keep=cfg.keep_snapshots
+            )
+            if cfg.snapshot_dir is not None:
+                self._mgr.save_current()
+        self._compactor = Compactor(
+            config=cfg.rmi, bloom_fpr=cfg.bloom_fpr, warm=True
+        )
+        self._active = DeltaBuffer(cfg.delta_capacity)
+        self._frozen: Optional[DeltaBuffer] = None
+        self._lock = threading.RLock()
+        self._worker: Optional[threading.Thread] = None
+        self._worker_error: Optional[BaseException] = None
+        self._device_cache = None
+        self.stats: Dict[str, float] = {
+            "get": 0, "get_s": 0.0, "get_hits": 0,
+            "contains": 0, "contains_s": 0.0, "contains_hits": 0,
+            "range": 0, "range_s": 0.0,
+            "insert": 0, "insert_s": 0.0, "insert_applied": 0,
+            "delete": 0, "delete_s": 0.0, "delete_applied": 0,
+            "bloom_screened": 0,
+            "compactions": 0, "compact_s": 0.0,
+            "leaves_refit": 0, "cold_builds": 0,
+        }
+        self.compaction_log: List[CompactionStats] = []
+
+    @classmethod
+    def load(
+        cls, directory: str, config: Optional[ServiceConfig] = None
+    ) -> "IndexService":
+        """Restart path: reload the latest on-disk snapshot version."""
+        config = config or ServiceConfig(snapshot_dir=directory)
+        mgr = VersionManager.load_latest(
+            directory, keep=config.keep_snapshots
+        )
+        mgr.directory = config.snapshot_dir
+        return cls(np.empty(0), config, _manager=mgr)
+
+    # ---- introspection ---------------------------------------------------
+    @property
+    def version(self) -> int:
+        return self._mgr.version
+
+    @property
+    def num_keys(self) -> int:
+        """Live key count: base minus tombstones plus staged inserts."""
+        snap, frozen, active = self._state()
+        n = snap.n
+        for level in (frozen, active):
+            if level is not None:
+                n += level.num_inserts - level.num_deletes
+        return n
+
+    @property
+    def delta_fill(self) -> float:
+        return self._active.fill
+
+    def _state(self):
+        with self._lock:
+            return self._mgr.current(), self._frozen, self._active
+
+    def _capture(self):
+        """One consistent (snapshot, frozen, active, device delta) view.
+
+        Taken under the lock so a compaction commit cannot pair an old
+        snapshot with a post-swap delta: either we see (old snapshot,
+        frozen delta) or (new snapshot, drained delta) — the same
+        logical key set either way.  The returned refs stay valid after
+        release because snapshots are immutable and the frozen buffer
+        is never mutated once frozen (double buffering keeps the old
+        snapshot's arrays alive through the swap)."""
+        with self._lock:
+            snap, frozen, active = self._mgr.current(), self._frozen, self._active
+            cache = self._device_cache
+            if cache is None or cache[0] is not snap:
+                dk, dp = combine_for_device(frozen, active, snap.keys.normalize)
+                cache = (snap, jnp.asarray(dk), jnp.asarray(dp))
+                self._device_cache = cache
+            return snap, frozen, active, cache[1], cache[2]
+
+    # ---- reads -----------------------------------------------------------
+    def get(self, keys) -> Tuple[np.ndarray, np.ndarray]:
+        """Exact merged lower-bound ranks + presence mask for raw keys.
+
+        For a present key the rank is its exact position in the live
+        sorted key set; for an absent key it is the insertion point."""
+        t0 = time.perf_counter()
+        q = np.atleast_1d(np.asarray(keys, np.float64))
+        rank, live = self._rank_exact(q)
+        self.stats["get"] += q.size
+        self.stats["get_hits"] += int(live.sum())
+        self.stats["get_s"] += time.perf_counter() - t0
+        return rank, live
+
+    def lookup_batch(self, keys) -> jnp.ndarray:
+        """Device fast path: jitted RMI + fused-delta merged ranks, no
+        host refinement (exact whenever float32 normalization is
+        injective over base+delta keys — the benchmark hot path)."""
+        snap, _, _, dk, dp = self._capture()
+        qn = jnp.asarray(snap.keys.normalize(np.asarray(keys, np.float64)))
+        _, rank = snap.merged_lookup_fn(self.config.strategy)(qn, dk, dp)
+        return rank
+
+    def contains(self, keys) -> np.ndarray:
+        """Existence check: Bloom screen (base) + exact delta overlay."""
+        t0 = time.perf_counter()
+        q = np.atleast_1d(np.asarray(keys, np.float64))
+        snap, frozen, active, _, _ = self._capture()
+        mentioned = np.zeros(q.shape, bool)
+        for level in (frozen, active):
+            if level is not None:
+                mentioned |= member(level.ins_keys, q)
+                mentioned |= member(level.del_keys, q)
+        if snap.bloom is not None:
+            maybe = snap.bloom.contains(q) | mentioned
+            self.stats["bloom_screened"] += int((~maybe).sum())
+        else:
+            maybe = np.ones(q.shape, bool)
+        out = np.zeros(q.shape, bool)
+        if maybe.any():
+            _, live = self._rank_exact(q[maybe])
+            out[maybe] = live
+        self.stats["contains"] += q.size
+        self.stats["contains_hits"] += int(out.sum())
+        self.stats["contains_s"] += time.perf_counter() - t0
+        return out
+
+    def range_lookup(self, lo: float, hi: float) -> Tuple[int, int]:
+        """[lo, hi) as merged ranks: (first rank >= lo, first rank >= hi);
+        the difference is the number of live keys in the interval."""
+        t0 = time.perf_counter()
+        ranks, _ = self._rank_exact(np.array([lo, hi], np.float64))
+        self.stats["range"] += 1
+        self.stats["range_s"] += time.perf_counter() - t0
+        return int(ranks[0]), int(ranks[1])
+
+    def _rank_exact(self, q: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        snap, frozen, active, dk, dp = self._capture()
+        qn = jnp.asarray(snap.keys.normalize(q))
+        b, _ = snap.merged_lookup_fn(self.config.strategy)(qn, dk, dp)
+        base_rank, in_base = snap.refine_base_rank(q, np.asarray(b))
+        rank = base_rank + count_less(frozen, active, q)
+        live = live_mask(in_base, frozen, active, q)
+        return rank, live
+
+    # ---- writes ----------------------------------------------------------
+    def insert(self, keys, vals=None) -> int:
+        """Stage inserts; returns how many changed the live key set.
+        Batches stage in one merge per capacity chunk, compacting
+        between chunks when the delta fills."""
+        t0 = time.perf_counter()
+        q = np.atleast_1d(np.asarray(keys, np.float64))
+        v = (np.zeros(q.shape, np.int64) if vals is None
+             else np.atleast_1d(np.asarray(vals, np.int64)))
+        applied = self._staged(
+            q, lambda c, lb: self._active.stage_insert_many(q[c], lb, v[c])
+        )
+        self.stats["insert"] += q.size
+        self.stats["insert_applied"] += applied
+        self.stats["insert_s"] += time.perf_counter() - t0
+        return applied
+
+    def delete(self, keys) -> int:
+        """Stage deletes; returns how many keys went from live to dead."""
+        t0 = time.perf_counter()
+        q = np.atleast_1d(np.asarray(keys, np.float64))
+        applied = self._staged(
+            q, lambda c, lb: self._active.stage_delete_many(q[c], lb)
+        )
+        self.stats["delete"] += q.size
+        self.stats["delete_applied"] += applied
+        self.stats["delete_s"] += time.perf_counter() - t0
+        return applied
+
+    def _staged(self, q: np.ndarray, stage) -> int:
+        """Chunk a write batch by remaining delta room and stage each
+        chunk in one vectorized merge."""
+        applied, pos = 0, 0
+        while pos < q.size:
+            self._ensure_capacity()
+            with self._lock:
+                room = self.config.delta_capacity - len(self._active)
+            if room <= 0:
+                self.maybe_compact(wait=True)
+                continue
+            chunk = slice(pos, pos + room)
+            with self._lock:
+                applied += stage(chunk, self._live_below_many(q[chunk]))
+                self._device_cache = None
+            pos += room
+        return applied
+
+    def _live_below_many(self, q: np.ndarray) -> np.ndarray:
+        """Liveness in base + frozen (the levels under the active delta).
+        Callers hold the lock, so (snapshot, frozen) are coherent."""
+        snap = self._mgr.current()
+        raw = snap.keys.raw
+        i = np.clip(np.searchsorted(raw, q), 0, raw.size - 1)
+        live = raw[i] == q
+        if self._frozen is not None:
+            ins = member(self._frozen.ins_keys, q)
+            dead = member(self._frozen.del_keys, q)
+            live = np.where(ins, True, np.where(dead, False, live))
+        return live
+
+    # ---- mixed batched front end ----------------------------------------
+    def execute(self, ops: Sequence[Tuple]) -> List:
+        """Run a mixed batch of ("insert", keys[, vals]) / ("delete",
+        keys) / ("get", keys) / ("contains", keys) / ("range", lo, hi)
+        requests in order; returns one result per op."""
+        dispatch = {
+            "insert": self.insert,
+            "delete": self.delete,
+            "get": self.get,
+            "contains": self.contains,
+            "range": self.range_lookup,
+        }
+        out = []
+        for kind, *args in ops:
+            if kind not in dispatch:
+                raise ValueError(f"unknown op {kind!r}")
+            out.append(dispatch[kind](*args))
+        return out
+
+    # ---- compaction ------------------------------------------------------
+    def _ensure_capacity(self) -> None:
+        self._raise_worker_error()
+        trigger = self.config.compact_fraction * self.config.delta_capacity
+        if len(self._active) >= trigger:
+            # block only when staging could otherwise overflow
+            self.maybe_compact(wait=len(self._active) >= self.config.delta_capacity - 2)
+
+    def maybe_compact(self, wait: bool = False) -> bool:
+        """Freeze the active delta and compact it into a new snapshot
+        version.  Returns True if a compaction was started (or ran)."""
+        if self._frozen is not None:  # one compaction in flight at a time
+            if not wait:
+                return False
+            self._join_worker()
+            if self._frozen is not None:  # inline compaction pending commit
+                self._run_compaction()
+        with self._lock:
+            if len(self._active) == 0:
+                return False
+            self._frozen = self._active
+            self._active = DeltaBuffer(self.config.delta_capacity)
+            self._device_cache = None
+        if self.config.background and not wait:
+            self._worker = threading.Thread(
+                target=self._run_compaction, daemon=True
+            )
+            self._worker.start()
+        else:
+            self._run_compaction()
+        return True
+
+    def flush(self) -> None:
+        """Drain: wait for in-flight compaction, then compact any
+        remaining staged writes synchronously."""
+        self._join_worker()
+        self.maybe_compact(wait=True)
+        self._raise_worker_error()
+
+    def _run_compaction(self) -> None:
+        try:
+            snap = self._mgr.current()
+            compactor = self._compactor
+            if self.config.rmi is None:
+                # auto-sized leaves: re-size (cold build) when the live
+                # key count drifts past the warm-start regime, else
+                # keys-per-leaf — and with it every search window —
+                # grows without bound
+                est = snap.n + self._frozen.num_inserts - self._frozen.num_deletes
+                target = max(16, est // 64)
+                cur = snap.index.config.num_leaves
+                if not (cur // 2 <= target <= cur * 2):
+                    compactor = Compactor(
+                        config=dataclasses.replace(
+                            snap.index.config, num_leaves=target
+                        ),
+                        bloom_fpr=self.config.bloom_fpr,
+                        warm=False,
+                    )
+            new, stats = compactor.compact(snap, self._frozen)
+            with self._lock:
+                self._mgr.swap(new)
+                self._frozen = None
+                self._device_cache = None
+            self.stats["compactions"] += 1
+            self.stats["compact_s"] += stats.seconds
+            if stats.leaves_refit < 0:
+                self.stats["cold_builds"] += 1
+            else:
+                self.stats["leaves_refit"] += stats.leaves_refit
+            self.compaction_log.append(stats)
+        except BaseException as e:  # surfaced on the caller thread
+            self._worker_error = e
+
+    def _join_worker(self) -> None:
+        w = self._worker
+        if w is not None and w.is_alive():
+            w.join()
+        self._worker = None
+        self._raise_worker_error()
+
+    def _raise_worker_error(self) -> None:
+        if self._worker_error is not None:
+            err, self._worker_error = self._worker_error, None
+            raise RuntimeError("compaction failed") from err
+
+    # ---- persistence -----------------------------------------------------
+    def save(self, directory: Optional[str] = None) -> str:
+        """Compact staged writes and persist the resulting snapshot."""
+        self.flush()
+        if directory is not None:
+            self._mgr.directory = directory
+        return self._mgr.save_current()
+
+    # ---- reporting -------------------------------------------------------
+    def stats_summary(self) -> Dict[str, object]:
+        s = self.stats
+        def per_op(kind):
+            n = s[kind]
+            return {
+                "count": int(n),
+                "ns_per_op": (s[f"{kind}_s"] / n * 1e9) if n else 0.0,
+            }
+        return {
+            "version": self.version,
+            "base_keys": self._mgr.current().n,
+            "live_keys": self.num_keys,
+            "delta_fill": round(self.delta_fill, 4),
+            "get": {**per_op("get"),
+                    "hit_rate": s["get_hits"] / s["get"] if s["get"] else 0.0},
+            "contains": {
+                **per_op("contains"),
+                "hit_rate": (s["contains_hits"] / s["contains"]
+                             if s["contains"] else 0.0),
+                "bloom_screened": int(s["bloom_screened"]),
+            },
+            "range": per_op("range"),
+            "insert": {**per_op("insert"), "applied": int(s["insert_applied"])},
+            "delete": {**per_op("delete"), "applied": int(s["delete_applied"])},
+            "compactions": {
+                "count": int(s["compactions"]),
+                "total_s": round(s["compact_s"], 4),
+                "leaves_refit": int(s["leaves_refit"]),
+                "cold_builds": int(s["cold_builds"]),
+            },
+        }

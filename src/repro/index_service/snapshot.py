@@ -1,0 +1,339 @@
+"""Versioned immutable index snapshots + double-buffered atomic swap.
+
+A snapshot is the unit of consistency for the writable index service:
+one (RMI tree, sorted base keys, max_window) triple plus the optional
+value payload and base Bloom filter, all built together and never
+mutated afterwards.  Batched readers grab ``VersionManager.current()``
+once per batch; because a swap only replaces the *reference* (atomic
+under the GIL) and the previous snapshot is retained as the second
+buffer, an in-flight batch keeps consistent arrays even if a
+compaction publishes mid-batch.
+
+Snapshots serialize to a single ``.npz`` per version
+(``snapshot-000042.npz``), so a restarted service reloads the latest
+version and replays only its delta — restart does not retrain.
+
+Exactness note: device lookups run in the float32 normalized frame,
+where distinct raw keys may collide.  ``refine_base_rank`` converts the
+jitted float32 lower bound into the exact raw-key lower bound with at
+most ``max_dup_run`` vectorized advance steps (the longest run of
+float32-equal normalized keys, computed at build time) plus an exact
+``searchsorted`` fallback for keys absent from the base (which carry no
+RMI window guarantee).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import re
+import threading
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import search as search_lib
+from repro.core.bloom import BloomFilter, build_bloom
+from repro.core.keys import KeySet, make_keyset
+from repro.core.rmi import RMIConfig, RMIndex, build_rmi, refit_rmi, rmi_lookup
+
+_SNAP_RE = re.compile(r"snapshot-(\d+)\.npz$")
+
+
+def _max_dup_run(norm: np.ndarray) -> int:
+    """Longest run of equal float32 normalized keys (>= 1)."""
+    if norm.size < 2:
+        return 1
+    boundaries = np.nonzero(np.diff(norm) > 0)[0]
+    edges = np.concatenate([[-1], boundaries, [norm.size - 1]])
+    return int(np.max(np.diff(edges)))
+
+
+@dataclasses.dataclass
+class IndexSnapshot:
+    """Immutable by convention: nothing mutates a published snapshot;
+    compaction builds a successor and swaps the reference."""
+
+    version: int
+    keys: KeySet
+    index: RMIndex
+    vals: Optional[np.ndarray] = None       # payload aligned with keys.raw
+    bloom: Optional[BloomFilter] = None     # existence screen over base keys
+    max_dup_run: int = 1
+
+    def __post_init__(self):
+        self._compiled: Dict[str, Callable] = {}
+
+    @property
+    def n(self) -> int:
+        return self.keys.n
+
+    # ---- device path -----------------------------------------------------
+    def merged_lookup_fn(self, strategy: str = "binary") -> Callable:
+        """jit fn (q_norm, delta_keys, delta_prefix) -> (base_lb, rank).
+
+        One RMI bounded search over the base plus one fixed-trip
+        branchless lower bound over the fused delta array and a single
+        prefix gather.  Retraces per (snapshot, delta capacity bucket).
+        """
+        fn = self._compiled.get(strategy)
+        if fn is None:
+            tree = self.index.as_pytree()
+            base_norm = jnp.asarray(self.keys.norm)
+            n, m, w = self.index.n, self.index.num_leaves, self.index.max_window
+
+            @jax.jit
+            def merged(q, dkeys, dprefix):
+                b = rmi_lookup(
+                    tree, base_norm, q, n=n, num_leaves=m, max_window=w,
+                    strategy=strategy,
+                )
+                lb = search_lib.lower_bound_full(dkeys, q)
+                return b, b + dprefix[lb]
+
+            fn = self._compiled[strategy] = merged
+        return fn
+
+    def base_lookup_fn(self, strategy: str = "binary") -> Callable:
+        """jit fn (q_norm) -> base lower bound — for callers that
+        resolve the delta host-side (e.g. the KV page table) and would
+        otherwise pay the fused-delta upload for a discarded result."""
+        key = f"base:{strategy}"
+        fn = self._compiled.get(key)
+        if fn is None:
+            tree = self.index.as_pytree()
+            base_norm = jnp.asarray(self.keys.norm)
+            n, m, w = self.index.n, self.index.num_leaves, self.index.max_window
+
+            @jax.jit
+            def base(q):
+                return rmi_lookup(
+                    tree, base_norm, q, n=n, num_leaves=m, max_window=w,
+                    strategy=strategy,
+                )
+
+            fn = self._compiled[key] = base
+        return fn
+
+    # ---- exact host refinement ------------------------------------------
+    def refine_base_rank(
+        self, qraw: np.ndarray, b: np.ndarray
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """(exact lower bound in base raw keys, present-in-base mask)."""
+        raw = self.keys.raw
+        n = raw.size
+        q = np.asarray(qraw, np.float64)
+        i = np.clip(np.asarray(b, np.int64), 0, n)
+        # float32 lower bound trails the raw one by at most max_dup_run
+        for _ in range(self.max_dup_run):
+            c = np.minimum(i, n - 1)
+            step = (raw[c] < q) & (i < n)
+            if not step.any():
+                break
+            i = i + step
+        in_base = (i < n) & (raw[np.minimum(i, n - 1)] == q)
+        miss = ~in_base
+        if miss.any():  # absent keys have no window guarantee: exact fallback
+            i[miss] = np.searchsorted(raw, q[miss], side="left")
+        return i, in_base
+
+    # ---- persistence -----------------------------------------------------
+    def save(self, directory: str) -> str:
+        os.makedirs(directory, exist_ok=True)
+        path = os.path.join(directory, f"snapshot-{self.version:06d}.npz")
+        idx = self.index
+        cfg = idx.config
+        payload = {
+            "version": np.int64(self.version),
+            "raw": self.keys.raw,
+            "key_lo": np.float64(self.keys.lo),
+            "key_hi": np.float64(self.keys.hi),
+            "max_dup_run": np.int64(self.max_dup_run),
+            "leaf_w": idx.leaf_w, "leaf_b": idx.leaf_b,
+            "err_lo": idx.err_lo, "err_hi": idx.err_hi, "sigma": idx.sigma,
+            "is_btree": idx.is_btree, "seg_lo": idx.seg_lo, "seg_hi": idx.seg_hi,
+            "max_window": np.int64(idx.max_window),
+            "cfg_num_leaves": np.int64(cfg.num_leaves),
+            "cfg_hidden": np.asarray(cfg.stage0_hidden, np.int64),
+            "cfg_steps": np.int64(cfg.stage0_train_steps),
+            "cfg_sample": np.int64(cfg.stage0_sample or -1),
+            "cfg_lr": np.float64(cfg.stage0_lr),
+            "cfg_hybrid": np.float64(
+                np.nan if cfg.hybrid_threshold is None else cfg.hybrid_threshold
+            ),
+            "cfg_seed": np.int64(cfg.seed),
+        }
+        for k, v in idx.stage0_params.items():
+            payload[f"s0_{k}"] = v
+        if self.vals is not None:
+            payload["vals"] = self.vals
+        if self.bloom is not None:
+            payload["bloom_words"] = self.bloom.words
+            payload["bloom_bits"] = np.int64(self.bloom.num_bits)
+            payload["bloom_hashes"] = np.int64(self.bloom.num_hashes)
+        tmp = path + ".tmp"
+        with open(tmp, "wb") as f:
+            np.savez_compressed(f, **payload)
+        os.replace(tmp, path)  # crash-safe publish
+        return path
+
+    @staticmethod
+    def load(path: str) -> "IndexSnapshot":
+        with np.load(path) as z:
+            raw = z["raw"]
+            lo, hi = float(z["key_lo"]), float(z["key_hi"])
+            norm = ((raw - lo) / (hi - lo)).astype(np.float32)
+            keys = KeySet(raw=raw, norm=norm, lo=lo, hi=hi)
+            hybrid = float(z["cfg_hybrid"])
+            cfg = RMIConfig(
+                num_leaves=int(z["cfg_num_leaves"]),
+                stage0_hidden=tuple(int(h) for h in z["cfg_hidden"]),
+                stage0_train_steps=int(z["cfg_steps"]),
+                stage0_sample=(None if int(z["cfg_sample"]) < 0
+                               else int(z["cfg_sample"])),
+                stage0_lr=float(z["cfg_lr"]),
+                hybrid_threshold=None if np.isnan(hybrid) else int(hybrid),
+                seed=int(z["cfg_seed"]),
+            )
+            s0 = {
+                k[3:]: z[k] for k in z.files if k.startswith("s0_")
+            }
+            index = RMIndex(
+                config=cfg, n=keys.n, num_leaves=cfg.num_leaves, in_dim=1,
+                stage0_params=s0,
+                leaf_w=z["leaf_w"], leaf_b=z["leaf_b"],
+                err_lo=z["err_lo"], err_hi=z["err_hi"], sigma=z["sigma"],
+                is_btree=z["is_btree"], seg_lo=z["seg_lo"], seg_hi=z["seg_hi"],
+                max_window=int(z["max_window"]),
+            )
+            bloom = None
+            if "bloom_words" in z.files:
+                bloom = BloomFilter(
+                    num_bits=int(z["bloom_bits"]),
+                    num_hashes=int(z["bloom_hashes"]),
+                    words=z["bloom_words"],
+                )
+            vals = z["vals"] if "vals" in z.files else None
+            return IndexSnapshot(
+                version=int(z["version"]), keys=keys, index=index,
+                vals=vals, bloom=bloom, max_dup_run=int(z["max_dup_run"]),
+            )
+
+
+def build_snapshot(
+    raw_keys: np.ndarray,
+    *,
+    vals: Optional[np.ndarray] = None,
+    config: Optional[RMIConfig] = None,
+    version: int = 0,
+    bloom_fpr: Optional[float] = None,
+    warm_from: Optional[IndexSnapshot] = None,
+    verbose: bool = False,
+) -> Tuple[IndexSnapshot, int]:
+    """Build a snapshot over sorted unique raw keys (vals aligned).
+
+    With ``warm_from``, the RMI is rebuilt via `refit_rmi` (stage-0
+    reused, only changed leaves refit); falls back to a cold `build_rmi`
+    when the warm path is incompatible or the resulting search window
+    degrades past 4x the old one.  Returns (snapshot, leaves_refit);
+    leaves_refit is -1 for a cold build.
+    """
+    raw_keys = np.asarray(raw_keys, np.float64)
+    if vals is None:
+        keys = make_keyset(raw_keys)
+    else:
+        if raw_keys.size < 2 or raw_keys[0] == raw_keys[-1]:
+            raise ValueError("need >= 2 distinct keys")
+        lo, hi = float(raw_keys[0]), float(raw_keys[-1])
+        norm = ((raw_keys - lo) / (hi - lo)).astype(np.float32)
+        keys = KeySet(raw=raw_keys, norm=norm, lo=lo, hi=hi)
+    cfg = config or (warm_from.index.config if warm_from else RMIConfig())
+
+    index = None
+    refit = -1
+    if warm_from is not None:
+        try:
+            index, refit = refit_rmi(
+                warm_from.index, warm_from.keys, keys, config=cfg,
+                verbose=verbose,
+            )
+            if index.max_window > max(4 * warm_from.index.max_window, 64):
+                index, refit = None, -1  # fit degraded too far: go cold
+        except ValueError:
+            index = None
+    if index is None:
+        index = build_rmi(keys, cfg, verbose=verbose)
+
+    bloom = None
+    if bloom_fpr is not None:
+        bloom = build_bloom(keys.raw, fpr=bloom_fpr)
+    snap = IndexSnapshot(
+        version=version, keys=keys, index=index, vals=vals, bloom=bloom,
+        max_dup_run=_max_dup_run(keys.norm),
+    )
+    return snap, refit
+
+
+class VersionManager:
+    """Double-buffered atomic snapshot swap + on-disk version history.
+
+    ``current()`` is a single reference read; publishing retains the
+    predecessor (the second buffer) so device arrays backing in-flight
+    batches stay alive until the *next* swap.
+    """
+
+    def __init__(self, snapshot: IndexSnapshot,
+                 directory: Optional[str] = None, keep: int = 2):
+        self._lock = threading.Lock()
+        self._cur = snapshot
+        self._prev: Optional[IndexSnapshot] = None
+        self.directory = directory
+        self.keep = keep
+
+    @property
+    def version(self) -> int:
+        return self._cur.version
+
+    def current(self) -> IndexSnapshot:
+        return self._cur  # atomic reference read
+
+    def previous(self) -> Optional[IndexSnapshot]:
+        return self._prev
+
+    def swap(self, new: IndexSnapshot) -> None:
+        with self._lock:
+            if new.version <= self._cur.version:
+                raise ValueError(
+                    f"version must advance: {new.version} <= {self._cur.version}"
+                )
+            self._prev, self._cur = self._cur, new
+        if self.directory is not None:
+            self.save_current()
+
+    # ---- persistence -----------------------------------------------------
+    def save_current(self) -> str:
+        assert self.directory is not None, "VersionManager has no directory"
+        path = self._cur.save(self.directory)
+        self._gc()
+        return path
+
+    def _gc(self) -> None:
+        snaps = sorted(
+            (f for f in os.listdir(self.directory) if _SNAP_RE.search(f)),
+            key=lambda f: int(_SNAP_RE.search(f).group(1)),
+        )
+        for f in snaps[: -self.keep]:
+            os.remove(os.path.join(self.directory, f))
+
+    @staticmethod
+    def load_latest(directory: str, keep: int = 2) -> "VersionManager":
+        snaps = sorted(
+            (f for f in os.listdir(directory) if _SNAP_RE.search(f)),
+            key=lambda f: int(_SNAP_RE.search(f).group(1)),
+        )
+        if not snaps:
+            raise FileNotFoundError(f"no snapshots under {directory}")
+        snap = IndexSnapshot.load(os.path.join(directory, snaps[-1]))
+        return VersionManager(snap, directory=directory, keep=keep)

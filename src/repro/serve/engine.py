@@ -35,6 +35,8 @@ class Request:
     generated: List[int] = dataclasses.field(default_factory=list)
     slot: int = -1
     done: bool = False
+    # prompt tokens not yet fed to the lockstep decode (set on admission)
+    _pending: List[int] = dataclasses.field(default_factory=list)
 
 
 class ServeEngine:

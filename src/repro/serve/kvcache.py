@@ -11,38 +11,45 @@ allocation table.
 
 The allocator is host-side (allocation is control plane); the *lookup*
 is the data-plane hot path and is jitted (RMI predict + bounded search).
-`benchmarks/paged_kv.py` measures RMI vs binary-search page translation.
+Allocations and frees no longer invalidate the whole index: they stage
+into an `index_service.DeltaBuffer`, translation consults base + delta
+in one merged pass, and the RMI is only rebuilt — warm, via
+`refit_rmi`, reusing every leaf whose key range didn't change — when
+the delta fills (LSM-style minor compaction).  `benchmarks/paged_kv.py`
+measures RMI vs binary-search page translation.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.keys import make_keyset
-from repro.core.rmi import RMIConfig, build_rmi, compile_lookup
+from repro.core.rmi import RMIConfig
+from repro.index_service.compact import Compactor
+from repro.index_service.delta import DeltaBuffer
+from repro.index_service.snapshot import IndexSnapshot, build_snapshot
 
 MAX_PAGES_PER_REQ = 4096
 
 
 @dataclasses.dataclass
 class PagedKVAllocator:
-    """Free-list page allocator + learned page-table index."""
+    """Free-list page allocator + delta-buffered learned page table."""
 
     num_pages: int
     page_size: int
+    delta_capacity: int = 2048
 
     def __post_init__(self):
         self._free = list(range(self.num_pages - 1, -1, -1))
         self._table: Dict[int, int] = {}   # key -> physical page
         self._per_req: Dict[int, List[int]] = {}
-        self._index = None
-        self._lookup = None
-        self._keys = None
+        self._snap: Optional[IndexSnapshot] = None
+        self._delta = DeltaBuffer(self.delta_capacity)
+        self._binary_cache = None
 
     # ---- control plane -------------------------------------------------
     def alloc(self, request_id: int, num_tokens: int) -> List[int]:
@@ -51,17 +58,47 @@ class PagedKVAllocator:
             raise MemoryError("out of KV pages")
         pages = [self._free.pop() for _ in range(n)]
         start = len(self._per_req.get(request_id, []))
-        for i, pg in enumerate(pages):
-            self._table[request_id * MAX_PAGES_PER_REQ + start + i] = pg
+        keys = [request_id * MAX_PAGES_PER_REQ + start + i
+                for i in range(len(pages))]
+        for key, pg in zip(keys, pages):
+            self._table[key] = pg
         self._per_req.setdefault(request_id, []).extend(pages)
-        self._index = None  # table changed -> index stale
+        self._stage_many(keys, pages, insert=True)
+        self._binary_cache = None
         return pages
 
     def free(self, request_id: int) -> None:
+        keys = []
         for i, pg in enumerate(self._per_req.pop(request_id, [])):
-            self._table.pop(request_id * MAX_PAGES_PER_REQ + i, None)
+            key = request_id * MAX_PAGES_PER_REQ + i
+            if self._table.pop(key, None) is not None:
+                keys.append(key)
             self._free.append(pg)
-        self._index = None
+        self._stage_many(keys, None, insert=False)
+        self._binary_cache = None
+
+    def _stage_many(self, keys, vals, *, insert: bool) -> None:
+        """Stage page-table mutations into the delta in one merge per
+        chunk (once an index exists); compact when the buffer fills."""
+        if self._snap is None or not keys:
+            return  # still bootstrapping from the dict table
+        q = np.asarray(keys, np.float64)
+        v = None if vals is None else np.asarray(vals, np.int64)
+        pos = 0
+        while pos < q.size:
+            room = self._delta.capacity - len(self._delta)
+            if room <= 0:
+                self._compact()
+                continue
+            c = slice(pos, pos + room)
+            raw = self._snap.keys.raw
+            i = np.clip(np.searchsorted(raw, q[c]), 0, raw.size - 1)
+            live_below = raw[i] == q[c]
+            if insert:
+                self._delta.stage_insert_many(q[c], live_below, v[c])
+            else:
+                self._delta.stage_delete_many(q[c], live_below)
+            pos += room
 
     @property
     def num_allocated(self) -> int:
@@ -69,52 +106,74 @@ class PagedKVAllocator:
 
     # ---- data plane ------------------------------------------------------
     def rebuild_index(self, *, num_leaves: Optional[int] = None):
-        """Sorted (key -> physical) arrays + RMI over the keys.  Called
-        once per batching epoch (table mutates between, not during,
-        decode bursts)."""
-        items = sorted(self._table.items())
-        keys = np.array([k for k, _ in items], np.float64)
-        vals = np.array([v for _, v in items], np.int32)
-        self._keys = make_keyset(keys)
-        self._vals = vals  # already sorted by key
-        cfg = RMIConfig(
-            num_leaves=num_leaves or max(16, len(keys) // 64),
-            stage0_hidden=(),
-            stage0_train_steps=0,
-        )
-        self._index = build_rmi(self._keys, cfg)
-        self._lookup = compile_lookup(self._index, self._keys)
+        """Publish a snapshot of the current table: cold-build the first
+        time, warm compaction (stage-0 + unchanged leaves reused)
+        afterwards."""
+        if self._snap is None or num_leaves is not None:
+            items = sorted(self._table.items())
+            keys = np.array([k for k, _ in items], np.float64)
+            vals = np.array([v for _, v in items], np.int64)
+            cfg = RMIConfig(
+                num_leaves=num_leaves or max(16, len(keys) // 64),
+                stage0_hidden=(),
+                stage0_train_steps=0,
+            )
+            self._snap, _ = build_snapshot(keys, vals=vals, config=cfg)
+            self._delta.clear()
+        elif len(self._delta):
+            self._compact()
+
+    def _compact(self) -> None:
+        old = self._snap
+        target = max(16, (old.n + self._delta.num_inserts) // 64)
+        cfg = old.index.config
+        if not (cfg.num_leaves // 2 <= target <= cfg.num_leaves * 2):
+            # table size drifted past the warm-start regime: re-size leaves
+            self._snap = None
+            self.rebuild_index(num_leaves=target)
+            return
+        compactor = Compactor(config=cfg, warm=True)
+        self._snap, _ = compactor.compact(old, self._delta)
+        self._delta.clear()
 
     def translate(self, request_ids: np.ndarray, logical_pages: np.ndarray) -> np.ndarray:
-        """Batched (request, logical) -> physical page via the RMI.
+        """Batched (request, logical) -> physical page: RMI over the
+        base snapshot merged with the staged delta.
 
-        The RMI search runs in float32; at >2^24 distinct keys adjacent
-        keys can collide in the normalized representation, so an exact
-        integer-key match over a small window around the returned index
-        pins the answer (exact, not heuristic — the window guarantee
-        plus collision bound ±3 keys per f32 value)."""
-        if self._index is None:
+        The RMI search runs in float32; `refine_base_rank` converts its
+        result to the exact integer-key position (bounded advance over
+        float32-duplicate runs), so the answer is exact, not heuristic."""
+        if self._snap is None:
             self.rebuild_index()
-        raw_i = (
+        snap, delta = self._snap, self._delta
+        raw_q = (
             request_ids.astype(np.int64) * MAX_PAGES_PER_REQ
             + logical_pages.astype(np.int64)
-        )
-        qn = jnp.asarray(self._keys.normalize(raw_i.astype(np.float64)))
-        idx = np.asarray(self._lookup(qn)).astype(np.int64)
-        n = self._keys.n
-        keys_i = self._keys.raw.astype(np.int64)
-        best = np.clip(idx, 0, n - 1)
-        for off in (-3, -2, -1, 1, 2, 3):
-            cand = np.clip(idx + off, 0, n - 1)
-            best = np.where(keys_i[best] == raw_i, best, cand)
-        return self._vals[np.where(keys_i[best] == raw_i, best,
-                                   np.clip(idx, 0, n - 1))]
+        ).astype(np.float64)
+
+        # the delta side is resolved host-side (it is a value lookup,
+        # not a rank), so only the base RMI search runs on device
+        qn = jnp.asarray(snap.keys.normalize(raw_q))
+        b = snap.base_lookup_fn("binary")(qn)
+        idx, in_base = snap.refine_base_rank(raw_q, np.asarray(b))
+
+        out = snap.vals[np.clip(idx, 0, snap.n - 1)]
+        in_ins, ins_vals = delta.lookup_value(raw_q)
+        out = np.where(in_ins, ins_vals, out)
+        return out
 
     def translate_binary(self, request_ids, logical_pages) -> np.ndarray:
-        """Baseline: numpy searchsorted over the same table."""
+        """Baseline: numpy searchsorted over the same (live) table."""
         raw = (
             request_ids.astype(np.int64) * MAX_PAGES_PER_REQ
             + logical_pages.astype(np.int64)
         ).astype(np.float64)
-        idx = np.searchsorted(self._keys.raw, raw)
-        return self._vals[np.clip(idx, 0, len(self._vals) - 1)]
+        if self._binary_cache is None:
+            items = sorted(self._table.items())
+            self._binary_cache = (
+                np.array([k for k, _ in items], np.float64),
+                np.array([v for _, v in items], np.int64),
+            )
+        keys, vals = self._binary_cache
+        idx = np.clip(np.searchsorted(keys, raw), 0, len(vals) - 1)
+        return vals[idx]

@@ -1,0 +1,133 @@
+"""Deterministic stand-in for `hypothesis`, used only when the real
+package is absent (the CI/dev extra pins it; bare containers may not
+have it).
+
+Implements exactly the subset this suite uses — ``given``, ``settings``
+and the ``strategies`` functions ``floats``, ``integers``, ``lists``,
+``text``, ``characters`` — as a seeded random-example runner.  No
+shrinking, no database, no adaptive search: each ``@given`` test runs
+``max_examples`` draws from a fixed-seed PRNG, so failures reproduce
+bit-for-bit across runs.  Edge values (min, max, 0) are drawn with
+elevated probability to keep some of hypothesis's boundary-probing
+value.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import types
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng: random.Random):
+        return self._draw(rng)
+
+
+def _floats(min_value=0.0, max_value=1.0, allow_nan=False,
+            allow_infinity=False, **_):
+    edges = [min_value, max_value]
+    if min_value <= 0.0 <= max_value:
+        edges.append(0.0)
+
+    def draw(rng):
+        if rng.random() < 0.15:
+            return float(rng.choice(edges))
+        return rng.uniform(min_value, max_value)
+
+    return _Strategy(draw)
+
+
+def _integers(min_value=0, max_value=None, **_):
+    hi = (1 << 31) if max_value is None else max_value
+
+    def draw(rng):
+        if rng.random() < 0.15:
+            return int(rng.choice([min_value, hi]))
+        return rng.randint(min_value, hi)
+
+    return _Strategy(draw)
+
+
+def _characters(min_codepoint=32, max_codepoint=126, **_):
+    def draw(rng):
+        return chr(rng.randint(min_codepoint, max_codepoint))
+
+    return _Strategy(draw)
+
+
+def _text(alphabet=None, min_size=0, max_size=20, **_):
+    alpha = alphabet if alphabet is not None else _characters()
+
+    def draw(rng):
+        k = rng.randint(min_size, max_size)
+        return "".join(alpha.draw(rng) for _ in range(k))
+
+    return _Strategy(draw)
+
+
+def _lists(elements, min_size=0, max_size=20, unique=False, **_):
+    def draw(rng):
+        k = rng.randint(min_size, max_size)
+        out, seen = [], set()
+        attempts = 0
+        # uniqueness by rejection; generous budget so min_size is met
+        while len(out) < k and attempts < 100 * (k + 1):
+            attempts += 1
+            v = elements.draw(rng)
+            if unique:
+                if v in seen:
+                    continue
+                seen.add(v)
+            out.append(v)
+        return out
+
+    return _Strategy(draw)
+
+
+strategies = types.ModuleType("hypothesis.strategies")
+strategies.floats = _floats
+strategies.integers = _integers
+strategies.characters = _characters
+strategies.text = _text
+strategies.lists = _lists
+
+_DEFAULT_MAX_EXAMPLES = 25
+
+
+def settings(max_examples=_DEFAULT_MAX_EXAMPLES, deadline=None, **_):
+    """Records max_examples on the decorated function (works whether it
+    is applied above or below @given)."""
+
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*gargs, **gkwargs):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_fallback_max_examples",
+                        getattr(fn, "_fallback_max_examples",
+                                _DEFAULT_MAX_EXAMPLES))
+            rng = random.Random(0xC0FFEE)
+            for _ in range(n):
+                vals = [s.draw(rng) for s in gargs]
+                kw = {k: s.draw(rng) for k, s in gkwargs.items()}
+                fn(*args, *vals, **kw, **kwargs)
+
+        # pytest must not mistake the drawn arguments for fixtures: hide
+        # the wrapped signature and present a zero-arg test function.
+        del wrapper.__wrapped__
+        wrapper.__signature__ = inspect.Signature()
+        wrapper.hypothesis = types.SimpleNamespace(inner_test=fn)
+        return wrapper
+
+    return deco

@@ -1,6 +1,24 @@
+import importlib.util
 import os
+import pathlib
+import sys
 
 # keep benchmark imports cheap inside tests; NEVER set device-count
 # flags here (the dry-run owns that, in its own process).
 os.environ.setdefault("LIX_BENCH_N", "20000")
 os.environ.setdefault("LIX_BENCH_LOOKUPS", "2000")
+
+# Property tests import hypothesis at module scope; without this
+# fallback the whole suite dies at collection on machines that lack it
+# (the dev extra in pyproject.toml installs the real thing).
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    _spec = importlib.util.spec_from_file_location(
+        "hypothesis",
+        pathlib.Path(__file__).with_name("_hypothesis_fallback.py"),
+    )
+    _mod = importlib.util.module_from_spec(_spec)
+    sys.modules["hypothesis"] = _mod
+    _spec.loader.exec_module(_mod)
+    sys.modules["hypothesis.strategies"] = _mod.strategies

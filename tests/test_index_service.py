@@ -1,0 +1,355 @@
+"""Writable index service: correctness under churn, snapshot
+versioning/persistence, and the delta-buffered KV page table.
+
+The load-bearing test is `test_churn_100k_exact_vs_oracle`: >= 100k
+interleaved inserts and deletes with batched lookups (through many
+compactions), every lookup checked against a plain sorted-array oracle.
+"""
+
+import numpy as np
+import pytest
+
+from repro.index_service import (
+    DeltaBuffer,
+    IndexService,
+    IndexSnapshot,
+    ServiceConfig,
+    VersionManager,
+    build_snapshot,
+)
+
+
+# --------------------------------------------------------------------------
+# delta buffer unit semantics
+# --------------------------------------------------------------------------
+
+def test_delta_staging_invariants():
+    d = DeltaBuffer(capacity=64)
+    # insert a key absent from base
+    assert d.stage_insert(5.0, live_below=False, val=11)
+    assert not d.stage_insert(5.0, live_below=False, val=12)  # dup: val refresh
+    found, vals = d.lookup_value(np.array([5.0]))
+    assert found[0] and vals[0] == 12
+    # delete it again: ins entry removed, no tombstone (was not live below)
+    assert d.stage_delete(5.0, live_below=False)
+    assert len(d) == 0
+    # delete a base key -> tombstone; re-delete is a no-op
+    assert d.stage_delete(7.0, live_below=True)
+    assert not d.stage_delete(7.0, live_below=True)
+    assert d.num_deletes == 1
+    # resurrect: tombstone stays, insert entry overrides (contributions cancel)
+    assert d.stage_insert(7.0, live_below=True, val=3)
+    assert d.num_deletes == 1 and d.num_inserts == 1
+    # kill the resurrected key again
+    assert d.stage_delete(7.0, live_below=True)
+    assert d.num_inserts == 0 and d.num_deletes == 1
+    # inserting a key that is live below stages nothing
+    assert not d.stage_insert(9.0, live_below=True)
+
+
+def test_delta_batch_matches_scalar():
+    rng = np.random.default_rng(3)
+    keys = rng.integers(0, 40, 300).astype(np.float64)
+    live = keys % 3 == 0  # arbitrary but key-deterministic "in base" rule
+    ops = rng.random(300) < 0.5
+
+    a = DeltaBuffer(capacity=512)
+    b = DeltaBuffer(capacity=512)
+    for k, lv, ins in zip(keys, live, ops):
+        if ins:
+            a.stage_insert(float(k), bool(lv), int(k))
+        else:
+            a.stage_delete(float(k), bool(lv))
+    # the batched path must agree when applied one op at a time
+    for k, lv, ins in zip(keys, live, ops):
+        if ins:
+            b.stage_insert_many(np.array([k]), np.array([lv]), np.array([int(k)]))
+        else:
+            b.stage_delete_many(np.array([k]), np.array([lv]))
+    np.testing.assert_array_equal(a.ins_keys, b.ins_keys)
+    np.testing.assert_array_equal(a.ins_vals, b.ins_vals)
+    np.testing.assert_array_equal(a.del_keys, b.del_keys)
+
+
+def test_delta_overflow_raises():
+    d = DeltaBuffer(capacity=4)
+    for k in range(4):
+        d.stage_insert(float(k), live_below=False)
+    with pytest.raises(OverflowError):
+        d.stage_insert(99.0, live_below=False)
+
+
+# --------------------------------------------------------------------------
+# the acceptance gate: exactness under heavy churn
+# --------------------------------------------------------------------------
+
+def test_churn_100k_exact_vs_oracle():
+    rng = np.random.default_rng(0)
+    base = np.unique(rng.integers(0, 1 << 48, 30_000).astype(np.float64))
+    svc = IndexService(
+        base, ServiceConfig(delta_capacity=4096, bloom_fpr=0.02)
+    )
+    live = set(base.tolist())
+
+    total_ops = 0
+    batch = 0
+    while total_ops < 100_000:
+        ins = rng.integers(0, 1 << 48, 900).astype(np.float64)
+        svc.insert(ins)
+        live.update(float(k) for k in ins)
+        arr = np.array(sorted(live))
+        dels = rng.choice(arr, 600, replace=False)
+        svc.delete(dels)
+        live.difference_update(float(k) for k in dels)
+        total_ops += 1500
+        batch += 1
+        if batch % 8 == 0:
+            arr = np.array(sorted(live))
+            present = rng.choice(arr, 400, replace=False)
+            absent = rng.integers(0, 1 << 48, 100).astype(np.float64)
+            sample = np.concatenate([present, absent])
+            ranks, found = svc.get(sample)
+            want = np.searchsorted(arr, sample, side="left")
+            assert (ranks == want).all(), "merged rank diverged from oracle"
+            assert (found == np.isin(sample, arr)).all()
+    assert total_ops >= 100_000
+    assert svc.stats["compactions"] >= 1, "churn must have compacted"
+    assert svc.num_keys == len(live)
+    # final full sweep: every live key at its exact oracle position
+    arr = np.array(sorted(live))
+    sample = rng.choice(arr, 5_000, replace=False)
+    ranks, found = svc.get(sample)
+    assert (ranks == np.searchsorted(arr, sample)).all() and found.all()
+    # warm path actually engaged
+    assert svc.stats["compactions"] > svc.stats["cold_builds"]
+
+
+def test_background_compaction_reads_stay_consistent():
+    rng = np.random.default_rng(5)
+    base = np.unique(rng.integers(0, 1 << 44, 15_000).astype(np.float64))
+    svc = IndexService(
+        base, ServiceConfig(delta_capacity=512, background=True)
+    )
+    live = set(base.tolist())
+    for _ in range(10):
+        ins = rng.integers(0, 1 << 44, 300).astype(np.float64)
+        svc.insert(ins)
+        live.update(float(k) for k in ins)
+        arr = np.array(sorted(live))
+        dels = rng.choice(arr, 100, replace=False)
+        svc.delete(dels)
+        live.difference_update(float(k) for k in dels)
+        # lookups race the background compactor
+        arr = np.array(sorted(live))
+        sample = rng.choice(arr, 300, replace=False)
+        ranks, found = svc.get(sample)
+        assert (ranks == np.searchsorted(arr, sample)).all() and found.all()
+    svc.flush()
+    assert svc.num_keys == len(live)
+    assert svc.version == svc.stats["compactions"]
+
+
+def test_contains_routes_through_bloom():
+    rng = np.random.default_rng(9)
+    base = np.unique(rng.integers(0, 1 << 40, 20_000).astype(np.float64))
+    svc = IndexService(base, ServiceConfig(bloom_fpr=0.01))
+    present = rng.choice(base, 500, replace=False)
+    absent = rng.integers(1 << 41, 1 << 42, 500).astype(np.float64)
+    assert svc.contains(present).all()
+    assert not svc.contains(absent).any()
+    assert svc.stats["bloom_screened"] > 0  # the screen did real work
+    # staged writes override the (stale) base bloom
+    svc.insert(absent[:5])
+    svc.delete(present[:5])
+    assert svc.contains(absent[:5]).all()
+    assert not svc.contains(present[:5]).any()
+
+
+def test_range_lookup_counts_live_keys():
+    base = np.arange(2, 10_002, dtype=np.float64)
+    svc = IndexService(base, ServiceConfig(delta_capacity=256))
+    lo, hi = 1000.0, 2000.0
+    r0, r1 = svc.range_lookup(lo, hi)
+    assert r1 - r0 == 1000
+    svc.delete(np.arange(1500, 1600, dtype=np.float64))
+    svc.insert(np.array([1000.5, 1001.5]))
+    r0, r1 = svc.range_lookup(lo, hi)
+    assert r1 - r0 == 1000 - 100 + 2
+
+
+def test_execute_mixed_batch():
+    base = np.arange(0, 5000, dtype=np.float64) * 3.0
+    svc = IndexService(base)
+    res = svc.execute([
+        ("insert", [7.0, 10.0], [70, 100]),
+        ("get", [7.0]),
+        ("contains", [7.0, 8.0]),
+        ("delete", [7.0]),
+        ("contains", [7.0]),
+        ("range", 0.0, 30.0),
+    ])
+    assert res[0] == 2
+    assert res[1][1].all()
+    assert list(res[2]) == [True, False]
+    assert res[3] == 1
+    assert not res[4].any()
+    lo, hi = res[5]
+    assert hi - lo == 11  # 0,3,...,27 plus staged 10.0
+    summary = svc.stats_summary()
+    assert summary["insert"]["count"] == 2
+    assert summary["get"]["hit_rate"] == 1.0
+
+
+# --------------------------------------------------------------------------
+# snapshot versioning + persistence
+# --------------------------------------------------------------------------
+
+def test_snapshot_save_load_lookup_roundtrip(tmp_path):
+    rng = np.random.default_rng(1)
+    base = np.unique(rng.integers(0, 1 << 46, 25_000).astype(np.float64))
+    vals = rng.integers(0, 1 << 30, base.size).astype(np.int64)
+    snap, _ = build_snapshot(base, vals=vals, version=3, bloom_fpr=0.01)
+    path = snap.save(str(tmp_path))
+    back = IndexSnapshot.load(path)
+    assert back.version == 3
+    assert back.max_dup_run == snap.max_dup_run
+    np.testing.assert_array_equal(back.keys.raw, base)
+    np.testing.assert_array_equal(back.vals, vals)
+    assert back.bloom is not None and back.bloom.contains(base).all()
+    # the reloaded RMI answers lookups exactly
+    import jax.numpy as jnp
+    from repro.index_service.delta import combine_for_device
+    dk, dp = combine_for_device(None, None, back.keys.normalize)
+    q = rng.choice(base, 4_000)
+    b, rank = back.merged_lookup_fn()(
+        jnp.asarray(back.keys.normalize(q)), jnp.asarray(dk), jnp.asarray(dp)
+    )
+    idx, in_base = back.refine_base_rank(q, np.asarray(b))
+    assert in_base.all()
+    assert (idx == np.searchsorted(base, q)).all()
+
+
+def test_service_save_load_restart(tmp_path):
+    rng = np.random.default_rng(2)
+    base = np.unique(rng.integers(0, 1 << 40, 10_000).astype(np.float64))
+    svc = IndexService(base, ServiceConfig(
+        delta_capacity=512, snapshot_dir=str(tmp_path), bloom_fpr=0.02
+    ))
+    ins = np.unique(rng.integers(0, 1 << 40, 2_000).astype(np.float64))
+    svc.insert(ins)
+    svc.save()
+    live = np.union1d(base, ins)
+
+    svc2 = IndexService.load(str(tmp_path))
+    assert svc2.version >= 1
+    sample = rng.choice(live, 2_000)
+    ranks, found = svc2.get(sample)
+    assert found.all()
+    assert (ranks == np.searchsorted(live, sample)).all()
+    # restart keeps serving writes
+    svc2.insert(np.array([0.5]))
+    assert svc2.contains(np.array([0.5]))[0]
+
+
+def test_version_manager_swap_is_double_buffered(tmp_path):
+    rng = np.random.default_rng(4)
+    base = np.unique(rng.integers(0, 1 << 40, 8_000).astype(np.float64))
+    svc = IndexService(base, ServiceConfig(delta_capacity=256))
+    # capture an in-flight reader's view (snapshot + device delta)
+    snap, _, _, dk, dp = svc._capture()
+    fn = snap.merged_lookup_fn(svc.config.strategy)
+    q = rng.choice(base, 1_000)
+    import jax.numpy as jnp
+    qn = jnp.asarray(snap.keys.normalize(q))
+    want = np.searchsorted(base, q)
+
+    svc.insert(rng.integers(0, 1 << 40, 300).astype(np.float64))
+    svc.flush()  # publishes a new version
+    assert svc.version > snap.version
+    # the old triple must still answer consistently for the old view
+    b, rank = fn(qn, dk, dp)
+    idx, in_base = snap.refine_base_rank(q, np.asarray(b))
+    assert in_base.all() and (idx == want).all()
+    with pytest.raises(ValueError):
+        svc._mgr.swap(snap)  # versions must advance monotonically
+
+
+def test_valued_service_sorts_input_and_rejects_dup_keys():
+    keys = np.array([50.0, 10.0, 30.0, 20.0, 40.0, 5.0, 100.0, 7.0])
+    vals = np.arange(8)
+    svc = IndexService(keys, vals=vals)
+    ranks, found = svc.get(keys)
+    assert found.all()
+    assert (ranks == np.searchsorted(np.sort(keys), keys)).all()
+    with pytest.raises(ValueError):
+        IndexService(np.array([1.0, 1.0, 2.0]), vals=np.array([1, 2, 3]))
+
+
+def test_compaction_resizes_leaves_as_key_count_drifts():
+    rng = np.random.default_rng(8)
+    base = np.unique(rng.integers(0, 1 << 40, 2_000).astype(np.float64))
+    svc = IndexService(base, ServiceConfig(delta_capacity=4096))
+    leaves0 = svc._mgr.current().index.num_leaves
+    ins = np.unique(rng.integers(0, 1 << 40, 12_000).astype(np.float64))
+    svc.insert(ins)
+    svc.flush()
+    leaves1 = svc._mgr.current().index.num_leaves
+    assert leaves1 > 2 * leaves0  # auto-sized leaves tracked the growth
+    live = np.union1d(base, ins)
+    sample = rng.choice(live, 2_000)
+    ranks, found = svc.get(sample)
+    assert found.all() and (ranks == np.searchsorted(live, sample)).all()
+
+
+def test_compaction_below_min_keys_refuses():
+    svc = IndexService(np.array([1.0, 2.0, 3.0]), ServiceConfig(delta_capacity=64))
+    svc.delete(np.array([1.0, 2.0, 3.0]))
+    with pytest.raises(RuntimeError):
+        svc.flush()
+
+
+# --------------------------------------------------------------------------
+# paged KV allocator: slot recycling under alloc/free churn
+# --------------------------------------------------------------------------
+
+def test_paged_kv_slot_recycling_under_churn():
+    from repro.serve.kvcache import PagedKVAllocator
+
+    rng = np.random.default_rng(0)
+    alloc = PagedKVAllocator(num_pages=2048, page_size=16, delta_capacity=256)
+    next_uid = 0
+    active = []
+    for uid in range(150):
+        alloc.alloc(uid, int(rng.integers(1, 8)) * 16)
+        active.append(uid)
+    next_uid = 150
+    alloc.rebuild_index()
+
+    for round_ in range(30):
+        # free a random third of the active requests (slots recycle)
+        for uid in rng.choice(active, len(active) // 3, replace=False):
+            alloc.free(int(uid))
+            active.remove(uid)
+        # admit new ones into the recycled pages
+        for _ in range(40):
+            alloc.alloc(next_uid, int(rng.integers(1, 8)) * 16)
+            active.append(next_uid)
+            next_uid += 1
+        # the free list never leaks or double-frees
+        assert alloc.num_allocated + len(alloc._free) == alloc.num_pages
+        assert alloc.num_allocated == sum(
+            len(alloc._per_req[u]) for u in active
+        )
+        # merged translation stays exact through staging + compactions
+        req = rng.choice(active, 512)
+        logical = np.array(
+            [rng.integers(0, len(alloc._per_req[r])) for r in req]
+        )
+        got = alloc.translate(req, logical)
+        want = alloc.translate_binary(req, logical)
+        assert (got == want).all(), f"round {round_}: translation diverged"
+
+    # every physical page of a freed request is reusable exactly once
+    pages_before = alloc.num_allocated
+    alloc.free(int(active.pop()))
+    assert alloc.num_allocated < pages_before
