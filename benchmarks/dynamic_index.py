@@ -1,6 +1,6 @@
 """Dynamic-index workload: the writable index service under writes.
 
-Three questions, all ns/lookup CSV rows:
+Four questions, all ns/lookup CSV rows:
 
   1. What does the delta buffer cost readers?  Sweep the staged-write
      fill 0-100% of capacity and time the jitted merged lookup (RMI
@@ -8,9 +8,16 @@ Three questions, all ns/lookup CSV rows:
      against the static RMI baseline on the same key set.  The paper's
      static numbers are the floor; the service must stay within ~2x of
      it at 10% fill to be a serious §3.3 answer.
-  2. What does a mixed 90/10 read/write stream cost end to end
+  2. Does FUSING the delta search into the RMI kernel pay?  At each
+     fill fraction, the two-dispatch merged lookup (`binary`: XLA RMI
+     search + separate delta op) races `pallas_fused` (one pallas_call
+     covering both) and `xla_fused` (the one-XLA-program fallback).
+     On CPU the kernel runs in interpret mode, so its absolute numbers
+     are NOT meaningful there — the row records the dispatch-count
+     comparison for TPU runs, where fusion removes an HBM round-trip.
+  3. What does a mixed 90/10 read/write stream cost end to end
      (staging + merged lookups + any compactions amortized in)?
-  3. Does compaction restore the static rate (post-compaction row)?
+  4. Does compaction restore the static rate (post-compaction row)?
 """
 
 from __future__ import annotations
@@ -22,8 +29,12 @@ from benchmarks.common import BENCH_LOOKUPS, BENCH_N, emit, ns_per_item
 from repro.core import RMIConfig, build_rmi, compile_lookup, make_keyset
 from repro.data import gen_weblogs
 from repro.index_service import IndexService, ServiceConfig
+from repro.kernels.rmi_lookup import default_interpret
 
 DELTA_CAPACITY = 4096
+# interpret-mode pallas is orders of magnitude slower than compiled
+# XLA; keep the fused-vs-two-dispatch comparison batch bounded on CPU
+FUSED_BATCH = 4096
 
 
 def main() -> None:
@@ -64,6 +75,24 @@ def main() -> None:
             t / 1e3,
             f"delta={target};vs_static={t / t_static:.2f}x",
         )
+
+        # ---- fused kernel vs two-dispatch at this fill fraction ----------
+        if pct > 0:
+            bf = min(b, FUSED_BATCH)
+            qf = qn[:bf]
+            t2 = ns_per_item(snap.merged_lookup_fn("binary"), qf, dk, dp,
+                             batch=bf)
+            tx = ns_per_item(snap.merged_lookup_fn("xla_fused"), qf, dk, dp,
+                             batch=bf)
+            tf = ns_per_item(snap.merged_lookup_fn("pallas_fused"), qf, dk,
+                             dp, batch=bf)
+            emit(
+                f"dynamic_index/fused_fill_{pct}pct",
+                tf / 1e3,
+                f"two_dispatch_us={t2 / 1e3:.4f};xla_fused_us={tx / 1e3:.4f};"
+                f"fused_vs_2dispatch={tf / t2:.2f}x;"
+                f"interpret={default_interpret()}",
+            )
 
     # ---- mixed 90/10 read/write stream -----------------------------------
     svc = IndexService(ks.raw, ServiceConfig(

@@ -36,7 +36,8 @@ def main() -> None:
     keys, nonkeys = gen_urls(n_keys, min(3 * n_keys, 150_000))
     key_hashes = _string_hash_u64(keys)
     rng = np.random.default_rng(7)
-    eval_neg = [nonkeys[i] for i in rng.choice(len(nonkeys), 8000, replace=False)]
+    n_eval = min(8000, len(nonkeys))  # tiny LIX_BENCH_N (CI smoke) safe
+    eval_neg = [nonkeys[i] for i in rng.choice(len(nonkeys), n_eval, replace=False)]
 
     for spec_name, spec in SPECS:
         # train once per spec on a subsample; reuse across FPR targets

@@ -1,7 +1,13 @@
-"""Fig 8: search strategies x model size for the string index.
+"""Fig 8: search strategies x model size for the string index, plus
+the scalar-key strategy registry sweep.
 
 Binary vs biased vs biased-quaternary over 1- and 2-hidden-layer RMIs —
 the claim: σ-aware strategies shrink search time when errors are large.
+The scalar section widens the sweep to the full strategy registry
+(`pallas`, `pallas_fused`, `xla_fused` included) so the kernel paths
+are timed against the same oracle-checked XLA searches; on CPU the
+kernels run in interpret mode (absolute ns not meaningful — TPU is the
+target for those rows).
 """
 
 from __future__ import annotations
@@ -14,10 +20,15 @@ from repro.core import (
     RMIConfig,
     build_rmi,
     compile_string_lookup,
+    make_keyset,
     make_vector_keyset,
     tokenize,
 )
-from repro.data import gen_webdocs
+from repro.data import gen_lognormal, gen_webdocs
+from repro.index_service import build_snapshot
+from repro.index_service.delta import combine_for_device
+from repro.index_service.snapshot import MERGED_STRATEGIES
+from repro.kernels.rmi_lookup import default_interpret
 
 
 def main() -> None:
@@ -44,6 +55,28 @@ def main() -> None:
                 f"fig8_search/{depth}_{strategy}", total / 1e3,
                 f"err={idx.mean_abs_err:.0f};exact={exact:.3f}",
             )
+
+    # ---- scalar keys: the full strategy registry, one oracle -------------
+    ks = make_keyset(gen_lognormal(min(BENCH_N, 100_000)))
+    snap, _ = build_snapshot(ks.raw, config=RMIConfig(
+        num_leaves=max(64, ks.n // 64), stage0_hidden=(16,),
+        stage0_train_steps=150,
+    ))
+    dk, dp = combine_for_device(None, None, ks.normalize)
+    dkj, dpj = jnp.asarray(dk), jnp.asarray(dp)
+    bs = min(BENCH_LOOKUPS // 4, 4096, ks.n)
+    sample_s = rng.choice(ks.n, bs)
+    qs = jnp.asarray(ks.norm[sample_s])
+    want = np.searchsorted(ks.norm, ks.norm[sample_s], side="left")
+    for strategy in MERGED_STRATEGIES:
+        fn = snap.merged_lookup_fn(strategy)
+        _, got = fn(qs, dkj, dpj)
+        exact = float((np.asarray(got) == want).mean())
+        total = ns_per_item(fn, qs, dkj, dpj, batch=bs)
+        emit(
+            f"fig8_search/scalar_{strategy}", total / 1e3,
+            f"exact={exact:.3f};interpret={default_interpret()}",
+        )
 
 
 if __name__ == "__main__":

@@ -22,6 +22,7 @@ from repro.index_service.delta import (
 )
 from repro.index_service.service import IndexService, ServiceConfig
 from repro.index_service.snapshot import (
+    MERGED_STRATEGIES,
     IndexSnapshot,
     VersionManager,
     build_snapshot,
@@ -31,5 +32,5 @@ __all__ = [
     "CompactionStats", "Compactor", "merge_delta",
     "DeltaBuffer", "combine_for_device", "count_less", "live_mask", "member",
     "IndexService", "ServiceConfig",
-    "IndexSnapshot", "VersionManager", "build_snapshot",
+    "IndexSnapshot", "MERGED_STRATEGIES", "VersionManager", "build_snapshot",
 ]

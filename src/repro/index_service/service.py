@@ -42,7 +42,11 @@ from repro.index_service.delta import (
     live_mask,
     member,
 )
-from repro.index_service.snapshot import VersionManager, build_snapshot
+from repro.index_service.snapshot import (
+    VersionManager,
+    build_snapshot,
+    validate_strategy,
+)
 
 
 @dataclasses.dataclass
@@ -50,7 +54,7 @@ class ServiceConfig:
     delta_capacity: int = 4096
     compact_fraction: float = 0.75   # delta fill that triggers compaction
     bloom_fpr: Optional[float] = None  # None = no existence screen
-    strategy: str = "binary"         # §3.4 search strategy for the base
+    strategy: str = "binary"         # one of snapshot.MERGED_STRATEGIES
     background: bool = False         # compact on a worker thread
     snapshot_dir: Optional[str] = None
     keep_snapshots: int = 2
@@ -74,6 +78,7 @@ class IndexService:
     ):
         self.config = config or ServiceConfig()
         cfg = self.config
+        validate_strategy(cfg.strategy)
         if _manager is not None:
             self._mgr = _manager
         else:

@@ -38,8 +38,43 @@ from repro.core import search as search_lib
 from repro.core.bloom import BloomFilter, build_bloom
 from repro.core.keys import KeySet, make_keyset
 from repro.core.rmi import RMIConfig, RMIndex, build_rmi, refit_rmi, rmi_lookup
+from repro.kernels import ref as kernels_ref
+from repro.kernels.rmi_lookup import (
+    rmi_lookup_pallas,
+    rmi_merged_lookup_pallas,
+    stage0_flat,
+)
 
 _SNAP_RE = re.compile(r"snapshot-(\d+)\.npz$")
+
+# The lookup strategy registry: every name a Snapshot (and through it
+# IndexService / the KV page table) accepts for base and merged lookups.
+#
+#   binary / biased / quaternary — §3.4 search variants over the base,
+#       lowered through plain XLA; the merged lookup adds a SECOND
+#       dispatch for the delta lower bound + prefix gather.
+#   pallas      — base search via the fused Pallas RMI kernel; the
+#       delta search remains a separate XLA op (two dispatches).
+#   pallas_fused — ONE pallas_call runs stage-0 MLP -> leaf FMA ->
+#       first probe -> bounded base search -> delta lower bound ->
+#       prefix gather without leaving VMEM (interpret mode off-TPU).
+#   xla_fused   — identical-signature pure-XLA fallback for
+#       pallas_fused: same arithmetic, bit-identical results, no
+#       pallas_call.  The parity suite pins all of these to one
+#       np.searchsorted oracle.
+MERGED_STRATEGIES: Tuple[str, ...] = (
+    "binary", "biased", "quaternary", "pallas", "pallas_fused", "xla_fused",
+)
+
+
+def validate_strategy(strategy: str) -> str:
+    """Fail-fast membership check shared by every strategy consumer."""
+    if strategy not in MERGED_STRATEGIES:
+        raise ValueError(
+            f"unknown lookup strategy {strategy!r}; "
+            f"expected one of {MERGED_STRATEGIES}"
+        )
+    return strategy
 
 
 def _max_dup_run(norm: np.ndarray) -> int:
@@ -71,27 +106,68 @@ class IndexSnapshot:
         return self.keys.n
 
     # ---- device path -----------------------------------------------------
+    def _kernel_closure_args(self):
+        """Static (stage0, leaf arrays, hidden) for the kernel paths."""
+        idx = self.index
+        s0 = stage0_flat(idx.stage0_params)
+        arrs = tuple(jnp.asarray(a) for a in
+                     (idx.leaf_w, idx.leaf_b, idx.err_lo, idx.err_hi))
+        return s0, arrs, tuple(idx.config.stage0_hidden)
+
     def merged_lookup_fn(self, strategy: str = "binary") -> Callable:
         """jit fn (q_norm, delta_keys, delta_prefix) -> (base_lb, rank).
 
         One RMI bounded search over the base plus one fixed-trip
         branchless lower bound over the fused delta array and a single
-        prefix gather.  Retraces per (snapshot, delta capacity bucket).
+        prefix gather — as two dispatches (`binary`/`biased`/
+        `quaternary`/`pallas`) or one fused kernel (`pallas_fused`,
+        with `xla_fused` its bit-identical XLA fallback); see
+        MERGED_STRATEGIES.  Retraces per (snapshot, delta capacity
+        bucket) — `combine_for_device` pads the delta to power-of-two
+        buckets so individual writes never retrace.
         """
+        validate_strategy(strategy)
         fn = self._compiled.get(strategy)
         if fn is None:
-            tree = self.index.as_pytree()
             base_norm = jnp.asarray(self.keys.norm)
             n, m, w = self.index.n, self.index.num_leaves, self.index.max_window
+            if strategy in ("pallas_fused", "xla_fused", "pallas"):
+                s0, arrs, hidden = self._kernel_closure_args()
+            if strategy == "pallas_fused":
+                def merged(q, dkeys, dprefix):
+                    # rmi_merged_lookup_pallas is itself jitted (static
+                    # shape args) — one dispatch, two outputs
+                    return rmi_merged_lookup_pallas(
+                        q, s0, *arrs, base_norm, dkeys, dprefix,
+                        hidden=hidden, n=n, num_leaves=m, max_window=w,
+                    )
+            elif strategy == "xla_fused":
+                @jax.jit
+                def merged(q, dkeys, dprefix):
+                    return kernels_ref.rmi_merged_lookup_reference(
+                        q, s0, *arrs, base_norm, dkeys, dprefix,
+                        n=n, num_leaves=m, max_window=w,
+                    )
+            elif strategy == "pallas":
+                @jax.jit
+                def merged(q, dkeys, dprefix):
+                    b = rmi_lookup_pallas(
+                        q, s0, *arrs, base_norm,
+                        hidden=hidden, n=n, num_leaves=m, max_window=w,
+                    )
+                    lb = search_lib.lower_bound_full(dkeys, q)
+                    return b, b + dprefix[lb]
+            else:
+                tree = self.index.as_pytree()
 
-            @jax.jit
-            def merged(q, dkeys, dprefix):
-                b = rmi_lookup(
-                    tree, base_norm, q, n=n, num_leaves=m, max_window=w,
-                    strategy=strategy,
-                )
-                lb = search_lib.lower_bound_full(dkeys, q)
-                return b, b + dprefix[lb]
+                @jax.jit
+                def merged(q, dkeys, dprefix):
+                    b = rmi_lookup(
+                        tree, base_norm, q, n=n, num_leaves=m, max_window=w,
+                        strategy=strategy,
+                    )
+                    lb = search_lib.lower_bound_full(dkeys, q)
+                    return b, b + dprefix[lb]
 
             fn = self._compiled[strategy] = merged
         return fn
@@ -99,20 +175,37 @@ class IndexSnapshot:
     def base_lookup_fn(self, strategy: str = "binary") -> Callable:
         """jit fn (q_norm) -> base lower bound — for callers that
         resolve the delta host-side (e.g. the KV page table) and would
-        otherwise pay the fused-delta upload for a discarded result."""
-        key = f"base:{strategy}"
+        otherwise pay the fused-delta upload for a discarded result.
+        The kernel strategies (`pallas`, `pallas_fused`) both lower to
+        the base RMI kernel here (no delta to fuse); `xla_fused` to the
+        bit-identical `binary` search."""
+        validate_strategy(strategy)
+        # pallas/pallas_fused and binary/xla_fused are pairwise the same
+        # base computation: share one compiled closure
+        alias = {"pallas_fused": "pallas", "xla_fused": "binary"}
+        key = f"base:{alias.get(strategy, strategy)}"
         fn = self._compiled.get(key)
         if fn is None:
-            tree = self.index.as_pytree()
             base_norm = jnp.asarray(self.keys.norm)
             n, m, w = self.index.n, self.index.num_leaves, self.index.max_window
+            if strategy in ("pallas", "pallas_fused"):
+                s0, arrs, hidden = self._kernel_closure_args()
 
-            @jax.jit
-            def base(q):
-                return rmi_lookup(
-                    tree, base_norm, q, n=n, num_leaves=m, max_window=w,
-                    strategy=strategy,
-                )
+                def base(q):
+                    return rmi_lookup_pallas(
+                        q, s0, *arrs, base_norm,
+                        hidden=hidden, n=n, num_leaves=m, max_window=w,
+                    )
+            else:
+                xla_strategy = "binary" if strategy == "xla_fused" else strategy
+                tree = self.index.as_pytree()
+
+                @jax.jit
+                def base(q):
+                    return rmi_lookup(
+                        tree, base_norm, q, n=n, num_leaves=m, max_window=w,
+                        strategy=xla_strategy,
+                    )
 
             fn = self._compiled[key] = base
         return fn

@@ -2,8 +2,10 @@
 
 Each op picks the kernel when it applies (shape/platform) and falls
 back to the pure-jnp reference otherwise; callers never touch
-pallas_call directly.  `interpret` defaults to True because this
-container is CPU-only; on TPU the launcher flips it to False.
+pallas_call directly.  The RMI lookup ops take `interpret=None` and
+auto-select interpret mode off-TPU (`rmi_lookup.default_interpret`);
+the older ops still default `interpret=True` for this CPU container,
+flipped to False by the TPU launcher.
 """
 
 from __future__ import annotations
@@ -15,11 +17,17 @@ from repro.kernels import ref
 from repro.kernels.bloom_probe import bloom_probe_pallas
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.hash_probe import hash_probe_pallas
-from repro.kernels.rmi_lookup import rmi_lookup_pallas, stage0_flat
+from repro.kernels.rmi_lookup import (
+    rmi_lookup_pallas,
+    rmi_merged_lookup_pallas,
+    stage0_flat,
+)
 
 
-def rmi_lookup_op(index, sorted_keys_norm, q_norm, *, block_q=1024, interpret=True):
-    """Batched RMI lookup via the fused kernel.  `index` is an RMIndex."""
+def rmi_lookup_op(index, sorted_keys_norm, q_norm, *, block_q=1024,
+                  interpret=None):
+    """Batched RMI lookup via the fused kernel.  `index` is an RMIndex.
+    ``interpret=None`` auto-selects interpret mode off-TPU."""
     return rmi_lookup_pallas(
         jnp.asarray(q_norm),
         stage0_flat(index.stage0_params),
@@ -28,6 +36,44 @@ def rmi_lookup_op(index, sorted_keys_norm, q_norm, *, block_q=1024, interpret=Tr
         jnp.asarray(index.err_lo),
         jnp.asarray(index.err_hi),
         jnp.asarray(sorted_keys_norm),
+        hidden=tuple(index.config.stage0_hidden),
+        n=index.n,
+        num_leaves=index.num_leaves,
+        max_window=index.max_window,
+        block_q=block_q,
+        interpret=interpret,
+    )
+
+
+def rmi_merged_lookup_op(index, sorted_keys_norm, q_norm, delta_keys,
+                         delta_prefix, *, block_q=1024, interpret=None,
+                         use_kernel=True):
+    """Fused base+delta merged lookup -> (base_lb, merged_rank).
+
+    One kernel dispatch covering the RMI bounded search over the base
+    *and* the delta prefix search (`strategy="pallas_fused"`); with
+    ``use_kernel=False`` the identical-signature XLA fallback runs
+    instead (`strategy="xla_fused"`) — same arithmetic, same results,
+    no pallas_call.
+    """
+    args = (
+        jnp.asarray(q_norm),
+        stage0_flat(index.stage0_params),
+        jnp.asarray(index.leaf_w),
+        jnp.asarray(index.leaf_b),
+        jnp.asarray(index.err_lo),
+        jnp.asarray(index.err_hi),
+        jnp.asarray(sorted_keys_norm),
+        jnp.asarray(delta_keys),
+        jnp.asarray(delta_prefix),
+    )
+    if not use_kernel:
+        return ref.rmi_merged_lookup_reference(
+            *args, n=index.n, num_leaves=index.num_leaves,
+            max_window=index.max_window,
+        )
+    return rmi_merged_lookup_pallas(
+        *args,
         hidden=tuple(index.config.stage0_hidden),
         n=index.n,
         num_leaves=index.num_leaves,

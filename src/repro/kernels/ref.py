@@ -11,6 +11,28 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import search as search_lib
+
+
+def _rmi_predict_flat(
+    q: jax.Array, stage0: tuple, leaf_w: jax.Array, leaf_b: jax.Array,
+    *, n: int, num_leaves: int,
+):
+    """Shared stage-0 MLP -> leaf select -> clipped position, on the
+    flat (w0, b0, ...) param layout the kernels take."""
+    h = q[:, None]
+    nl = len(stage0) // 2
+    for i in range(nl):
+        h = h @ stage0[2 * i] + stage0[2 * i + 1][None, :]
+        if i < nl - 1:
+            h = jnp.maximum(h, 0.0)
+    p0 = h[:, 0]
+    leaf = jnp.clip(
+        jnp.floor(p0 * (num_leaves / n)).astype(jnp.int32), 0, num_leaves - 1
+    )
+    pos = jnp.clip(leaf_w[leaf] * q + leaf_b[leaf], 0.0, float(n - 1))
+    return leaf, pos
+
 
 def rmi_lookup_reference(
     q: jax.Array,
@@ -27,22 +49,48 @@ def rmi_lookup_reference(
     """Exact lower-bound via full searchsorted, but window-clamped the
     same way the kernel is (predictions outside the window behave
     identically)."""
-    h = q[:, None]
-    nl = len(stage0) // 2
-    for i in range(nl):
-        h = h @ stage0[2 * i] + stage0[2 * i + 1][None, :]
-        if i < nl - 1:
-            h = jnp.maximum(h, 0.0)
-    p0 = h[:, 0]
-    leaf = jnp.clip(
-        jnp.floor(p0 * (num_leaves / n)).astype(jnp.int32), 0, num_leaves - 1
+    leaf, pos = _rmi_predict_flat(
+        q, stage0, leaf_w, leaf_b, n=n, num_leaves=num_leaves
     )
-    pos = jnp.clip(leaf_w[leaf] * q + leaf_b[leaf], 0.0, float(n - 1))
     lo = jnp.clip((pos + err_lo[leaf]).astype(jnp.int32), 0, n)
     hi = jnp.clip((pos + err_hi[leaf]).astype(jnp.int32) + 1, 0, n)
     # lower bound within [lo, hi] — oracle via searchsorted then clamp
     full = jnp.searchsorted(sorted_keys, q, side="left").astype(jnp.int32)
     return jnp.clip(full, lo, hi)
+
+
+def rmi_merged_lookup_reference(
+    q: jax.Array,
+    stage0: tuple,
+    leaf_w: jax.Array,
+    leaf_b: jax.Array,
+    err_lo: jax.Array,
+    err_hi: jax.Array,
+    sorted_keys: jax.Array,
+    delta_keys: jax.Array,
+    delta_prefix: jax.Array,
+    *,
+    n: int,
+    num_leaves: int,
+    max_window: int,
+) -> tuple:
+    """XLA fallback for `rmi_merged_lookup_pallas` — identical signature
+    (minus tiling args), identical arithmetic, pure jnp.
+
+    Runs the same stage-0 MLP / leaf FMA / first probe / fixed-trip
+    bounded base search and the same full-range delta lower bound, so
+    its ``(base_lb, merged_rank)`` is bit-identical to the kernel's for
+    *every* query (present, absent, adversarial) — this is the
+    correctness contract the parity suite pins both against.
+    """
+    leaf, pos = _rmi_predict_flat(
+        q, stage0, leaf_w, leaf_b, n=n, num_leaves=num_leaves
+    )
+    base = search_lib.model_binary_search(
+        sorted_keys, q, pos, err_lo[leaf], err_hi[leaf], max_window
+    )
+    dlb = search_lib.lower_bound_full(delta_keys, q)
+    return base, base + delta_prefix[dlb]
 
 
 def bloom_probe_reference(

@@ -1,30 +1,47 @@
-"""Fused RMI lookup Pallas kernel: stage-0 MLP + leaf FMA + bounded search.
+"""Fused RMI lookup Pallas kernels: stage-0 MLP + leaf FMA + bounded
+search, optionally merged with the delta-buffer prefix search.
 
 This is the paper's hot spot (§2.1's back-of-envelope: the model must
 beat ~50 cycles/B-Tree-node) moved to where the paper says it belongs —
-an ML accelerator.  One kernel invocation performs, for a tile of
-queries entirely inside VMEM:
+an ML accelerator.  Two kernels share one body:
+
+``rmi_lookup_pallas`` — the read-only §3 lookup.  One invocation
+performs, for a tile of queries entirely inside VMEM:
 
   1. stage-0 MLP (dense VPU/MXU math),
   2. leaf-model selection (vector gather from the SoA leaf arrays),
   3. leaf FMA -> position + error window,
   4. fixed-trip-count branchless binary search over the sorted keys.
 
+``rmi_merged_lookup_pallas`` — the writable-index hot path (§3.3).
+Steps 1-4 plus, still inside the same kernel invocation:
+
+  5. fixed-trip branchless lower bound over the fused delta key array
+     (staged inserts and tombstones, +inf-padded to a power of two),
+  6. one prefix-weight gather: ``merged = base_lb + prefix[delta_lb]``.
+
+Emitting ``(base_lb, merged_rank)`` from one ``pallas_call`` removes
+the second XLA dispatch and the HBM round-trip for the base lower
+bound that the two-dispatch merged lookup pays — exactly the overhead
+"Benchmarking Learned Indexes" shows erasing learned-index wins.
+
 VMEM budget (v5e ≈ 16 MiB/core): leaf SoA (M ≤ 200k: 4 arrays × 800 KB
-= 3.2 MB) + sorted keys (N ≤ 2M f32 = 8 MB) + query tile. At pod scale
-the sorted array is sharded over chips (≈ 780K keys/chip for the
-paper's 200M on 256 chips), so the whole lookup is VMEM-resident —
-the TPU answer to the paper's "B-Trees are cache-efficient" objection.
+= 3.2 MB) + sorted keys (N ≤ 2M f32 = 8 MB) + delta (≤ 64k entries:
+512 KB) + query tile.  At pod scale the sorted array is sharded over
+chips (≈ 780K keys/chip for the paper's 200M on 256 chips), so the
+whole merged lookup is VMEM-resident — the TPU answer to the paper's
+"B-Trees are cache-efficient" objection.
 
 Dynamic gathers from VMEM (`jnp.take`) lower to Mosaic vector gathers;
-we validate in interpret mode on CPU (the container has no TPU).
+we validate in interpret mode on CPU (the container has no TPU) —
+``interpret=None`` auto-selects interpret mode off-TPU.
 """
 
 from __future__ import annotations
 
 import functools
 import math
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -36,27 +53,37 @@ def _search_steps(max_window: int) -> int:
     return max(1, int(math.ceil(math.log2(max(2, max_window + 1)))) + 1)
 
 
-def _rmi_kernel(
-    # refs, in order: q, stage0 params (w,b per layer), leaf arrays, keys, out
-    *refs,
-    hidden: Tuple[int, ...],
+def default_interpret() -> bool:
+    """Pallas kernels compile via Mosaic only on TPU; everywhere else
+    (this CPU container, GPU hosts) they run in interpret mode."""
+    return jax.default_backend() != "tpu"
+
+
+def _resolve_interpret(interpret: Optional[bool]) -> bool:
+    return default_interpret() if interpret is None else bool(interpret)
+
+
+def _base_lower_bound(
+    q: jnp.ndarray,
+    params,                      # flat (w0, b0, w1, b1, ...) values
+    leaf_w: jnp.ndarray,
+    leaf_b: jnp.ndarray,
+    err_lo: jnp.ndarray,
+    err_hi: jnp.ndarray,
+    keys: jnp.ndarray,
+    *,
     n: int,
     num_leaves: int,
     steps: int,
-):
-    nl = len(hidden) + 1
-    q_ref = refs[0]
-    params = refs[1 : 1 + 2 * nl]
-    leaf_w_ref, leaf_b_ref, err_lo_ref, err_hi_ref, keys_ref = refs[
-        1 + 2 * nl : 6 + 2 * nl
-    ]
-    out_ref = refs[-1]
-
-    q = q_ref[...]  # (block_q,)
+) -> jnp.ndarray:
+    """Shared kernel body: stage-0 MLP -> leaf FMA -> first probe ->
+    fixed-trip bounded search.  Operates on values (already read from
+    refs) so both kernels execute bit-identical arithmetic."""
+    nl = len(params) // 2
     # ---- stage 0: tiny MLP, dense math --------------------------------
     h = q[:, None]
     for i in range(nl):
-        w, b = params[2 * i][...], params[2 * i + 1][...]
+        w, b = params[2 * i], params[2 * i + 1]
         h = h @ w + b[None, :]
         if i < nl - 1:
             h = jnp.maximum(h, 0.0)
@@ -66,18 +93,17 @@ def _rmi_kernel(
     leaf = jnp.clip(
         jnp.floor(p0 * (num_leaves / n)).astype(jnp.int32), 0, num_leaves - 1
     )
-    slope = jnp.take(leaf_w_ref[...], leaf)
-    inter = jnp.take(leaf_b_ref[...], leaf)
+    slope = jnp.take(leaf_w, leaf)
+    inter = jnp.take(leaf_b, leaf)
     pos = jnp.clip(slope * q + inter, 0.0, float(n - 1))
     lo = jnp.clip(
-        (pos + jnp.take(err_lo_ref[...], leaf)).astype(jnp.int32), 0, n
+        (pos + jnp.take(err_lo, leaf)).astype(jnp.int32), 0, n
     )
     hi = jnp.clip(
-        (pos + jnp.take(err_hi_ref[...], leaf)).astype(jnp.int32) + 1, 0, n
+        (pos + jnp.take(err_hi, leaf)).astype(jnp.int32) + 1, 0, n
     )
 
     # ---- first probe at the prediction (model binary search §3.4) -----
-    keys = keys_ref[...]
     p0i = jnp.clip(pos.astype(jnp.int32), 0, n - 1)
     kp = jnp.take(keys, p0i)
     right = kp < q
@@ -93,7 +119,87 @@ def _rmi_kernel(
         return jnp.where(r, mid + 1, lo), jnp.where(r, hi, mid)
 
     lo, hi = jax.lax.fori_loop(0, steps, body, (lo, hi))
-    out_ref[...] = lo
+    return lo
+
+
+def _delta_lower_bound(
+    q: jnp.ndarray, dkeys: jnp.ndarray, *, dsteps: int
+) -> jnp.ndarray:
+    """Full-range branchless lower bound over the padded delta keys
+    (+inf pads sort after every finite query)."""
+    d = dkeys.shape[0]
+    lo = jnp.zeros(q.shape, jnp.int32)
+    hi = jnp.full(q.shape, d, jnp.int32)
+
+    def body(_, state):
+        lo, hi = state
+        mid = (lo + hi) // 2
+        km = jnp.take(dkeys, jnp.clip(mid, 0, d - 1))
+        r = km < q
+        return jnp.where(r, mid + 1, lo), jnp.where(r, hi, mid)
+
+    lo, hi = jax.lax.fori_loop(0, dsteps, body, (lo, hi))
+    return lo
+
+
+def _rmi_kernel(
+    # refs, in order: q, stage0 params (w,b per layer), leaf arrays, keys, out
+    *refs,
+    hidden: Tuple[int, ...],
+    n: int,
+    num_leaves: int,
+    steps: int,
+):
+    nl = len(hidden) + 1
+    q_ref = refs[0]
+    params = tuple(r[...] for r in refs[1 : 1 + 2 * nl])
+    leaf_w_ref, leaf_b_ref, err_lo_ref, err_hi_ref, keys_ref = refs[
+        1 + 2 * nl : 6 + 2 * nl
+    ]
+    out_ref = refs[-1]
+    out_ref[...] = _base_lower_bound(
+        q_ref[...], params, leaf_w_ref[...], leaf_b_ref[...],
+        err_lo_ref[...], err_hi_ref[...], keys_ref[...],
+        n=n, num_leaves=num_leaves, steps=steps,
+    )
+
+
+def _rmi_merged_kernel(
+    # refs: q, stage0 params, leaf arrays, keys, delta keys, delta
+    # prefix, out_base, out_merged
+    *refs,
+    hidden: Tuple[int, ...],
+    n: int,
+    num_leaves: int,
+    steps: int,
+    dsteps: int,
+):
+    nl = len(hidden) + 1
+    q_ref = refs[0]
+    params = tuple(r[...] for r in refs[1 : 1 + 2 * nl])
+    (leaf_w_ref, leaf_b_ref, err_lo_ref, err_hi_ref, keys_ref,
+     dkeys_ref, dprefix_ref) = refs[1 + 2 * nl : 8 + 2 * nl]
+    base_ref, merged_ref = refs[-2], refs[-1]
+
+    q = q_ref[...]
+    lb = _base_lower_bound(
+        q, params, leaf_w_ref[...], leaf_b_ref[...],
+        err_lo_ref[...], err_hi_ref[...], keys_ref[...],
+        n=n, num_leaves=num_leaves, steps=steps,
+    )
+    dlb = _delta_lower_bound(q, dkeys_ref[...], dsteps=dsteps)
+    base_ref[...] = lb
+    merged_ref[...] = lb + jnp.take(dprefix_ref[...], dlb)
+
+
+def _tile(b: int, block_q: int) -> Tuple[int, int]:
+    bq = min(block_q, b)
+    padded = (b + bq - 1) // bq * bq
+    return bq, padded
+
+
+def _full_spec(a: jax.Array) -> pl.BlockSpec:
+    return pl.BlockSpec(a.shape, lambda i: (0,) * a.ndim)
 
 
 @functools.partial(
@@ -114,21 +220,23 @@ def rmi_lookup_pallas(
     num_leaves: int,
     max_window: int,
     block_q: int = 1024,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> jax.Array:
+    interpret = _resolve_interpret(interpret)
     b = q.shape[0]
-    bq = min(block_q, b)
-    padded = (b + bq - 1) // bq * bq
+    if b == 0:  # degenerate batch: nothing to tile
+        return jnp.zeros((0,), jnp.int32)
+    bq, padded = _tile(b, block_q)
     if padded != b:
         q = jnp.pad(q, (0, padded - b))
     steps = _search_steps(max_window)
     grid = (padded // bq,)
 
-    full = lambda a: pl.BlockSpec(a.shape, lambda i: (0,) * a.ndim)
     in_specs = [pl.BlockSpec((bq,), lambda i: (i,))]
-    in_specs += [full(p) for p in stage0]
-    in_specs += [full(leaf_w), full(leaf_b), full(err_lo), full(err_hi)]
-    in_specs += [full(sorted_keys)]
+    in_specs += [_full_spec(p) for p in stage0]
+    in_specs += [_full_spec(leaf_w), _full_spec(leaf_b),
+                 _full_spec(err_lo), _full_spec(err_hi)]
+    in_specs += [_full_spec(sorted_keys)]
 
     out = pl.pallas_call(
         functools.partial(
@@ -141,6 +249,74 @@ def rmi_lookup_pallas(
         interpret=interpret,
     )(q, *stage0, leaf_w, leaf_b, err_lo, err_hi, sorted_keys)
     return out[:b]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("hidden", "n", "num_leaves", "max_window", "block_q", "interpret"),
+)
+def rmi_merged_lookup_pallas(
+    q: jax.Array,                      # (B,) normalized queries
+    stage0: Tuple[jax.Array, ...],     # (w0, b0, w1, b1, ...) flattened
+    leaf_w: jax.Array,                 # (M,)
+    leaf_b: jax.Array,                 # (M,)
+    err_lo: jax.Array,                 # (M,)
+    err_hi: jax.Array,                 # (M,)
+    sorted_keys: jax.Array,            # (N,)
+    delta_keys: jax.Array,             # (D,) +inf-padded pow2 (combine_for_device)
+    delta_prefix: jax.Array,           # (D+1,) int32 net +1/-1 prefix
+    *,
+    hidden: Tuple[int, ...],
+    n: int,
+    num_leaves: int,
+    max_window: int,
+    block_q: int = 1024,
+    interpret: Optional[bool] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Fused base+delta merged lookup: one kernel, two outputs.
+
+    Returns ``(base_lb, merged_rank)`` — the RMI lower bound in the
+    base array plus the merged rank after the staged delta's +1/-1
+    prefix contribution.  Retraces per (index, delta capacity bucket):
+    ``delta_keys`` comes +inf-padded to a power of two, so the jit
+    cache is keyed by bucket, never by individual writes.
+    """
+    interpret = _resolve_interpret(interpret)
+    b = q.shape[0]
+    if b == 0:  # degenerate batch: nothing to tile
+        empty = jnp.zeros((0,), jnp.int32)
+        return empty, empty
+    bq, padded = _tile(b, block_q)
+    if padded != b:
+        q = jnp.pad(q, (0, padded - b))
+    steps = _search_steps(max_window)
+    dsteps = _search_steps(delta_keys.shape[0])
+    grid = (padded // bq,)
+
+    in_specs = [pl.BlockSpec((bq,), lambda i: (i,))]
+    in_specs += [_full_spec(p) for p in stage0]
+    in_specs += [_full_spec(leaf_w), _full_spec(leaf_b),
+                 _full_spec(err_lo), _full_spec(err_hi)]
+    in_specs += [_full_spec(sorted_keys), _full_spec(delta_keys),
+                 _full_spec(delta_prefix)]
+
+    tile_spec = lambda: pl.BlockSpec((bq,), lambda i: (i,))
+    base, merged = pl.pallas_call(
+        functools.partial(
+            _rmi_merged_kernel, hidden=hidden, n=n, num_leaves=num_leaves,
+            steps=steps, dsteps=dsteps,
+        ),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=(tile_spec(), tile_spec()),
+        out_shape=(
+            jax.ShapeDtypeStruct((padded,), jnp.int32),
+            jax.ShapeDtypeStruct((padded,), jnp.int32),
+        ),
+        interpret=interpret,
+    )(q, *stage0, leaf_w, leaf_b, err_lo, err_hi, sorted_keys,
+      delta_keys, delta_prefix)
+    return base[:b], merged[:b]
 
 
 def stage0_flat(params: Dict[str, np.ndarray]) -> Tuple[jax.Array, ...]:

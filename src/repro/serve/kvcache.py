@@ -30,20 +30,31 @@ import numpy as np
 from repro.core.rmi import RMIConfig
 from repro.index_service.compact import Compactor
 from repro.index_service.delta import DeltaBuffer
-from repro.index_service.snapshot import IndexSnapshot, build_snapshot
+from repro.index_service.snapshot import (
+    IndexSnapshot,
+    build_snapshot,
+    validate_strategy,
+)
 
 MAX_PAGES_PER_REQ = 4096
 
 
 @dataclasses.dataclass
 class PagedKVAllocator:
-    """Free-list page allocator + delta-buffered learned page table."""
+    """Free-list page allocator + delta-buffered learned page table.
+
+    ``strategy`` selects the base lookup path for `translate` — any
+    name in `index_service.MERGED_STRATEGIES`; the kernel strategies
+    (`pallas`, `pallas_fused`) run the Pallas RMI kernel (interpret
+    mode off-TPU)."""
 
     num_pages: int
     page_size: int
     delta_capacity: int = 2048
+    strategy: str = "binary"
 
     def __post_init__(self):
+        validate_strategy(self.strategy)
         self._free = list(range(self.num_pages - 1, -1, -1))
         self._table: Dict[int, int] = {}   # key -> physical page
         self._per_req: Dict[int, List[int]] = {}
@@ -154,7 +165,7 @@ class PagedKVAllocator:
         # the delta side is resolved host-side (it is a value lookup,
         # not a rank), so only the base RMI search runs on device
         qn = jnp.asarray(snap.keys.normalize(raw_q))
-        b = snap.base_lookup_fn("binary")(qn)
+        b = snap.base_lookup_fn(self.strategy)(qn)
         idx, in_base = snap.refine_base_rank(raw_q, np.asarray(b))
 
         out = snap.vals[np.clip(idx, 0, snap.n - 1)]

@@ -1,0 +1,170 @@
+"""Property tests for the delta-buffer rank invariants.
+
+The merged-lookup correctness of the whole writable index rests on one
+arithmetic identity (delta.py):
+
+    rank(q) = base_lb(q) + |{staged inserts < q}| - |{tombstones < q}|
+
+for EVERY query point q, under any interleaving of inserts, deletes,
+and reinserts — including tombstone-then-reinsert of the same key,
+whose +1/-1 contributions must cancel exactly.  Hypothesis (or the
+deterministic `tests/_hypothesis_fallback.py` shim when hypothesis is
+absent) drives random op sequences against a plain python-set model,
+and every query point is checked through BOTH host paths
+(`count_less`) and the device fusion (`combine_for_device` prefix
+gather) the jitted merged lookup uses.
+"""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.index_service.delta import (
+    DeltaBuffer,
+    combine_for_device,
+    count_less,
+    live_mask,
+    member,
+)
+
+# a small key pool forces heavy collisions: the same key gets deleted,
+# reinserted, re-deleted across a sequence
+POOL = np.arange(0.0, 24.0)          # keys 0..23
+BASE = POOL[POOL % 3 == 0]           # 0, 3, 6, ... live in the base
+# op encoding: draw one int, split into (op, key-index)
+OPS = st.lists(st.integers(0, 2 * POOL.size - 1), min_size=1, max_size=60)
+
+
+def _apply(delta, model_live, code):
+    op, ki = divmod(int(code), POOL.size)
+    key = float(POOL[ki])
+    live_below = key in BASE
+    if op == 0:
+        changed = delta.stage_insert(key, live_below, val=ki)
+        assert changed == (key not in model_live), (
+            "stage_insert liveness verdict diverged from the set model"
+        )
+        model_live.add(key)
+    else:
+        changed = delta.stage_delete(key, live_below)
+        assert changed == (key in model_live), (
+            "stage_delete liveness verdict diverged from the set model"
+        )
+        model_live.discard(key)
+
+
+def _query_points():
+    """Every pool key, its midpoints, and the boundaries — the ±1/-1
+    cancellation must hold between keys, not just at them."""
+    return np.concatenate([POOL, POOL + 0.5, [-1.0, 99.0]])
+
+
+def _check_ranks(frozen, active, model_live):
+    q = _query_points()
+    base_rank = np.searchsorted(BASE, q, side="left")
+    live_arr = np.array(sorted(model_live))
+    want = np.searchsorted(live_arr, q, side="left")
+
+    # host path: exact float64 count_less
+    got = base_rank + count_less(frozen, active, q)
+    np.testing.assert_array_equal(got, want)
+
+    # device path: fused keys + prefix gather (float32 frame is exact
+    # for these small integer-ish keys)
+    dk, dp = combine_for_device(
+        frozen, active, lambda r: r.astype(np.float32)
+    )
+    dlb = np.searchsorted(dk, q.astype(np.float32), side="left")
+    np.testing.assert_array_equal(base_rank + dp[dlb], want)
+
+    # liveness overlay agrees with the model on every pool key
+    in_base = np.isin(POOL, BASE)
+    live = live_mask(in_base, frozen, active, POOL)
+    np.testing.assert_array_equal(
+        live, np.array([k in model_live for k in POOL])
+    )
+
+
+@settings(max_examples=60, deadline=None)
+@given(OPS)
+def test_prefix_cancellation_single_level(codes):
+    """Interleaved insert/delete/reinsert against one active delta:
+    the +1/-1 prefix rule holds at every query point after every op."""
+    delta = DeltaBuffer(capacity=256)
+    model_live = set(BASE.tolist())
+    for code in codes:
+        _apply(delta, model_live, code)
+    _check_ranks(None, delta, model_live)
+    # structural invariant: a key appears in both arrays only as
+    # tombstone-then-reinsert (insert implies base-live tombstone)
+    both = np.intersect1d(delta.ins_keys, delta.del_keys)
+    for k in both:
+        assert k in BASE, "non-base key staged as tombstone+insert"
+
+
+@settings(max_examples=40, deadline=None)
+@given(OPS, OPS)
+def test_prefix_cancellation_layered_frozen_active(codes_a, codes_b):
+    """Freeze mid-stream (the compaction hand-off) and keep writing:
+    the layered youngest-level-wins rule must keep every rank exact
+    across frozen ∪ active, including resurrections that span the
+    freeze boundary."""
+    active = DeltaBuffer(capacity=256)
+    model_live = set(BASE.tolist())
+    for code in codes_a:
+        _apply(active, model_live, code)
+    frozen, active = active, DeltaBuffer(capacity=256)
+
+    for code in codes_b:
+        op, ki = divmod(int(code), POOL.size)
+        key = float(POOL[ki])
+        # liveness below the ACTIVE delta: base overridden by frozen —
+        # the same layered rule IndexService._live_below_many applies
+        lb = bool(live_mask(
+            np.array([key in BASE]), frozen, None, np.array([key])
+        )[0])
+        if op == 0:
+            changed = active.stage_insert(key, lb, val=ki)
+            assert changed == (key not in model_live)
+            model_live.add(key)
+        else:
+            changed = active.stage_delete(key, lb)
+            assert changed == (key in model_live)
+            model_live.discard(key)
+    _check_ranks(frozen, active, model_live)
+
+
+def test_tombstone_then_reinsert_same_key_explicit():
+    """The documented resurrection dance, step by step."""
+    d = DeltaBuffer(capacity=16)
+    model = set(BASE.tolist())
+    k = float(BASE[2])  # 6.0, live in base
+    q = _query_points()
+    base_rank = np.searchsorted(BASE, q)
+
+    d.stage_delete(k, True); model.discard(k)       # tombstone
+    _check_ranks(None, d, model)
+    d.stage_insert(k, True, val=1); model.add(k)    # reinsert: cancels
+    _check_ranks(None, d, model)
+    assert d.has_tombstone(k) and d.has_insert(k)   # both staged ...
+    net = count_less(None, d, np.array([k + 0.5]))
+    assert net[0] == 0                              # ... contributions cancel
+    d.stage_delete(k, True); model.discard(k)       # re-kill
+    _check_ranks(None, d, model)
+    assert d.has_tombstone(k) and not d.has_insert(k)
+    # idempotent re-delete stages nothing new
+    assert not d.stage_delete(k, True)
+    assert d.num_deletes == 1
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(0, POOL.size - 1), min_size=1, max_size=40))
+def test_member_matches_isin(kis):
+    """`member` (the binary-search membership the service layers on)
+    is exactly np.isin for sorted staged arrays."""
+    d = DeltaBuffer(capacity=256)
+    for ki in kis:
+        d.stage_insert(float(POOL[ki]), live_below=False)
+    q = _query_points()
+    np.testing.assert_array_equal(
+        member(d.ins_keys, q), np.isin(q, d.ins_keys)
+    )

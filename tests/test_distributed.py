@@ -146,7 +146,7 @@ def test_straggler_policy_flags_slow_steps():
 # gradient compression
 # --------------------------------------------------------------------------
 
-@settings(max_examples=40, deadline=None)
+@settings(max_examples=10, deadline=None)
 @given(st.lists(st.floats(-1e4, 1e4, allow_nan=False), min_size=1, max_size=64))
 def test_property_int8_quantization_error_bounded(xs):
     x = jnp.asarray(np.array(xs, np.float32))

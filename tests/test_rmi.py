@@ -122,7 +122,7 @@ def test_lif_synthesis_respects_budget():
     assert len(cands) == 4
 
 
-@settings(max_examples=20, deadline=None)
+@settings(max_examples=8, deadline=None)
 @given(
     st.lists(
         st.floats(min_value=-1e9, max_value=1e9, allow_nan=False),

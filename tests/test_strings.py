@@ -14,7 +14,7 @@ ascii_text = st.text(
 )
 
 
-@settings(max_examples=60, deadline=None)
+@settings(max_examples=12, deadline=None)
 @given(st.lists(ascii_text, min_size=2, max_size=30, unique=True))
 def test_property_packed_compare_is_lexicographic(strings):
     max_len = 12

@@ -8,6 +8,7 @@ from repro.launch import serve as serve_mod
 from repro.launch import train as train_mod
 
 
+@pytest.mark.slow
 def test_train_loss_decreases_end_to_end():
     out = train_mod.main([
         "--arch", "yi-9b", "--reduced", "--steps", "30",
@@ -17,6 +18,7 @@ def test_train_loss_decreases_end_to_end():
     assert out["last_loss"] < out["first_loss"], out
 
 
+@pytest.mark.slow
 def test_train_checkpoint_restart_resumes(tmp_path):
     ckpt = str(tmp_path / "ck")
     args = [
@@ -35,6 +37,7 @@ def test_train_checkpoint_restart_resumes(tmp_path):
     assert latest_step(ckpt) == 16
 
 
+@pytest.mark.slow
 def test_train_microbatched_matches_single_batch_loss():
     """Gradient accumulation must not change the first-step loss."""
     o1 = train_mod.main([
@@ -58,6 +61,7 @@ def test_serve_engine_completes_requests():
     assert out["kv_pages_in_use"] == 0  # all freed
 
 
+@pytest.mark.slow
 def test_serve_with_prefix_bloom():
     out = serve_mod.main([
         "--arch", "yi-6b", "--reduced", "--requests", "3",
