@@ -18,6 +18,10 @@ Four questions, all ns/lookup CSV rows:
   3. What does a mixed 90/10 read/write stream cost end to end
      (staging + merged lookups + any compactions amortized in)?
   4. Does compaction restore the static rate (post-compaction row)?
+  5. What does sharding cost readers?  K-shard sweep (per-shard deltas
+     behind the learned router, one stacked merged-lookup dispatch) vs
+     the K=1 baseline — `sharded_sweep`, also runnable alone via
+     LIX_SHARDED_ONLY=1 (the CI benchmark-smoke job does).
 """
 
 from __future__ import annotations
@@ -25,16 +29,58 @@ from __future__ import annotations
 import numpy as np
 import jax.numpy as jnp
 
+import os
+
 from benchmarks.common import BENCH_LOOKUPS, BENCH_N, emit, ns_per_item
 from repro.core import RMIConfig, build_rmi, compile_lookup, make_keyset
 from repro.data import gen_weblogs
-from repro.index_service import IndexService, ServiceConfig
+from repro.index_service import (
+    IndexService,
+    ServiceConfig,
+    ShardedIndexService,
+)
 from repro.kernels.rmi_lookup import default_interpret
 
 DELTA_CAPACITY = 4096
 # interpret-mode pallas is orders of magnitude slower than compiled
 # XLA; keep the fused-vs-two-dispatch comparison batch bounded on CPU
 FUSED_BATCH = 4096
+
+
+def sharded_sweep(raw=None, ks=None) -> None:
+    """Question 5: what does sharding the write path cost readers?
+    K-shard service (per-shard delta + compaction, learned router) vs
+    the K=1 baseline on the same key set and op stream: one-dispatch
+    stacked merged lookup (ns/op) and a mixed 90/10 stream.  On CPU the
+    shard axis is host-simulated unless XLA exposes multiple devices
+    (CI forces 8 via --xla_force_host_platform_device_count)."""
+    import jax
+
+    rng = np.random.default_rng(1)
+    if raw is None:  # standalone (LIX_SHARDED_ONLY) path
+        raw = gen_weblogs(BENCH_N)
+        ks = make_keyset(raw)
+    b = min(BENCH_LOOKUPS, ks.n)
+    sample = raw[rng.choice(ks.n, b)]
+    fresh = np.setdiff1d(
+        rng.integers(0, 1 << 52, DELTA_CAPACITY).astype(np.float64), ks.raw
+    )
+    for k in (1, 4, 8):
+        svc = ShardedIndexService(ks.raw, ServiceConfig(
+            delta_capacity=DELTA_CAPACITY, num_shards=k))
+        svc.insert(fresh)  # staged writes spread over the K deltas
+        t = ns_per_item(
+            lambda q: jax.block_until_ready(svc.lookup_batch(q)),
+            sample, batch=b,
+        )
+        summary = svc.stats_summary()
+        emit(
+            f"dynamic_index/sharded_k{k}",
+            t / 1e3,
+            f"devices={len(jax.devices())};"
+            f"router_hit={svc.router.model_hit_rate:.3f};"
+            f"compactions={summary['compactions']}",
+        )
 
 
 def main() -> None:
@@ -131,6 +177,11 @@ def main() -> None:
         f"vs_static={t_post / t_static:.2f}x",
     )
 
+    sharded_sweep(raw, ks)
+
 
 if __name__ == "__main__":
-    main()
+    if os.environ.get("LIX_SHARDED_ONLY", "0") == "1":
+        sharded_sweep()
+    else:
+        main()

@@ -199,6 +199,43 @@ def maybe_constrain(x, *spec):
     return jax.lax.with_sharding_constraint(x, P(*parts))
 
 
+# --- learned-index shard placement -----------------------------------------
+# The sharded index service stacks per-shard (snapshot, delta) arrays
+# on a leading "shard" axis; when the host exposes multiple devices
+# (real TPUs, or CPU with --xla_force_host_platform_device_count) the
+# stacked rows place shard-per-device so the vmapped sharded lookup
+# partitions instead of replicating.  Kept separate from the model
+# rules above: index shards are data placement, not parameter sharding.
+
+def index_shard_mesh(num_shards: int) -> Optional[Mesh]:
+    """1-D ("shard",) mesh for a stacked per-shard index, or None when
+    the host is single-device or no device count divides num_shards."""
+    devices = jax.devices()
+    if len(devices) < 2 or num_shards < 2:
+        return None
+    use = min(len(devices), num_shards)
+    while use > 1 and num_shards % use != 0:
+        use -= 1  # divisibility fallback, same rule as _resolve
+    if use < 2:
+        return None
+    return Mesh(np.asarray(devices[:use]), ("shard",))
+
+
+def place_index_shards(arrays, mesh: Mesh):
+    """device_put every stacked leaf with its leading axis over the
+    shard mesh (leaves whose leading dim doesn't divide replicate)."""
+    size = mesh.shape["shard"]
+
+    def one(leaf):
+        if leaf.ndim == 0 or leaf.shape[0] % size != 0:
+            spec = P()
+        else:
+            spec = P("shard", *([None] * (leaf.ndim - 1)))
+        return jax.device_put(leaf, NamedSharding(mesh, spec))
+
+    return jax.tree_util.tree_map(one, arrays)
+
+
 def param_shardings(abstract_params, cfg, mesh: Mesh):
     """Pytree of NamedShardings matching `abstract_params`."""
 

@@ -6,6 +6,9 @@ Public API:
   Consistency:   IndexSnapshot, VersionManager, build_snapshot
   Front end:     IndexService, ServiceConfig — batched mixed
                  get/range/insert/delete/contains ops
+  Sharding:      LearnedRouter (boundary model), ShardedIndexService —
+                 K shards, each with its own delta + compaction,
+                 global ranks via prefix-sum reassembly
 """
 
 from repro.index_service.compact import (
@@ -20,7 +23,9 @@ from repro.index_service.delta import (
     live_mask,
     member,
 )
+from repro.index_service.router import LearnedRouter
 from repro.index_service.service import IndexService, ServiceConfig
+from repro.index_service.sharded import ShardedIndexService
 from repro.index_service.snapshot import (
     MERGED_STRATEGIES,
     IndexSnapshot,
@@ -32,5 +37,6 @@ __all__ = [
     "CompactionStats", "Compactor", "merge_delta",
     "DeltaBuffer", "combine_for_device", "count_less", "live_mask", "member",
     "IndexService", "ServiceConfig",
+    "LearnedRouter", "ShardedIndexService",
     "IndexSnapshot", "MERGED_STRATEGIES", "VersionManager", "build_snapshot",
 ]

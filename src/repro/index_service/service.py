@@ -51,14 +51,19 @@ from repro.index_service.snapshot import (
 
 @dataclasses.dataclass
 class ServiceConfig:
-    delta_capacity: int = 4096
+    delta_capacity: int = 4096       # per shard, when num_shards > 1
     compact_fraction: float = 0.75   # delta fill that triggers compaction
     bloom_fpr: Optional[float] = None  # None = no existence screen
-    strategy: str = "binary"         # one of snapshot.MERGED_STRATEGIES
+    strategy: str = "binary"         # any member of snapshot.MERGED_STRATEGIES
     background: bool = False         # compact on a worker thread
     snapshot_dir: Optional[str] = None
     keep_snapshots: int = 2
     rmi: Optional[RMIConfig] = None  # None = linear stage-0 sized to n
+    # sharding (consumed by sharded.ShardedIndexService; IndexService
+    # itself is always the single-shard building block)
+    num_shards: int = 1
+    shard_balance_factor: float = 4.0  # re-fit boundaries when a shard
+    #                                    exceeds factor x the mean fill
 
 
 def _default_rmi(n: int) -> RMIConfig:

@@ -1,0 +1,588 @@
+"""Sharded writable learned index: K single-shard services behind a
+learned router.
+
+`IndexService` (PR 1-2) solves the paper's §3.3 write problem on one
+host: one delta buffer serializes all write staging and the fused
+merged-lookup kernel assumes one base + one delta.  This module scales
+that past a single host the way an LSM shards: the raw key space
+partitions into K half-open ranges owned by a `LearnedRouter`
+(router.py), each shard runs its *own* snapshot + `DeltaBuffer` +
+compaction schedule (a full `IndexService`), and global answers
+reassemble from per-shard answers by prefix-summing per-shard live
+counts:
+
+    global_rank(q) = sum(live(s) for s < route(q)) + local_rank(q)
+
+    writes ──route──▶ shard 0 [snapshot+delta+compactor]──┐
+                      shard 1 [snapshot+delta+compactor]──┼─ prefix-sum
+                      ...                                 │  reassembly
+    reads  ──route──▶ shard K-1 [...]────────────────────-┘
+
+Correctness therefore never depends on the model: the router is exact
+(learned guess + verification + fallback), each shard's `IndexService`
+is oracle-exact, and the reassembly invariant is pinned by
+``tests/test_sharded_service.py`` against one global sorted-array
+oracle through 100k+ interleaved ops — with K=1 *bit-identical* to the
+unsharded service.
+
+Boundary re-fit: when compactions leave a shard holding more than
+``shard_balance_factor`` x the mean live count, `rebalance()` drains
+every shard, re-cuts quantile boundaries over the merged live key set,
+and rebuilds the shards — keys change owners, never global ranks.
+
+Device path: `lookup_batch` stacks the per-shard snapshot/delta arrays
+(zero/inf padded; true sizes travel as traced scalars) and runs ONE
+`rmi_sharded_merged_lookup` dispatch with the shard axis as a kernel
+grid dimension — or, off the kernel path, the vmapped XLA fallback
+whose stacked inputs are placed shard-per-device through
+`distributed.sharding.index_shard_mesh` when the host exposes multiple
+devices (CI forces 8 with ``--xla_force_host_platform_device_count``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import shutil
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import index_shard_mesh, place_index_shards
+from repro.index_service.delta import count_less
+from repro.index_service.router import LearnedRouter
+from repro.index_service.service import IndexService, ServiceConfig
+from repro.index_service.snapshot import validate_strategy
+from repro.kernels import ops as kernels_ops
+
+_ROUTER_FILE = "router.npz"
+_SHARD_DIR = "shard-{:02d}"
+
+
+def _merge_level(keys, vals, level):
+    """Apply one delta level to sorted (keys, vals): drop tombstoned
+    keys, weave staged inserts in (the compactor's merge, without
+    publishing a snapshot — so it works for ANY result size, including
+    a fully drained shard)."""
+    if level is None or len(level) == 0:
+        return keys, vals
+    keep = np.ones(keys.size, bool)
+    if level.del_keys.size:
+        i = np.clip(
+            np.searchsorted(level.del_keys, keys),
+            0, level.del_keys.size - 1,
+        )
+        keep = level.del_keys[i] != keys
+    merged = np.concatenate([keys[keep], level.ins_keys])
+    order = np.argsort(merged, kind="stable")
+    if vals is not None:
+        vals = np.concatenate([vals[keep], level.ins_vals])[order]
+    return merged[order], vals
+
+
+def _live_arrays(svc: "IndexService"):
+    """One shard's exact live (keys, vals) from a consistent
+    (snapshot, frozen, active) capture — no compaction, no flush."""
+    snap, frozen, active = svc._state()
+    keys, vals = snap.keys.raw, snap.vals
+    for level in (frozen, active):
+        keys, vals = _merge_level(keys, vals, level)
+    return keys, vals
+
+# strategies whose sharded device path runs the pallas grid kernel;
+# everything else lowers to the vmapped XLA fallback (which is also the
+# device-mapped path: stacked rows place shard-per-device)
+_KERNEL_STRATEGIES = ("pallas", "pallas_fused", "sharded_fused")
+
+
+def _same_objects(a: tuple, b: tuple) -> bool:
+    """Identity (not ==) comparison of two capture tuples.  The cache
+    keys hold the live snapshot/delta OBJECTS — not their id()s — so a
+    freed snapshot can never alias a new one through CPython id reuse,
+    and comparison must be `is`, never array equality."""
+    return len(a) == len(b) and all(
+        x is y for pair_a, pair_b in zip(a, b)
+        for x, y in zip(pair_a, pair_b)
+    )
+
+
+@dataclasses.dataclass
+class _DevicePlan:
+    """Stacked per-shard arrays for the one-dispatch sharded lookup."""
+
+    key: tuple                 # (snapshot, delta-array) object pairs
+    q_normalizers: list        # per-shard KeySet.normalize callables
+    stage0: tuple              # stacked (S, ...) flat params
+    leaf_w: jnp.ndarray
+    leaf_b: jnp.ndarray
+    err_lo: jnp.ndarray
+    err_hi: jnp.ndarray
+    keys: jnp.ndarray          # (S, Nmax) +inf padded
+    dkeys: jnp.ndarray         # (S, Dmax) +inf padded
+    dprefix: jnp.ndarray       # (S, Dmax+1) pad tail repeats the last value
+    shard_n: jnp.ndarray       # (S,) int32
+    shard_m: jnp.ndarray       # (S,) int32
+    shard_ratio: jnp.ndarray   # (S,) float32
+    base_off: jnp.ndarray      # (S,) int32: keys in lower shards' bases
+    merged_off: jnp.ndarray    # (S,) int32: LIVE keys in lower shards
+    hidden: tuple
+    max_window: int
+
+
+class ShardedIndexService:
+    """K-shard writable learned index with a learned router front end.
+
+    Mirrors the `IndexService` surface (get / contains / range_lookup /
+    insert / delete / execute / flush / save / load / lookup_batch /
+    stats_summary); ``config.num_shards`` picks K and
+    ``config.delta_capacity`` applies per shard, so aggregate write
+    staging scales linearly with K.
+    """
+
+    def __init__(
+        self,
+        raw_keys: np.ndarray,
+        config: Optional[ServiceConfig] = None,
+        *,
+        vals: Optional[np.ndarray] = None,
+        _router: Optional[LearnedRouter] = None,
+        _shards: Optional[List[IndexService]] = None,
+    ):
+        self.config = config or ServiceConfig()
+        validate_strategy(self.config.strategy)
+        if self.config.num_shards < 1:
+            raise ValueError("num_shards must be >= 1")
+        self.stats: Dict[str, float] = {
+            "rebalances": 0, "get": 0, "get_s": 0.0, "range": 0,
+        }
+        # counters carried over from shards retired by rebalance(), so
+        # aggregate stats and the version property stay monotone
+        self._retired: Dict[str, int] = {"versions": 0}
+        self._plan: Optional[_DevicePlan] = None
+        if _router is not None and _shards is not None:
+            self._router, self._shards = _router, _shards
+            return
+        raw = np.asarray(raw_keys, np.float64)
+        if vals is None:
+            raw = np.unique(raw)
+        else:
+            vals = np.asarray(vals, np.int64)
+            order = np.argsort(raw, kind="stable")
+            raw, vals = raw[order], vals[order]
+            if raw.size and (np.diff(raw) == 0).any():
+                raise ValueError("duplicate keys with distinct values")
+        self._router = LearnedRouter.from_keys(raw, self.config.num_shards)
+        self._shards = self._build_shards(raw, vals)
+        if self.config.snapshot_dir is not None:
+            self._save_router()
+
+    # ---- construction ----------------------------------------------------
+    def _shard_config(self, shard: int) -> ServiceConfig:
+        sub = None
+        if self.config.snapshot_dir is not None:
+            sub = os.path.join(
+                self.config.snapshot_dir, _SHARD_DIR.format(shard)
+            )
+        return dataclasses.replace(
+            self.config, num_shards=1, snapshot_dir=sub
+        )
+
+    def _build_shards(
+        self, sorted_keys: np.ndarray, vals: Optional[np.ndarray]
+    ) -> List[IndexService]:
+        cuts = self._router.split_points(sorted_keys)
+        shards = []
+        for s in range(self.num_shards):
+            a, b = int(cuts[s]), int(cuts[s + 1])
+            if b - a < 2:
+                raise ValueError(
+                    f"shard {s} would hold {b - a} keys (< 2); "
+                    f"use fewer shards"
+                )
+            cfg = self._shard_config(s)
+            if cfg.snapshot_dir is not None and os.path.isdir(cfg.snapshot_dir):
+                shutil.rmtree(cfg.snapshot_dir)  # drop stale versions
+            shards.append(IndexService(
+                sorted_keys[a:b], cfg,
+                vals=None if vals is None else vals[a:b],
+            ))
+        return shards
+
+    # ---- introspection ---------------------------------------------------
+    @property
+    def num_shards(self) -> int:
+        return self._router.num_shards
+
+    @property
+    def router(self) -> LearnedRouter:
+        return self._router
+
+    @property
+    def shards(self) -> Tuple[IndexService, ...]:
+        return tuple(self._shards)
+
+    @property
+    def num_keys(self) -> int:
+        return sum(s.num_keys for s in self._shards)
+
+    @property
+    def version(self) -> int:
+        """Aggregate version: total compacted snapshot advances,
+        monotone across rebalances (retired shards keep counting)."""
+        return self._retired["versions"] + sum(
+            s.version for s in self._shards
+        )
+
+    @property
+    def delta_fill(self) -> float:
+        return max(s.delta_fill for s in self._shards)
+
+    def _live_counts(self) -> np.ndarray:
+        return np.array([s.num_keys for s in self._shards], np.int64)
+
+    def _live_offsets(self) -> np.ndarray:
+        counts = self._live_counts()
+        off = np.zeros(counts.size, np.int64)
+        off[1:] = np.cumsum(counts[:-1])
+        return off
+
+    # ---- reads -----------------------------------------------------------
+    def _ranks(self, q: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """Exact global merged ranks + live mask: route, per-shard exact
+        rank, prefix-sum reassembly."""
+        shard_of = self._router.route(q)
+        offsets = self._live_offsets()
+        rank = np.zeros(q.shape, np.int64)
+        live = np.zeros(q.shape, bool)
+        for s, svc in enumerate(self._shards):
+            m = shard_of == s
+            if m.any():
+                r, lv = svc._rank_exact(q[m])
+                rank[m] = r + offsets[s]
+                live[m] = lv
+        return rank, live
+
+    def get(self, keys) -> Tuple[np.ndarray, np.ndarray]:
+        """Exact global lower-bound ranks + presence mask (the K-shard
+        mirror of `IndexService.get`)."""
+        t0 = time.perf_counter()
+        q = np.atleast_1d(np.asarray(keys, np.float64))
+        rank, live = self._ranks(q)
+        self.stats["get"] += q.size
+        self.stats["get_s"] += time.perf_counter() - t0
+        return rank, live
+
+    def contains(self, keys) -> np.ndarray:
+        q = np.atleast_1d(np.asarray(keys, np.float64))
+        shard_of = self._router.route(q)
+        out = np.zeros(q.shape, bool)
+        for s, svc in enumerate(self._shards):
+            m = shard_of == s
+            if m.any():
+                out[m] = svc.contains(q[m])
+        return out
+
+    def range_lookup(self, lo: float, hi: float) -> Tuple[int, int]:
+        """[lo, hi) as global merged ranks — the endpoints may route to
+        different shards; the prefix-sum offsets make the two ranks
+        comparable anyway."""
+        self.stats["range"] += 1
+        ranks, _ = self._ranks(np.array([lo, hi], np.float64))
+        return int(ranks[0]), int(ranks[1])
+
+    # ---- device fast path ------------------------------------------------
+    def lookup_batch(self, keys) -> jnp.ndarray:
+        """One-dispatch sharded merged lookup: route host-side, stack
+        per-shard (snapshot, delta) arrays, run the grid-over-shards
+        kernel (or the device-mapped XLA fallback), reassemble global
+        ranks with the live-count prefix sums.  Same exactness caveat
+        as `IndexService.lookup_batch` (float32 frame, no host
+        refinement)."""
+        q = np.atleast_1d(np.asarray(keys, np.float64))
+        plan = self._device_plan()
+        shard_of = jnp.asarray(self._router.route(q))
+        qs = jnp.asarray(
+            np.stack([norm(q) for norm in plan.q_normalizers])
+        )
+        use_kernel = self.config.strategy in _KERNEL_STRATEGIES
+        lb, ct = kernels_ops.rmi_sharded_merged_lookup_op(
+            qs, plan.stage0, plan.leaf_w, plan.leaf_b, plan.err_lo,
+            plan.err_hi, plan.keys, plan.dkeys, plan.dprefix,
+            plan.shard_n, plan.shard_m, plan.shard_ratio,
+            hidden=plan.hidden, max_window=plan.max_window,
+            use_kernel=use_kernel,
+        )
+        _, merged = kernels_ops.sharded_reassemble(
+            lb, ct, shard_of, plan.base_off, plan.merged_off
+        )
+        return merged
+
+    def _shard_mesh(self):
+        """1-D shard mesh for the vmapped (non-kernel) path, or None."""
+        if self.config.strategy in _KERNEL_STRATEGIES:
+            return None
+        return index_shard_mesh(self.num_shards)
+
+    def _static_stack(self, snaps):
+        """Snapshot-derived stacks (base keys, leaf SoA, stage-0, base
+        offsets) — rebuilt only when a compaction/rebalance publishes a
+        new snapshot, NOT on every write; the per-write delta stacks
+        rebuild separately in `_device_plan`."""
+        static_key = tuple((sn,) for sn in snaps)
+        cached = getattr(self, "_static_plan", None)
+        if cached is not None and _same_objects(cached[0], static_key):
+            return cached
+        stacked = kernels_ops.stack_shard_arrays(
+            [sn.index for sn in snaps],
+            [sn.keys.norm for sn in snaps],
+        )
+        hidden = stacked.pop("hidden")
+        max_window = stacked.pop("max_window")
+        base_n = np.array([sn.n for sn in snaps], np.int64)
+        base_off = np.zeros(len(snaps), np.int32)
+        base_off[1:] = np.cumsum(base_n[:-1]).astype(np.int32)
+        stacked["base_off"] = jnp.asarray(base_off)
+        mesh = self._shard_mesh()
+        if mesh is not None:
+            # device-mapped shards: the vmapped XLA path partitions
+            # over a 1-D shard mesh when the host exposes enough devices
+            stacked = place_index_shards(stacked, mesh)
+        cached = (static_key, stacked, hidden, max_window,
+                  [sn.keys.normalize for sn in snaps])
+        self._static_plan = cached
+        return cached
+
+    def _device_plan(self) -> _DevicePlan:
+        caps = [s._capture() for s in self._shards]
+        key = tuple((c[0], c[3]) for c in caps)
+        if self._plan is not None and _same_objects(self._plan.key, key):
+            return self._plan
+        snaps = [c[0] for c in caps]
+        _, stacked, hidden, max_window, normalizers = self._static_stack(snaps)
+
+        d_max = max(int(c[3].shape[0]) for c in caps)
+        dkeys = np.full((len(caps), d_max), np.inf, np.float32)
+        dprefix = np.zeros((len(caps), d_max + 1), np.int32)
+        for s, c in enumerate(caps):
+            dk, dp = np.asarray(c[3]), np.asarray(c[4])
+            dkeys[s, : dk.size] = dk
+            dprefix[s, : dp.size] = dp
+            dprefix[s, dp.size:] = dp[-1]
+        live = np.array(
+            [sn.n + int(count_less(c[1], c[2], np.array([np.inf]))[0])
+             for sn, c in zip(snaps, caps)], np.int64,
+        )
+        merged_off = np.zeros(len(caps), np.int64)
+        merged_off[1:] = np.cumsum(live[:-1])
+        delta = {
+            "dkeys": jnp.asarray(dkeys),
+            "dprefix": jnp.asarray(dprefix),
+            "merged_off": jnp.asarray(merged_off.astype(np.int32)),
+        }
+        mesh = self._shard_mesh()
+        if mesh is not None:
+            delta = place_index_shards(delta, mesh)
+        plan = _DevicePlan(
+            key=key,
+            q_normalizers=normalizers,
+            **stacked,
+            **delta,
+            hidden=hidden,
+            max_window=max_window,
+        )
+        self._plan = plan
+        return plan
+
+    # ---- writes ----------------------------------------------------------
+    def insert(self, keys, vals=None) -> int:
+        q = np.atleast_1d(np.asarray(keys, np.float64))
+        v = None if vals is None else np.atleast_1d(np.asarray(vals, np.int64))
+        shard_of = self._router.route(q)
+        applied = 0
+        for s, svc in enumerate(self._shards):
+            m = shard_of == s
+            if m.any():
+                applied += svc.insert(q[m], None if v is None else v[m])
+        self._plan = None
+        self._maybe_rebalance()
+        return applied
+
+    def delete(self, keys) -> int:
+        q = np.atleast_1d(np.asarray(keys, np.float64))
+        # a shard's IndexService cannot compact below 2 keys, so a
+        # batch that would drain one shard's whole range (routine at
+        # K > 1) first merges shards via rebalance — halving K until
+        # every shard keeps headroom, down to the K=1 (global-drain)
+        # semantics of the unsharded service.  The cheap guard counts
+        # requested keys; only when it trips do we pay for an exact
+        # per-shard liveness check, so no-op deletes of absent keys
+        # (idempotent retries) never cascade rebalances.
+        u = np.unique(q)
+        while self.num_shards > 1 and self._delete_would_drain(u):
+            self.rebalance(max(1, self.num_shards // 2))
+        shard_of = self._router.route(q)
+        applied = 0
+        for s, svc in enumerate(self._shards):
+            m = shard_of == s
+            if m.any():
+                applied += svc.delete(q[m])
+        self._plan = None
+        self._maybe_rebalance()
+        return applied
+
+    def _delete_would_drain(self, u: np.ndarray) -> bool:
+        """True when deleting unique keys ``u`` could leave some shard
+        below the 2 keys its IndexService needs."""
+        shard_u = self._router.route(u)
+        counts = self._live_counts()
+        per_shard = np.bincount(shard_u, minlength=self.num_shards)
+        risky = np.nonzero(counts - per_shard < 2)[0]
+        for s in risky:
+            _, live = self._shards[s]._rank_exact(u[shard_u == s])
+            if counts[s] - int(live.sum()) < 2:
+                return True
+        return False
+
+    # ---- mixed batched front end ----------------------------------------
+    def execute(self, ops: Sequence[Tuple]) -> List:
+        dispatch = {
+            "insert": self.insert,
+            "delete": self.delete,
+            "get": self.get,
+            "contains": self.contains,
+            "range": self.range_lookup,
+        }
+        out = []
+        for kind, *args in ops:
+            if kind not in dispatch:
+                raise ValueError(f"unknown op {kind!r}")
+            out.append(dispatch[kind](*args))
+        return out
+
+    # ---- compaction / rebalancing ---------------------------------------
+    def flush(self) -> None:
+        if self.num_shards > 1 and (self._live_counts() < 2).any():
+            # a drained shard cannot compact; merge it away first
+            self.rebalance(max(1, self.num_shards // 2))
+        for s in self._shards:
+            s.flush()
+        self._plan = None
+
+    def _maybe_rebalance(self) -> bool:
+        k = self.num_shards
+        counts = self._live_counts()
+        total = int(counts.sum())
+        target = self.config.num_shards
+        if k < target and total >= 4 * target:
+            # earlier drain-rebalances shrank K; regrow to the intent
+            self.rebalance(target)
+            return True
+        if k == 1:
+            return False
+        if counts.min() < 2:
+            self.rebalance(max(1, k // 2))
+            return True
+        if total < 4 * k:
+            return False
+        if counts.max() <= self.config.shard_balance_factor * total / k:
+            return False
+        self.rebalance()
+        return True
+
+    def rebalance(self, num_shards: Optional[int] = None) -> None:
+        """Boundary re-fit: capture every shard's exact live
+        (keys, vals) — merged from (snapshot, frozen, active), NO
+        compaction, so even a fully drained shard folds in — re-cut
+        quantile boundaries over the global live set, rebuild the
+        shards.  Keys change owners; global ranks are invariant (the
+        oracle tests churn straight through this).  K clamps to
+        live/2 so every rebuilt shard keeps the >= 2 keys an
+        IndexService needs."""
+        parts = [_live_arrays(s) for s in self._shards]
+        self._retired["versions"] += sum(s.version for s in self._shards)
+        for svc in self._shards:  # keep aggregate op counters monotone
+            for stat, v in svc.stats.items():
+                self._retired[stat] = self._retired.get(stat, 0) + v
+        keys = np.concatenate([p[0] for p in parts])
+        vals = None
+        if all(p[1] is not None for p in parts):
+            vals = np.concatenate([p[1] for p in parts])
+        k = max(1, min(num_shards or self.num_shards, keys.size // 2))
+        self._router = LearnedRouter.from_keys(keys, k)
+        self._shards = self._build_shards(keys, vals)
+        self._plan = None
+        self.stats["rebalances"] += 1
+        if self.config.snapshot_dir is not None:
+            self._save_router()
+
+    # ---- persistence -----------------------------------------------------
+    def _save_router(self) -> str:
+        os.makedirs(self.config.snapshot_dir, exist_ok=True)
+        return self._router.save(
+            os.path.join(self.config.snapshot_dir, _ROUTER_FILE)
+        )
+
+    def save(self, directory: Optional[str] = None) -> str:
+        """Drain + persist: every shard compacts and writes its latest
+        snapshot under ``<dir>/shard-XX/``; the router lands beside
+        them."""
+        if directory is not None:
+            self.config = dataclasses.replace(
+                self.config, snapshot_dir=directory
+            )
+        assert self.config.snapshot_dir is not None, "no snapshot_dir"
+        self.flush()
+        for s, svc in enumerate(self._shards):
+            svc.save(os.path.join(
+                self.config.snapshot_dir, _SHARD_DIR.format(s)
+            ))
+        return self._save_router()
+
+    @classmethod
+    def load(
+        cls, directory: str, config: Optional[ServiceConfig] = None
+    ) -> "ShardedIndexService":
+        """Restart: reload the router + every shard's latest snapshot."""
+        router = LearnedRouter.load(os.path.join(directory, _ROUTER_FILE))
+        config = config or ServiceConfig()
+        config = dataclasses.replace(
+            config, snapshot_dir=directory, num_shards=router.num_shards
+        )
+        svc = cls(np.empty(0), config, _router=router, _shards=[])
+        svc._shards = [
+            IndexService.load(
+                os.path.join(directory, _SHARD_DIR.format(s)),
+                svc._shard_config(s),
+            )
+            for s in range(router.num_shards)
+        ]
+        return svc
+
+    # ---- reporting -------------------------------------------------------
+    def stats_summary(self) -> Dict[str, object]:
+        def agg(key):
+            return (self._retired.get(key, 0)
+                    + sum(s.stats[key] for s in self._shards))
+        counts = self._live_counts()
+        return {
+            "num_shards": self.num_shards,
+            "live_keys": int(counts.sum()),
+            "shard_live_keys": counts.tolist(),
+            "shard_versions": [s.version for s in self._shards],
+            "rebalances": int(self.stats["rebalances"]),
+            "router_model_hit_rate": self._router.model_hit_rate,
+            "get": {
+                "count": int(self.stats["get"]),
+                "ns_per_op": (
+                    self.stats["get_s"] / self.stats["get"] * 1e9
+                    if self.stats["get"] else 0.0
+                ),
+            },
+            "insert_applied": int(agg("insert_applied")),
+            "delete_applied": int(agg("delete_applied")),
+            "compactions": int(agg("compactions")),
+            "bloom_screened": int(agg("bloom_screened")),
+        }

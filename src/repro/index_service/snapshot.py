@@ -38,6 +38,7 @@ from repro.core import search as search_lib
 from repro.core.bloom import BloomFilter, build_bloom
 from repro.core.keys import KeySet, make_keyset
 from repro.core.rmi import RMIConfig, RMIndex, build_rmi, refit_rmi, rmi_lookup
+from repro.kernels import ops as kernels_ops
 from repro.kernels import ref as kernels_ref
 from repro.kernels.rmi_lookup import (
     rmi_lookup_pallas,
@@ -60,11 +61,25 @@ _SNAP_RE = re.compile(r"snapshot-(\d+)\.npz$")
 #       prefix gather without leaving VMEM (interpret mode off-TPU).
 #   xla_fused   — identical-signature pure-XLA fallback for
 #       pallas_fused: same arithmetic, bit-identical results, no
-#       pallas_call.  The parity suite pins all of these to one
-#       np.searchsorted oracle.
+#       pallas_call.
+#   sharded_fused — the key space split into run-aligned sub-shards,
+#       each with its own small RMI; ONE pallas_call with the shard
+#       axis as a grid dimension runs every per-shard bounded search,
+#       then global ranks reassemble by prefix-summed shard offsets
+#       (`ops.sharded_reassemble`).  Same (base_lb, merged_rank)
+#       signature; the vmapped XLA fallback shares the per-shard body.
+#       The parity suite pins all of these to one np.searchsorted
+#       oracle.
 MERGED_STRATEGIES: Tuple[str, ...] = (
     "binary", "biased", "quaternary", "pallas", "pallas_fused", "xla_fused",
+    "sharded_fused",
 )
+
+# sub-shard count for the snapshot-level `sharded_fused` strategy (the
+# service-level ShardedIndexService shards by its router instead);
+# small snapshots fall back to fewer sub-shards so every chunk keeps
+# >= 2 distinct float32 keys
+SHARDED_FUSED_SUBSHARDS = 4
 
 
 def validate_strategy(strategy: str) -> str:
@@ -114,6 +129,60 @@ class IndexSnapshot:
                      (idx.leaf_w, idx.leaf_b, idx.err_lo, idx.err_hi))
         return s0, arrs, tuple(idx.config.stage0_hidden)
 
+    def _sharded_plan(self) -> Dict[str, object]:
+        """Lazy sub-shard decomposition for the `sharded_fused` strategy.
+
+        The float32-normalized base array splits into up to
+        `SHARDED_FUSED_SUBSHARDS` contiguous chunks whose cut points
+        are *run-aligned* (moved to the start of any equal-f32 run), so
+        no duplicate run straddles a boundary and the route rule
+        ``shard(q) = #{chunk starts <= q}`` keeps the global lower
+        bound decomposable as ``chunk_offset + local lower bound`` for
+        every query.  Each chunk gets its own linear-stage-0 RMI built
+        directly in the global normalized frame (KeySet constructed
+        by hand: norm IS the chunk, so stored keys hit the per-shard
+        window contract bit-for-bit), and the per-shard arrays stack
+        zero/inf-padded with true sizes carried as traced scalars.
+        """
+        plan = getattr(self, "_shard_plan", None)
+        if plan is not None:
+            return plan
+        norm = self.keys.norm
+        n = self.n
+        s = max(1, min(SHARDED_FUSED_SUBSHARDS, n // 512))
+        while True:
+            cuts = sorted(
+                {int(np.searchsorted(norm, norm[(j * n) // s], side="left"))
+                 for j in range(1, s)} - {0, n}
+            )
+            bounds = [0] + cuts + [n]
+            chunks = [norm[a:b] for a, b in zip(bounds[:-1], bounds[1:])]
+            if s == 1 or all(np.unique(c).size >= 2 for c in chunks):
+                break
+            s -= 1  # a chunk collapsed to one f32 run: coarsen
+        s = len(chunks)
+
+        rmis = []
+        for chunk in chunks:
+            ks = KeySet(raw=chunk.astype(np.float64), norm=chunk,
+                        lo=0.0, hi=1.0)
+            rmis.append(build_rmi(ks, RMIConfig(
+                num_leaves=max(8, chunk.size // 48),
+                stage0_hidden=(), stage0_train_steps=0,
+            )))
+        shard_n = np.array([c.size for c in chunks], np.int32)
+        base_off = np.zeros(s, np.int32)
+        base_off[1:] = np.cumsum(shard_n[:-1])
+        plan = {
+            **kernels_ops.stack_shard_arrays(rmis, chunks),
+            "S": s,
+            "starts": jnp.asarray(np.array(
+                [c[0] for c in chunks[1:]], np.float32)),
+            "base_off": jnp.asarray(base_off),
+        }
+        self._shard_plan = plan
+        return plan
+
     def merged_lookup_fn(self, strategy: str = "binary") -> Callable:
         """jit fn (q_norm, delta_keys, delta_prefix) -> (base_lb, rank).
 
@@ -133,7 +202,39 @@ class IndexSnapshot:
             n, m, w = self.index.n, self.index.num_leaves, self.index.max_window
             if strategy in ("pallas_fused", "xla_fused", "pallas"):
                 s0, arrs, hidden = self._kernel_closure_args()
-            if strategy == "pallas_fused":
+            if strategy == "sharded_fused":
+                plan = self._sharded_plan()
+                num_shards = plan["S"]
+
+                @jax.jit
+                def merged(q, dkeys, dprefix):
+                    # route -> every shard row runs its bounded search in
+                    # one grid-over-shards pallas_call -> prefix-offset
+                    # reassembly.  The delta stays global at snapshot
+                    # level (one sorted array), so each row searches the
+                    # same broadcast delta and merged offsets == base
+                    # offsets; per-shard deltas enter at the service
+                    # level (ShardedIndexService).
+                    shard = jnp.searchsorted(
+                        plan["starts"], q, side="right"
+                    ).astype(jnp.int32)
+                    qs = jnp.broadcast_to(q, (num_shards, q.shape[0]))
+                    dk = jnp.broadcast_to(
+                        dkeys, (num_shards, dkeys.shape[0]))
+                    dp = jnp.broadcast_to(
+                        dprefix, (num_shards, dprefix.shape[0]))
+                    lb, ct = kernels_ops.rmi_sharded_merged_lookup_op(
+                        qs, plan["stage0"], plan["leaf_w"], plan["leaf_b"],
+                        plan["err_lo"], plan["err_hi"], plan["keys"],
+                        dk, dp, plan["shard_n"], plan["shard_m"],
+                        plan["shard_ratio"],
+                        hidden=plan["hidden"],
+                        max_window=plan["max_window"],
+                    )
+                    return kernels_ops.sharded_reassemble(
+                        lb, ct, shard, plan["base_off"], plan["base_off"]
+                    )
+            elif strategy == "pallas_fused":
                 def merged(q, dkeys, dprefix):
                     # rmi_merged_lookup_pallas is itself jitted (static
                     # shape args) — one dispatch, two outputs
@@ -188,7 +289,17 @@ class IndexSnapshot:
         if fn is None:
             base_norm = jnp.asarray(self.keys.norm)
             n, m, w = self.index.n, self.index.num_leaves, self.index.max_window
-            if strategy in ("pallas", "pallas_fused"):
+            if strategy == "sharded_fused":
+                # the sharded base search IS the merged path with
+                # nothing staged: reuse its compiled closure with an
+                # empty (+inf-padded, zero-prefix) delta
+                merged = self.merged_lookup_fn("sharded_fused")
+                dk0 = jnp.full((64,), jnp.inf, jnp.float32)
+                dp0 = jnp.zeros((65,), jnp.int32)
+
+                def base(q):
+                    return merged(q, dk0, dp0)[0]
+            elif strategy in ("pallas", "pallas_fused"):
                 s0, arrs, hidden = self._kernel_closure_args()
 
                 def base(q):

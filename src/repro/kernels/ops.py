@@ -10,8 +10,11 @@ flipped to False by the TPU launcher.
 
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels import ref
 from repro.kernels.bloom_probe import bloom_probe_pallas
@@ -20,6 +23,7 @@ from repro.kernels.hash_probe import hash_probe_pallas
 from repro.kernels.rmi_lookup import (
     rmi_lookup_pallas,
     rmi_merged_lookup_pallas,
+    rmi_sharded_merged_lookup_pallas,
     stage0_flat,
 )
 
@@ -81,6 +85,135 @@ def rmi_merged_lookup_op(index, sorted_keys_norm, q_norm, delta_keys,
         block_q=block_q,
         interpret=interpret,
     )
+
+
+def stack_shard_arrays(indexes, key_arrays):
+    """Pad/stack per-shard (RMIndex, sorted f32 keys) pairs into the
+    (S, ...) layout `rmi_sharded_merged_lookup_op` consumes — THE one
+    place that owns the stacked-layout contract (pad values, dtypes,
+    traced-size metadata) for both the snapshot-level sub-shard plan
+    and the sharded service's device plan.
+
+    Leaf arrays zero-pad to the widest shard, keys +inf-pad (never
+    read: the kernel clips by the traced true size), and
+    ``shard_ratio`` is ``float32(m / n)`` computed HOST-side so leaf
+    selection stays bit-identical to each shard's build-time
+    arithmetic.  Returns a dict of stacked jnp arrays plus the shared
+    static ``hidden`` / ``max_window`` entries.
+    """
+    n_max = max(k.size for k in key_arrays)
+    m_max = max(ix.num_leaves for ix in indexes)
+    hiddens = {tuple(ix.config.stage0_hidden) for ix in indexes}
+    if len(hiddens) != 1:
+        raise ValueError("shards disagree on stage-0 architecture")
+    nl = len(next(iter(hiddens))) + 1
+
+    def pad_m(a, m):
+        return np.pad(np.asarray(a, np.float32), (0, m_max - m))
+
+    stage0 = tuple(
+        np.stack([
+            np.asarray(ix.stage0_params[f"{kind}{i}"], np.float32)
+            for ix in indexes
+        ])
+        for i in range(nl) for kind in ("w", "b")
+    )
+    keys = np.stack([
+        np.pad(np.asarray(k, np.float32), (0, n_max - k.size),
+               constant_values=np.inf)
+        for k in key_arrays
+    ])
+    return {
+        "stage0": tuple(jnp.asarray(p) for p in stage0),
+        "leaf_w": jnp.asarray(np.stack(
+            [pad_m(ix.leaf_w, ix.num_leaves) for ix in indexes])),
+        "leaf_b": jnp.asarray(np.stack(
+            [pad_m(ix.leaf_b, ix.num_leaves) for ix in indexes])),
+        "err_lo": jnp.asarray(np.stack(
+            [pad_m(ix.err_lo, ix.num_leaves) for ix in indexes])),
+        "err_hi": jnp.asarray(np.stack(
+            [pad_m(ix.err_hi, ix.num_leaves) for ix in indexes])),
+        "keys": jnp.asarray(keys),
+        "shard_n": jnp.asarray(np.array(
+            [ix.n for ix in indexes], np.int32)),
+        "shard_m": jnp.asarray(np.array(
+            [ix.num_leaves for ix in indexes], np.int32)),
+        "shard_ratio": jnp.asarray(np.array(
+            [np.float32(ix.num_leaves / ix.n) for ix in indexes],
+            np.float32)),
+        "hidden": next(iter(hiddens)),
+        "max_window": max(ix.max_window for ix in indexes),
+    }
+
+
+def rmi_sharded_merged_lookup_op(
+    q_stacked, stage0, leaf_w, leaf_b, err_lo, err_hi, sorted_keys,
+    delta_keys, delta_prefix, shard_n, shard_m, shard_ratio, *,
+    hidden=(), max_window, block_q=1024, interpret=None, use_kernel=True,
+):
+    """Per-shard merged lookup over stacked (S, ...) shard arrays.
+
+    One pallas_call with the shard axis as a grid dimension
+    (``use_kernel=True``) or the vmapped XLA fallback sharing the same
+    per-shard body (``use_kernel=False`` — the path that partitions
+    over devices when the stacked arrays carry a shard-axis sharding).
+    Returns the per-shard local ``(base_lb, delta_contrib)`` matrices;
+    feed them to `sharded_reassemble` for global ranks.
+    """
+    args = (
+        jnp.asarray(q_stacked),
+        tuple(jnp.asarray(p) for p in stage0),
+        jnp.asarray(leaf_w), jnp.asarray(leaf_b),
+        jnp.asarray(err_lo), jnp.asarray(err_hi),
+        jnp.asarray(sorted_keys),
+        jnp.asarray(delta_keys), jnp.asarray(delta_prefix),
+        jnp.asarray(shard_n), jnp.asarray(shard_m),
+        jnp.asarray(shard_ratio),
+    )
+    if not use_kernel:
+        return _sharded_reference_jit(*args, max_window=max_window)
+    return rmi_sharded_merged_lookup_pallas(
+        *args, hidden=tuple(hidden), max_window=max_window,
+        block_q=block_q, interpret=interpret,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("max_window",))
+def _sharded_reference_jit(q, stage0, leaf_w, leaf_b, err_lo, err_hi,
+                           sorted_keys, delta_keys, delta_prefix,
+                           shard_n, shard_m, shard_ratio, *, max_window):
+    if q.shape[1] == 0:
+        empty = jnp.zeros(q.shape, jnp.int32)
+        return empty, empty
+    return ref.rmi_sharded_merged_lookup_reference(
+        q, stage0, leaf_w, leaf_b, err_lo, err_hi, sorted_keys,
+        delta_keys, delta_prefix, shard_n, shard_m, shard_ratio,
+        max_window=max_window,
+    )
+
+
+@jax.jit
+def sharded_reassemble(local_base, delta_contrib, shard_of_q,
+                       base_offsets, merged_offsets):
+    """Global rank reassembly: pick each query's routed shard row and
+    add the prefix-sum offsets.
+
+    ``base_offsets[j]`` is the number of base keys in shards < j and
+    ``merged_offsets[j]`` the number of LIVE keys (base + delta net) in
+    shards < j, so
+
+        base(q)   = base_offsets[route(q)]   + local_base
+        merged(q) = merged_offsets[route(q)] + local_base + delta_contrib
+
+    — the invariant that makes K shards answer with the single global
+    array's ranks.  (At the snapshot level, where the delta is global
+    rather than per-shard, callers pass ``merged_offsets=base_offsets``.)
+    """
+    j = shard_of_q.astype(jnp.int32)[None, :]
+    lb = jnp.take_along_axis(local_base, j, axis=0)[0]
+    ct = jnp.take_along_axis(delta_contrib, j, axis=0)[0]
+    jq = j[0]
+    return base_offsets[jq] + lb, merged_offsets[jq] + lb + ct
 
 
 def bloom_probe_op(bf, queries_u32, *, interpret=True):

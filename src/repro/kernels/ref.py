@@ -7,11 +7,14 @@ assert_allclose against these.
 
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import search as search_lib
+from repro.kernels import rmi_lookup as rmi_lookup_lib
 
 
 def _rmi_predict_flat(
@@ -91,6 +94,46 @@ def rmi_merged_lookup_reference(
     )
     dlb = search_lib.lower_bound_full(delta_keys, q)
     return base, base + delta_prefix[dlb]
+
+
+def rmi_sharded_merged_lookup_reference(
+    q: jax.Array,                  # (S, B) per-shard normalized queries
+    stage0: tuple,                 # (w0, b0, ...) each stacked (S, ...)
+    leaf_w: jax.Array,             # (S, M)
+    leaf_b: jax.Array,             # (S, M)
+    err_lo: jax.Array,             # (S, M)
+    err_hi: jax.Array,             # (S, M)
+    sorted_keys: jax.Array,        # (S, N)
+    delta_keys: jax.Array,         # (S, D)
+    delta_prefix: jax.Array,       # (S, D+1)
+    shard_n: jax.Array,            # (S,) int32
+    shard_m: jax.Array,            # (S,) int32
+    shard_ratio: jax.Array,        # (S,) float32
+    *,
+    max_window: int,
+) -> tuple:
+    """XLA fallback for `rmi_sharded_merged_lookup_pallas`: the same
+    per-shard body vmapped over the shard axis instead of iterated by
+    the kernel grid, so ``(local_base, delta_contrib)`` is bit-identical
+    to the kernel's.  Unlike the other oracles here it shares the
+    kernel's (pure-jnp) body on purpose — the independent oracle for
+    the sharded path is ``np.searchsorted`` in the parity suite, and
+    sharing the body is what makes this a drop-in fallback rather than
+    a second implementation to keep in sync.
+    """
+    steps = rmi_lookup_lib._search_steps(max_window)
+    dsteps = rmi_lookup_lib._search_steps(delta_keys.shape[1])
+    body = functools.partial(
+        rmi_lookup_lib._sharded_shard_body, steps=steps, dsteps=dsteps
+    )
+
+    def one_shard(q_s, params_s, lw, lb, elo, ehi, keys, dk, dp, n, m, ratio):
+        return body(q_s, params_s, lw, lb, elo, ehi, keys, dk, dp, n, m, ratio)
+
+    return jax.vmap(one_shard)(
+        q, tuple(stage0), leaf_w, leaf_b, err_lo, err_hi, sorted_keys,
+        delta_keys, delta_prefix, shard_n, shard_m, shard_ratio,
+    )
 
 
 def bloom_probe_reference(

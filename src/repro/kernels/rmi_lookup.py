@@ -192,6 +192,102 @@ def _rmi_merged_kernel(
     merged_ref[...] = lb + jnp.take(dprefix_ref[...], dlb)
 
 
+def _sharded_shard_body(
+    q: jnp.ndarray,              # (B,) this shard's normalized queries
+    params,                      # flat (w0, b0, ...) values for this shard
+    leaf_w: jnp.ndarray,
+    leaf_b: jnp.ndarray,
+    err_lo: jnp.ndarray,
+    err_hi: jnp.ndarray,
+    keys: jnp.ndarray,           # (N,) padded; pads never read (clip by n)
+    dkeys: jnp.ndarray,          # (D,) +inf-padded delta keys
+    dprefix: jnp.ndarray,        # (D+1,) prefix, constant over the pad tail
+    n,                           # () int32 — true base size of this shard
+    m,                           # () int32 — true leaf count of this shard
+    ratio,                       # () float32 — float32(m / n), HOST-computed
+    *,
+    steps: int,
+    dsteps: int,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One shard of the sharded merged lookup: `_base_lower_bound` with
+    the static (n, num_leaves) promoted to traced per-shard scalars, so
+    heterogeneous shards stack on one axis (one kernel grid dim / one
+    vmap axis) instead of one dispatch per shard.
+
+    ``ratio`` must be ``np.float32(m / n)`` computed on the host — the
+    same f64-divide-then-round the static kernel's weak-typed
+    ``num_leaves / n`` python float performs — so leaf selection stays
+    bit-identical to build-time leaf assignment (the window contract).
+    ``steps`` is the max over shards; extra trips past a shard's own
+    window only overshoot in the lb == n case, which the final
+    ``minimum(lo, n)`` clamp repairs.  Returns ``(base_lb,
+    delta_prefix_contribution)``; callers add the global shard offsets
+    (see `ops.sharded_reassemble`).
+    """
+    nl = len(params) // 2
+    h = q[:, None]
+    for i in range(nl):
+        w, b = params[2 * i], params[2 * i + 1]
+        h = h @ w + b[None, :]
+        if i < nl - 1:
+            h = jnp.maximum(h, 0.0)
+    p0 = h[:, 0]
+
+    nf = n.astype(jnp.float32)
+    leaf = jnp.clip(jnp.floor(p0 * ratio).astype(jnp.int32), 0, m - 1)
+    slope = jnp.take(leaf_w, leaf)
+    inter = jnp.take(leaf_b, leaf)
+    pos = jnp.clip(slope * q + inter, 0.0, nf - 1.0)
+    lo = jnp.clip((pos + jnp.take(err_lo, leaf)).astype(jnp.int32), 0, n)
+    hi = jnp.clip((pos + jnp.take(err_hi, leaf)).astype(jnp.int32) + 1, 0, n)
+
+    p0i = jnp.clip(pos.astype(jnp.int32), 0, n - 1)
+    kp = jnp.take(keys, p0i)
+    right = kp < q
+    lo = jnp.where(right, jnp.maximum(lo, p0i + 1), lo)
+    hi = jnp.where(right, hi, jnp.minimum(hi, p0i))
+
+    def body(_, state):
+        lo, hi = state
+        mid = (lo + hi) // 2
+        km = jnp.take(keys, jnp.clip(mid, 0, n - 1))
+        r = km < q
+        return jnp.where(r, mid + 1, lo), jnp.where(r, hi, mid)
+
+    lo, hi = jax.lax.fori_loop(0, steps, body, (lo, hi))
+    lb = jnp.minimum(lo, n)
+    dlb = _delta_lower_bound(q, dkeys, dsteps=dsteps)
+    return lb, jnp.take(dprefix, dlb)
+
+
+def _rmi_sharded_kernel(
+    # refs: q (1,bq), stage0 params (1,...), leaf arrays (1,M), keys
+    # (1,N), dkeys (1,D), dprefix (1,D+1), n (1,), m (1,), ratio (1,),
+    # out_base (1,bq), out_contrib (1,bq)
+    *refs,
+    hidden: Tuple[int, ...],
+    steps: int,
+    dsteps: int,
+):
+    nl = len(hidden) + 1
+    q_ref = refs[0]
+    params = tuple(r[0] for r in refs[1 : 1 + 2 * nl])
+    (leaf_w_ref, leaf_b_ref, err_lo_ref, err_hi_ref, keys_ref,
+     dkeys_ref, dprefix_ref, n_ref, m_ref, ratio_ref) = refs[
+        1 + 2 * nl : 11 + 2 * nl
+    ]
+    base_ref, contrib_ref = refs[-2], refs[-1]
+    lb, contrib = _sharded_shard_body(
+        q_ref[0], params, leaf_w_ref[0], leaf_b_ref[0],
+        err_lo_ref[0], err_hi_ref[0], keys_ref[0],
+        dkeys_ref[0], dprefix_ref[0],
+        n_ref[0], m_ref[0], ratio_ref[0],
+        steps=steps, dsteps=dsteps,
+    )
+    base_ref[0, :] = lb
+    contrib_ref[0, :] = contrib
+
+
 def _tile(b: int, block_q: int) -> Tuple[int, int]:
     bq = min(block_q, b)
     padded = (b + bq - 1) // bq * bq
@@ -317,6 +413,79 @@ def rmi_merged_lookup_pallas(
     )(q, *stage0, leaf_w, leaf_b, err_lo, err_hi, sorted_keys,
       delta_keys, delta_prefix)
     return base[:b], merged[:b]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("hidden", "max_window", "block_q", "interpret"),
+)
+def rmi_sharded_merged_lookup_pallas(
+    q: jax.Array,                      # (S, B) per-shard normalized queries
+    stage0: Tuple[jax.Array, ...],     # (w0, b0, ...) each stacked (S, ...)
+    leaf_w: jax.Array,                 # (S, M) zero-padded past each shard's m
+    leaf_b: jax.Array,                 # (S, M)
+    err_lo: jax.Array,                 # (S, M)
+    err_hi: jax.Array,                 # (S, M)
+    sorted_keys: jax.Array,            # (S, N) padded; pads unread (clip by n)
+    delta_keys: jax.Array,             # (S, D) +inf-padded per-shard deltas
+    delta_prefix: jax.Array,           # (S, D+1) prefix, constant on pad tail
+    shard_n: jax.Array,                # (S,) int32 true base sizes
+    shard_m: jax.Array,                # (S,) int32 true leaf counts
+    shard_ratio: jax.Array,            # (S,) float32 — f32(m/n) per shard
+    *,
+    hidden: Tuple[int, ...],
+    max_window: int,                   # max over shards (extra trips clamped)
+    block_q: int = 1024,
+    interpret: Optional[bool] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Sharded merged lookup: grid = (shard, query tile), ONE pallas_call.
+
+    Every query tile is evaluated on every shard row (the shard axis is
+    a grid dimension — on TPU it maps onto cores/devices; there is no
+    data-dependent per-shard gather inside the kernel).  Returns the
+    per-shard local ``(base_lb, delta_prefix_contribution)`` matrices,
+    both (S, B); `ops.sharded_reassemble` selects each query's routed
+    row and adds the global prefix-sum offsets.  Static shapes are the
+    padded maxima — per-shard true sizes travel as traced scalars, so
+    one jit cache entry serves heterogeneous shards.
+    """
+    interpret = _resolve_interpret(interpret)
+    s, b = q.shape
+    if b == 0:
+        empty = jnp.zeros((s, 0), jnp.int32)
+        return empty, empty
+    bq, padded = _tile(b, block_q)
+    if padded != b:
+        q = jnp.pad(q, ((0, 0), (0, padded - b)))
+    steps = _search_steps(max_window)
+    dsteps = _search_steps(delta_keys.shape[1])
+    grid = (s, padded // bq)
+
+    def row_spec(a: jax.Array) -> pl.BlockSpec:
+        return pl.BlockSpec((1,) + a.shape[1:], lambda si, ti: (si,) + (0,) * (a.ndim - 1))
+
+    in_specs = [pl.BlockSpec((1, bq), lambda si, ti: (si, ti))]
+    in_specs += [row_spec(p) for p in stage0]
+    in_specs += [row_spec(a) for a in
+                 (leaf_w, leaf_b, err_lo, err_hi, sorted_keys,
+                  delta_keys, delta_prefix, shard_n, shard_m, shard_ratio)]
+
+    tile_spec = lambda: pl.BlockSpec((1, bq), lambda si, ti: (si, ti))
+    base, contrib = pl.pallas_call(
+        functools.partial(
+            _rmi_sharded_kernel, hidden=hidden, steps=steps, dsteps=dsteps
+        ),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=(tile_spec(), tile_spec()),
+        out_shape=(
+            jax.ShapeDtypeStruct((s, padded), jnp.int32),
+            jax.ShapeDtypeStruct((s, padded), jnp.int32),
+        ),
+        interpret=interpret,
+    )(q, *stage0, leaf_w, leaf_b, err_lo, err_hi, sorted_keys,
+      delta_keys, delta_prefix, shard_n, shard_m, shard_ratio)
+    return base[:, :b], contrib[:, :b]
 
 
 def stage0_flat(params: Dict[str, np.ndarray]) -> Tuple[jax.Array, ...]:

@@ -15,8 +15,14 @@ Allocations and frees no longer invalidate the whole index: they stage
 into an `index_service.DeltaBuffer`, translation consults base + delta
 in one merged pass, and the RMI is only rebuilt — warm, via
 `refit_rmi`, reusing every leaf whose key range didn't change — when
-the delta fills (LSM-style minor compaction).  `benchmarks/paged_kv.py`
-measures RMI vs binary-search page translation.
+the delta fills (LSM-style minor compaction).
+
+``num_shards > 1`` splits the page-table key space into quantile
+ranges, each with its own snapshot + delta + compaction schedule (the
+`ShardedIndexService` layout specialized to value lookups: translation
+is a per-shard gather, so reassembly needs no rank offsets).  A hot
+tenant's allocation churn then only rebuilds its own shard's RMI.
+`benchmarks/paged_kv.py` measures RMI vs binary-search page translation.
 """
 
 from __future__ import annotations
@@ -30,6 +36,7 @@ import numpy as np
 from repro.core.rmi import RMIConfig
 from repro.index_service.compact import Compactor
 from repro.index_service.delta import DeltaBuffer
+from repro.index_service.router import LearnedRouter
 from repro.index_service.snapshot import (
     IndexSnapshot,
     build_snapshot,
@@ -40,26 +47,40 @@ MAX_PAGES_PER_REQ = 4096
 
 
 @dataclasses.dataclass
+class _PageShard:
+    """One range of the page-table key space: snapshot + staged delta."""
+
+    snap: IndexSnapshot
+    delta: DeltaBuffer
+
+
+@dataclasses.dataclass
 class PagedKVAllocator:
     """Free-list page allocator + delta-buffered learned page table.
 
     ``strategy`` selects the base lookup path for `translate` — any
     name in `index_service.MERGED_STRATEGIES`; the kernel strategies
-    (`pallas`, `pallas_fused`) run the Pallas RMI kernel (interpret
-    mode off-TPU)."""
+    (`pallas`, `pallas_fused`, `sharded_fused`) run Pallas RMI kernels
+    (interpret mode off-TPU).  ``num_shards`` > 1 range-partitions the
+    page table (per-shard snapshot/delta/compaction)."""
 
     num_pages: int
     page_size: int
     delta_capacity: int = 2048
     strategy: str = "binary"
+    num_shards: int = 1
 
     def __post_init__(self):
         validate_strategy(self.strategy)
+        if self.num_shards < 1:
+            raise ValueError("num_shards must be >= 1")
         self._free = list(range(self.num_pages - 1, -1, -1))
         self._table: Dict[int, int] = {}   # key -> physical page
         self._per_req: Dict[int, List[int]] = {}
-        self._snap: Optional[IndexSnapshot] = None
-        self._delta = DeltaBuffer(self.delta_capacity)
+        self._shards: List[_PageShard] = []
+        # shard router over the page-table key space (same learned
+        # boundary model + exact fallback the index service uses)
+        self._router = LearnedRouter(np.empty(0, np.float64))
         self._binary_cache = None
 
     # ---- control plane -------------------------------------------------
@@ -88,28 +109,44 @@ class PagedKVAllocator:
         self._stage_many(keys, None, insert=False)
         self._binary_cache = None
 
+    def _route(self, q: np.ndarray) -> np.ndarray:
+        return self._router.route(q)
+
     def _stage_many(self, keys, vals, *, insert: bool) -> None:
-        """Stage page-table mutations into the delta in one merge per
-        chunk (once an index exists); compact when the buffer fills."""
-        if self._snap is None or not keys:
+        """Stage page-table mutations into each routed shard's delta in
+        one merge per chunk (once an index exists); compact a shard
+        when its buffer fills."""
+        if not self._shards or not keys:
             return  # still bootstrapping from the dict table
         q = np.asarray(keys, np.float64)
         v = None if vals is None else np.asarray(vals, np.int64)
-        pos = 0
-        while pos < q.size:
-            room = self._delta.capacity - len(self._delta)
-            if room <= 0:
-                self._compact()
+        shard_of = self._route(q)
+        for s, shard in enumerate(self._shards):
+            mask = shard_of == s
+            if not mask.any():
                 continue
-            c = slice(pos, pos + room)
-            raw = self._snap.keys.raw
-            i = np.clip(np.searchsorted(raw, q[c]), 0, raw.size - 1)
-            live_below = raw[i] == q[c]
-            if insert:
-                self._delta.stage_insert_many(q[c], live_below, v[c])
-            else:
-                self._delta.stage_delete_many(q[c], live_below)
-            pos += room
+            qs = q[mask]
+            vs = None if v is None else v[mask]
+            pos = 0
+            while pos < qs.size:
+                room = shard.delta.capacity - len(shard.delta)
+                if room <= 0:
+                    if self._compact(s):
+                        # full rebuild: the fresh snapshots were cut
+                        # from self._table, which already reflects this
+                        # whole batch — nothing left to stage
+                        return
+                    shard = self._shards[s]
+                    continue
+                c = slice(pos, pos + room)
+                raw = shard.snap.keys.raw
+                i = np.clip(np.searchsorted(raw, qs[c]), 0, raw.size - 1)
+                live_below = raw[i] == qs[c]
+                if insert:
+                    shard.delta.stage_insert_many(qs[c], live_below, vs[c])
+                else:
+                    shard.delta.stage_delete_many(qs[c], live_below)
+                pos += room
 
     @property
     def num_allocated(self) -> int:
@@ -117,60 +154,94 @@ class PagedKVAllocator:
 
     # ---- data plane ------------------------------------------------------
     def rebuild_index(self, *, num_leaves: Optional[int] = None):
-        """Publish a snapshot of the current table: cold-build the first
-        time, warm compaction (stage-0 + unchanged leaves reused)
-        afterwards."""
-        if self._snap is None or num_leaves is not None:
+        """Publish snapshots of the current table: cold-build (and
+        re-cut the shard boundaries) the first time or on explicit
+        resize, warm per-shard compaction (stage-0 + unchanged leaves
+        reused) afterwards."""
+        if not self._shards or num_leaves is not None:
             items = sorted(self._table.items())
             keys = np.array([k for k, _ in items], np.float64)
             vals = np.array([v for _, v in items], np.int64)
-            cfg = RMIConfig(
-                num_leaves=num_leaves or max(16, len(keys) // 64),
-                stage0_hidden=(),
-                stage0_train_steps=0,
-            )
-            self._snap, _ = build_snapshot(keys, vals=vals, config=cfg)
-            self._delta.clear()
-        elif len(self._delta):
-            self._compact()
+            if keys.size < 2:
+                # near-empty table: stay in bootstrap (dict) mode —
+                # translate falls back to the binary baseline
+                self._shards = []
+                self._router = LearnedRouter(np.empty(0, np.float64))
+                return
+            k = max(1, min(self.num_shards, keys.size // 2))
+            self._router = LearnedRouter.from_keys(keys, k)
+            cuts = self._router.split_points(keys)
+            self._shards = []
+            for s in range(self._router.num_shards):
+                a, b = int(cuts[s]), int(cuts[s + 1])
+                cfg = RMIConfig(
+                    num_leaves=num_leaves or max(16, (b - a) // 64),
+                    stage0_hidden=(),
+                    stage0_train_steps=0,
+                )
+                snap, _ = build_snapshot(
+                    keys[a:b], vals=vals[a:b], config=cfg
+                )
+                self._shards.append(
+                    _PageShard(snap, DeltaBuffer(self.delta_capacity))
+                )
+        else:
+            for s, shard in enumerate(self._shards):
+                if len(shard.delta) and self._compact(s):
+                    break  # full rebuild already folded every delta in
 
-    def _compact(self) -> None:
-        old = self._snap
-        target = max(16, (old.n + self._delta.num_inserts) // 64)
+    def _compact(self, s: int) -> bool:
+        """Compact shard ``s``; returns True when the drift forced a
+        full (all-shard) rebuild instead."""
+        shard = self._shards[s]
+        old = shard.snap
+        est = old.n + shard.delta.num_inserts - shard.delta.num_deletes
+        target = max(16, est // 64)
         cfg = old.index.config
-        if not (cfg.num_leaves // 2 <= target <= cfg.num_leaves * 2):
-            # table size drifted past the warm-start regime: re-size leaves
-            self._snap = None
-            self.rebuild_index(num_leaves=target)
-            return
+        if est < 2 or not (cfg.num_leaves // 2 <= target <= cfg.num_leaves * 2):
+            # this shard drained below what an index can hold, or its
+            # table size drifted past the warm-start regime: re-cut
+            # every shard (boundaries may be stale too)
+            self._shards = []
+            self.rebuild_index()
+            return True
         compactor = Compactor(config=cfg, warm=True)
-        self._snap, _ = compactor.compact(old, self._delta)
-        self._delta.clear()
+        new, _ = compactor.compact(old, shard.delta)
+        self._shards[s] = _PageShard(new, DeltaBuffer(self.delta_capacity))
+        return False
 
     def translate(self, request_ids: np.ndarray, logical_pages: np.ndarray) -> np.ndarray:
-        """Batched (request, logical) -> physical page: RMI over the
-        base snapshot merged with the staged delta.
+        """Batched (request, logical) -> physical page: per-shard RMI
+        over the base snapshot merged with that shard's staged delta.
 
         The RMI search runs in float32; `refine_base_rank` converts its
         result to the exact integer-key position (bounded advance over
         float32-duplicate runs), so the answer is exact, not heuristic."""
-        if self._snap is None:
+        if not self._shards:
             self.rebuild_index()
-        snap, delta = self._snap, self._delta
+        if not self._shards:  # < 2 live entries: no index to learn
+            return self.translate_binary(request_ids, logical_pages)
         raw_q = (
             request_ids.astype(np.int64) * MAX_PAGES_PER_REQ
             + logical_pages.astype(np.int64)
         ).astype(np.float64)
-
-        # the delta side is resolved host-side (it is a value lookup,
-        # not a rank), so only the base RMI search runs on device
-        qn = jnp.asarray(snap.keys.normalize(raw_q))
-        b = snap.base_lookup_fn(self.strategy)(qn)
-        idx, in_base = snap.refine_base_rank(raw_q, np.asarray(b))
-
-        out = snap.vals[np.clip(idx, 0, snap.n - 1)]
-        in_ins, ins_vals = delta.lookup_value(raw_q)
-        out = np.where(in_ins, ins_vals, out)
+        shard_of = self._route(raw_q)
+        out = np.zeros(raw_q.shape, np.int64)
+        for s, shard in enumerate(self._shards):
+            mask = shard_of == s
+            if not mask.any():
+                continue
+            qs = raw_q[mask]
+            snap, delta = shard.snap, shard.delta
+            # the delta side is resolved host-side (it is a value
+            # lookup, not a rank), so only the base RMI search runs on
+            # device
+            qn = jnp.asarray(snap.keys.normalize(qs))
+            b = snap.base_lookup_fn(self.strategy)(qn)
+            idx, in_base = snap.refine_base_rank(qs, np.asarray(b))
+            vals = snap.vals[np.clip(idx, 0, snap.n - 1)]
+            in_ins, ins_vals = delta.lookup_value(qs)
+            out[mask] = np.where(in_ins, ins_vals, vals)
         return out
 
     def translate_binary(self, request_ids, logical_pages) -> np.ndarray:

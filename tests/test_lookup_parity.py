@@ -20,7 +20,10 @@ Two layers of guarantee:
     lower bound over the delta), so they must agree bit-for-bit on
     EVERY query, including absent and adversarial ones where the
     window contract does not apply.  (`biased`/`quaternary` probe
-    differently and only join the stored-key oracle check.)
+    differently and only join the stored-key oracle check, as does
+    `sharded_fused`, whose per-sub-shard RMIs probe their own chunks;
+    its kernel-vs-XLA-fallback pair gets its own any-query
+    bit-identity check below.)
 """
 
 import numpy as np
@@ -266,6 +269,73 @@ def test_merged_fused_padding_through_registry():
     assert np.asarray(b).shape == (1280,)
     assert (np.asarray(b) == want_b).all()
     assert (np.asarray(m) == want_m).all()
+
+
+@pytest.mark.parametrize("dist", DIST_PARAMS)
+def test_sharded_fused_kernel_vs_xla_fallback_any_query(dist):
+    """The sharded grid kernel and its vmapped XLA fallback share one
+    per-shard body, so their (local_base, delta_contrib) — and hence
+    the reassembled (base_lb, merged_rank) — must be bit-identical on
+    EVERY query, stored or not, for every distribution."""
+    ks, _ = _build(dist)
+    snap = _snapshot(dist)
+    delta, dk, dp, dkj, dpj = _delta_device(dist)
+    rng = np.random.default_rng(6)
+
+    stored = ks.norm[rng.choice(ks.n, 300)]
+    absent = ks.normalize(rng.uniform(ks.raw[0], ks.raw[-1], 300))
+    staged = ks.normalize(np.concatenate([delta.ins_keys, delta.del_keys]))
+    nudged = np.nextafter(stored[:100], np.float32(np.inf), dtype=np.float32)
+    q = jnp.asarray(np.concatenate([stored, absent, staged, nudged]))
+
+    plan = snap._sharded_plan()
+    assert plan["S"] > 1, "4k keys must actually decompose into sub-shards"
+    s = plan["S"]
+    qs = jnp.broadcast_to(q, (s, q.shape[0]))
+    dkb = jnp.broadcast_to(dkj, (s, dkj.shape[0]))
+    dpb = jnp.broadcast_to(dpj, (s, dpj.shape[0]))
+    args = (qs, plan["stage0"], plan["leaf_w"], plan["leaf_b"],
+            plan["err_lo"], plan["err_hi"], plan["keys"], dkb, dpb,
+            plan["shard_n"], plan["shard_m"], plan["shard_ratio"])
+    lb_k, ct_k = ops.rmi_sharded_merged_lookup_op(
+        *args, hidden=(), max_window=plan["max_window"], use_kernel=True,
+        block_q=BLOCK_Q,
+    )
+    lb_x, ct_x = ops.rmi_sharded_merged_lookup_op(
+        *args, hidden=(), max_window=plan["max_window"], use_kernel=False,
+    )
+    assert (np.asarray(lb_k) == np.asarray(lb_x)).all(), (
+        f"sharded kernel base != XLA fallback ({dist})"
+    )
+    assert (np.asarray(ct_k) == np.asarray(ct_x)).all(), (
+        f"sharded kernel delta contrib != XLA fallback ({dist})"
+    )
+
+
+def test_sharded_fused_reassembly_invariant():
+    """The sub-shard decomposition must be non-vacuous (S > 1, strictly
+    growing chunk offsets) and its reassembled base rank must equal the
+    global searchsorted at every chunk boundary key — the exact spots a
+    broken run-aligned split would corrupt."""
+    ks, _ = _build("dup_heavy")
+    snap = _snapshot("dup_heavy")
+    plan = snap._sharded_plan()
+    assert plan["S"] > 1
+    base_off = np.asarray(plan["base_off"])
+    assert (np.diff(base_off) > 0).all()
+    assert int(np.asarray(plan["shard_n"]).sum()) == ks.n
+    # the stored keys flanking every chunk cut (first key of each
+    # chunk, last key of the chunk before it) through the full closure
+    # — the exact queries a split through a duplicate run would corrupt
+    cuts = base_off[1:]
+    q = np.concatenate([ks.norm[cuts], ks.norm[cuts - 1]])
+    dk, dp = combine_for_device(None, None, ks.normalize)
+    b, m = snap.merged_lookup_fn("sharded_fused")(
+        jnp.asarray(q), jnp.asarray(dk), jnp.asarray(dp)
+    )
+    want = np.searchsorted(ks.norm, q, side="left")
+    assert (np.asarray(b) == want).all()
+    assert (np.asarray(m) == want).all()
 
 
 def test_merged_empty_delta_matches_base():

@@ -1,0 +1,139 @@
+"""Learned router property suite: the shard ranges must tile the whole
+key domain with no gaps and no overlaps, every key must map to exactly
+one shard, and boundary re-fits must never move a frozen key's global
+rank (the reassembly invariant the sharded service rides on).
+
+Hypothesis-style: each property sweeps many seeded random boundary
+sets / key sets / shard counts rather than one hand-picked example.
+"""
+
+import numpy as np
+import pytest
+
+from repro.index_service import ServiceConfig, ShardedIndexService
+from repro.index_service.router import LearnedRouter
+
+
+def _probe_keys(rng, boundaries):
+    """Keys that stress the ranges: far outside, exactly on, one ulp
+    around, and between every boundary."""
+    b = boundaries
+    parts = [
+        rng.uniform(b[0] - 1e9, b[-1] + 1e9, 500),
+        b,                                   # exactly on each boundary
+        np.nextafter(b, -np.inf),            # one ulp below
+        np.nextafter(b, np.inf),             # one ulp above
+        (b[:-1] + b[1:]) / 2 if b.size > 1 else np.empty(0),
+        np.array([-1e300, 1e300, 0.0]),      # domain extremes
+    ]
+    return np.concatenate(parts)
+
+
+@pytest.mark.parametrize("seed", range(8))
+@pytest.mark.parametrize("num_shards", (1, 2, 3, 8, 17))
+def test_route_covers_domain_exactly_once(seed, num_shards):
+    """Every probe key lands in exactly one shard, ids are in range,
+    and the assignment equals the half-open-range oracle — so the
+    ranges [b_{j-1}, b_j) tile (-inf, inf) with no gaps/overlaps."""
+    rng = np.random.default_rng(seed)
+    keys = np.unique(rng.uniform(-1e12, 1e12, 4000))
+    router = LearnedRouter.from_keys(keys, num_shards)
+    assert router.num_shards == num_shards
+    assert router.weight >= 0.0  # monotone model
+
+    q = (_probe_keys(rng, router.boundaries)
+         if router.boundaries.size else rng.uniform(-1e12, 1e12, 500))
+    got = router.route(q)
+    assert got.min() >= 0 and got.max() < num_shards
+    # oracle: shard j owns [b_{j-1}, b_j)
+    want = np.searchsorted(router.boundaries, q, side="right")
+    np.testing.assert_array_equal(got, want)
+    # no overlaps/gaps: routing is monotone in the key and every
+    # boundary key starts its right shard
+    order = np.argsort(q, kind="stable")
+    assert (np.diff(got[order]) >= 0).all()
+    for j, b in enumerate(router.boundaries):
+        assert router.route(np.array([b]))[0] == j + 1
+        assert router.route(np.array([np.nextafter(b, -np.inf)]))[0] == j
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_quantile_boundaries_balance_fill(seed):
+    rng = np.random.default_rng(seed + 100)
+    keys = np.unique(np.exp(rng.normal(0, 2, 20_000)) * 1e6)
+    router = LearnedRouter.from_keys(keys, 8)
+    counts = np.bincount(router.route(keys), minlength=8)
+    assert counts.sum() == keys.size
+    # quantile cuts: every shard within 2x of the mean even for the
+    # skewed lognormal distribution
+    assert counts.max() <= 2 * keys.size / 8
+    assert counts.min() >= keys.size / 8 / 2
+
+
+def test_model_does_most_of_the_routing():
+    """The learned guess must resolve the bulk of uniform traffic —
+    the exact fallback is a correctness net, not the common path."""
+    rng = np.random.default_rng(7)
+    keys = np.unique(rng.uniform(0, 1e12, 50_000))
+    router = LearnedRouter.from_keys(keys, 16)
+    router.route(rng.uniform(0, 1e12, 20_000))
+    assert router.model_hit_rate is not None
+    assert router.model_hit_rate > 0.5
+
+
+@pytest.mark.parametrize(
+    "seed", (0, pytest.param(1, marks=pytest.mark.slow),
+             pytest.param(2, marks=pytest.mark.slow), 3)
+)
+def test_refit_keeps_frozen_keys_global_rank(seed):
+    """Boundary re-fits move keys between shards but NEVER change a
+    key's global rank: freeze a key sample, re-fit on progressively
+    mutated key sets, and require the reassembled ranks to stay pinned
+    to the sorted-array oracle throughout."""
+    rng = np.random.default_rng(seed + 11)
+    base = np.unique(rng.integers(0, 1 << 44, 8_000).astype(np.float64))
+    svc = ShardedIndexService(base, ServiceConfig(
+        num_shards=4, delta_capacity=1024
+    ))
+    frozen = rng.choice(base, 500, replace=False)
+
+    live = set(base.tolist())
+    boundaries_seen = [svc.router.boundaries.copy()]
+    for _ in range(3):
+        ins = rng.integers(0, 1 << 44, 900).astype(np.float64)
+        svc.insert(ins)
+        live.update(float(k) for k in ins)
+        svc.rebalance()  # explicit boundary re-fit every round
+        boundaries_seen.append(svc.router.boundaries.copy())
+        arr = np.array(sorted(live))
+        ranks, found = svc.get(frozen)
+        assert found.all()
+        np.testing.assert_array_equal(
+            ranks, np.searchsorted(arr, frozen, side="left")
+        )
+    # the re-fits really moved the boundaries (the property above is
+    # non-vacuous)
+    assert any(
+        a.size != b.size or not np.array_equal(a, b)
+        for a, b in zip(boundaries_seen, boundaries_seen[1:])
+    )
+
+
+def test_router_rejects_bad_inputs():
+    with pytest.raises(ValueError):
+        LearnedRouter(np.array([3.0, 1.0]))  # not increasing
+    with pytest.raises(ValueError):
+        LearnedRouter.from_keys(np.arange(6, dtype=np.float64), 4)  # too few
+    with pytest.raises(ValueError):
+        LearnedRouter.from_keys(np.arange(64, dtype=np.float64), 0)
+
+
+def test_router_save_load_roundtrip(tmp_path):
+    rng = np.random.default_rng(3)
+    keys = np.unique(rng.uniform(0, 1e9, 10_000))
+    router = LearnedRouter.from_keys(keys, 8)
+    path = router.save(str(tmp_path / "router.npz"))
+    back = LearnedRouter.load(path)
+    q = rng.uniform(-1e9, 2e9, 5_000)
+    np.testing.assert_array_equal(router.route(q), back.route(q))
+    assert back.weight == router.weight and back.bias == router.bias

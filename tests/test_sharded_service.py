@@ -1,0 +1,477 @@
+"""Sharded writable index service: cross-shard correctness under churn,
+pinned to ONE global sorted-array oracle (mirror of
+`test_index_service`), at K in {1, 3, 8}.
+
+The load-bearing guarantees:
+
+  * every interleaved insert/delete/get stream answers with the exact
+    global rank — the per-shard ranks plus the live-count prefix sums
+    must compose to the single-array oracle through many per-shard
+    compactions and router re-fits (tier-1 runs a reduced op count;
+    the full >= 100k-op matrix rides in the nightly slow job);
+  * K=1 is bit-identical to the unsharded `IndexService` — sharding is
+    a pure decomposition, not a different index;
+  * the device path (`lookup_batch`, stacked one-dispatch sharded
+    kernel / vmapped fallback with shard-per-device placement when the
+    host exposes a mesh) agrees with the exact host path on
+    float32-injective key sets.
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.index_service import (
+    MERGED_STRATEGIES,
+    IndexService,
+    ServiceConfig,
+    ShardedIndexService,
+)
+
+KS = (1, 3, 8)
+
+
+# --------------------------------------------------------------------------
+# the acceptance gate: exactness under cross-shard churn
+# --------------------------------------------------------------------------
+
+def _churn_sharded(total_target, n_base, k, delta_capacity=1024,
+                   check_every=4, strategy="binary"):
+    rng = np.random.default_rng(k)  # distinct stream per K
+    base = np.unique(rng.integers(0, 1 << 48, n_base).astype(np.float64))
+    svc = ShardedIndexService(base, ServiceConfig(
+        num_shards=k, delta_capacity=delta_capacity, bloom_fpr=0.02,
+        strategy=strategy,
+    ))
+    live = set(base.tolist())
+
+    total_ops = 0
+    batch = 0
+    while total_ops < total_target:
+        ins = rng.integers(0, 1 << 48, 900).astype(np.float64)
+        svc.insert(ins)
+        live.update(float(x) for x in ins)
+        arr = np.array(sorted(live))
+        dels = rng.choice(arr, 600, replace=False)
+        svc.delete(dels)
+        live.difference_update(float(x) for x in dels)
+        total_ops += 1500
+        batch += 1
+        if batch % check_every == 0:
+            arr = np.array(sorted(live))
+            present = rng.choice(arr, 400, replace=False)
+            absent = rng.integers(0, 1 << 48, 100).astype(np.float64)
+            sample = np.concatenate([present, absent])
+            ranks, found = svc.get(sample)
+            want = np.searchsorted(arr, sample, side="left")
+            assert (ranks == want).all(), (
+                f"K={k}: merged rank diverged from global oracle"
+            )
+            assert (found == np.isin(sample, arr)).all()
+    assert svc.num_keys == len(live)
+    summary = svc.stats_summary()
+    assert summary["compactions"] >= 1, "churn must have compacted"
+    # final full sweep: every live key at its exact global position
+    arr = np.array(sorted(live))
+    sample = rng.choice(arr, min(5_000, arr.size), replace=False)
+    ranks, found = svc.get(sample)
+    assert (ranks == np.searchsorted(arr, sample)).all() and found.all()
+    return svc
+
+
+@pytest.mark.parametrize("k", KS)
+def test_churn_quick_sharded_vs_global_oracle(k):
+    """Tier-1 slice of the cross-shard churn gate (~6k ops per K; the
+    smaller per-shard delta keeps every K compacting within it)."""
+    _churn_sharded(6_000, 8_000, k, delta_capacity=640)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("k", KS)
+def test_churn_100k_sharded_vs_global_oracle(k):
+    _churn_sharded(100_000, 30_000, k, delta_capacity=4096, check_every=8)
+
+
+def test_churn_quick_with_sharded_fused_strategy():
+    """The per-shard read path lowered through the sharded_fused
+    registry strategy (sub-sharded kernel inside each service shard)
+    stays oracle-exact."""
+    _churn_sharded(3_000, 6_000, 3, delta_capacity=640,
+                   strategy="sharded_fused")
+
+
+# --------------------------------------------------------------------------
+# K=1 must be a pure refactor of the unsharded service
+# --------------------------------------------------------------------------
+
+def _k1_vs_unsharded(total_target):
+    rng = np.random.default_rng(0)
+    base = np.unique(rng.integers(0, 1 << 48, 12_000).astype(np.float64))
+    cfg = ServiceConfig(delta_capacity=2048, bloom_fpr=0.02)
+    ref = IndexService(base, dataclasses.replace(cfg))
+    svc = ShardedIndexService(
+        base, dataclasses.replace(cfg, num_shards=1)
+    )
+    total_ops = 0
+    while total_ops < total_target:
+        ins = rng.integers(0, 1 << 48, 700).astype(np.float64)
+        assert svc.insert(ins) == ref.insert(ins)
+        keys = np.array(sorted(
+            set(ref._mgr.current().keys.raw.tolist())
+        ))
+        dels = rng.choice(keys, 300, replace=False)
+        assert svc.delete(dels) == ref.delete(dels)
+        sample = np.concatenate([
+            rng.choice(keys, 300, replace=False),
+            rng.integers(0, 1 << 48, 100).astype(np.float64),
+        ])
+        r_ref, f_ref = ref.get(sample)
+        r_svc, f_svc = svc.get(sample)
+        np.testing.assert_array_equal(r_svc, r_ref)
+        np.testing.assert_array_equal(f_svc, f_ref)
+        np.testing.assert_array_equal(
+            svc.contains(sample), ref.contains(sample)
+        )
+        lo, hi = float(sample.min()), float(sample.max())
+        assert svc.range_lookup(lo, hi) == ref.range_lookup(lo, hi)
+        total_ops += 1100 + 2 * sample.size
+    assert svc.num_keys == ref.num_keys
+    assert ref.stats["compactions"] >= 2, "must span multiple compactions"
+    assert svc.stats_summary()["compactions"] == ref.stats["compactions"]
+
+
+def test_k1_identical_to_unsharded_quick():
+    _k1_vs_unsharded(12_000)
+
+
+@pytest.mark.slow
+def test_k1_identical_to_unsharded_100k():
+    _k1_vs_unsharded(100_000)
+
+
+# --------------------------------------------------------------------------
+# device path: stacked one-dispatch lookup, optional shard-per-device
+# --------------------------------------------------------------------------
+
+def _lattice_service(k, n=12_000, strategy="binary"):
+    """Integer-lattice keys whose float32 normalization is injective,
+    so the no-host-refinement device path is exact, not just close."""
+    base = np.arange(2, n + 2, dtype=np.float64) * 1024.0
+    svc = ShardedIndexService(base, ServiceConfig(
+        num_shards=k, delta_capacity=1024, strategy=strategy,
+    ))
+    return svc, base
+
+
+@pytest.mark.parametrize("k", KS)
+def test_lookup_batch_matches_exact_path(k):
+    rng = np.random.default_rng(k + 40)
+    svc, base = _lattice_service(k)
+    live = set(base.tolist())
+    for _ in range(2):
+        ins = (rng.integers(2, 2 + base.size, 400) * 1024.0 + 512.0)
+        svc.insert(ins)
+        live.update(float(x) for x in ins)
+        arr = np.array(sorted(live))
+        dels = rng.choice(arr, 200, replace=False)
+        svc.delete(dels)
+        live.difference_update(float(x) for x in dels)
+        arr = np.array(sorted(live))
+        # present keys only: the no-refinement device path promises
+        # exactness for stored keys (base or delta); absent keys carry
+        # no window guarantee there (same contract as the unsharded
+        # lookup_batch) and are covered by the exact get() path above
+        sample = rng.choice(arr, 600, replace=False)
+        want, _ = svc.get(sample)
+        got = np.asarray(svc.lookup_batch(sample))
+        np.testing.assert_array_equal(got, want)
+
+
+def test_lookup_batch_device_mapped_when_mesh_available():
+    """With multiple XLA devices (CI forces 8 on CPU) the stacked
+    non-kernel path places shard rows across a 1-D 'shard' mesh; the
+    answers must not change."""
+    from repro.distributed.sharding import index_shard_mesh
+
+    mesh = index_shard_mesh(8)
+    if mesh is None:
+        pytest.skip("single-device host: shard mesh unavailable")
+    assert mesh.shape["shard"] >= 2
+    rng = np.random.default_rng(9)
+    svc, base = _lattice_service(8)
+    svc.insert(np.arange(3, 900, 7, dtype=np.float64) * 1024.0 + 512.0)
+    plan = svc._device_plan()
+    # the stacked base keys really live on the shard mesh
+    assert "shard" in getattr(plan.keys.sharding, "spec", ())
+    sample = rng.choice(base, 1_500)
+    want, _ = svc.get(sample)
+    np.testing.assert_array_equal(np.asarray(svc.lookup_batch(sample)), want)
+
+
+def test_lookup_batch_kernel_strategy_matches_fallback():
+    """pallas grid kernel vs vmapped XLA fallback through the service:
+    same stacked arrays, bit-identical global ranks."""
+    rng = np.random.default_rng(5)
+    svc_k, base = _lattice_service(3, strategy="pallas_fused")
+    svc_x, _ = _lattice_service(3, strategy="binary")
+    ins = np.arange(5, 1200, 11, dtype=np.float64) * 1024.0 + 512.0
+    svc_k.insert(ins)
+    svc_x.insert(ins)
+    sample = rng.choice(base, 777)
+    np.testing.assert_array_equal(
+        np.asarray(svc_k.lookup_batch(sample)),
+        np.asarray(svc_x.lookup_batch(sample)),
+    )
+
+
+# --------------------------------------------------------------------------
+# rebalance, persistence, config plumbing
+# --------------------------------------------------------------------------
+
+def test_hot_shard_triggers_rebalance_and_ranks_survive():
+    rng = np.random.default_rng(6)
+    base = np.unique(rng.integers(0, 1 << 40, 8_000).astype(np.float64))
+    svc = ShardedIndexService(base, ServiceConfig(
+        num_shards=4, delta_capacity=4096, shard_balance_factor=2.0,
+    ))
+    hot = base.max() + 1.0 + np.arange(30_000, dtype=np.float64)
+    svc.insert(hot)  # all routed to the last shard until the re-fit
+    assert svc.stats["rebalances"] >= 1
+    counts = svc._live_counts()
+    assert counts.max() <= 2.0 * counts.sum() / 4
+    live = np.union1d(base, hot)
+    sample = rng.choice(live, 2_000)
+    ranks, found = svc.get(sample)
+    assert found.all()
+    np.testing.assert_array_equal(ranks, np.searchsorted(live, sample))
+
+
+def test_sharded_save_load_restart(tmp_path):
+    rng = np.random.default_rng(2)
+    base = np.unique(rng.integers(0, 1 << 40, 9_000).astype(np.float64))
+    svc = ShardedIndexService(base, ServiceConfig(
+        num_shards=3, delta_capacity=512, snapshot_dir=str(tmp_path),
+        bloom_fpr=0.02,
+    ))
+    ins = np.unique(rng.integers(0, 1 << 40, 2_000).astype(np.float64))
+    svc.insert(ins)
+    svc.save()
+    live = np.union1d(base, ins)
+
+    svc2 = ShardedIndexService.load(str(tmp_path))
+    assert svc2.num_shards == 3
+    sample = rng.choice(live, 2_000)
+    ranks, found = svc2.get(sample)
+    assert found.all()
+    assert (ranks == np.searchsorted(live, sample)).all()
+    # restart keeps serving writes across shard boundaries
+    svc2.insert(np.array([0.5, float(live[-1]) + 7.0]))
+    assert svc2.contains(np.array([0.5, float(live[-1]) + 7.0])).all()
+
+
+def test_valued_sharded_service_roundtrips_values():
+    keys = np.arange(100, dtype=np.float64) * 3.0
+    vals = np.arange(100) * 7
+    svc = ShardedIndexService(
+        keys, ServiceConfig(num_shards=3), vals=vals
+    )
+    ranks, found = svc.get(keys)
+    assert found.all()
+    np.testing.assert_array_equal(ranks, np.arange(100))
+    with pytest.raises(ValueError):
+        ShardedIndexService(
+            np.array([1.0, 1.0, 2.0, 3.0]),
+            ServiceConfig(num_shards=2),
+            vals=np.array([1, 2, 3, 4]),
+        )
+
+
+def test_execute_mixed_batch_sharded():
+    base = np.arange(0, 5000, dtype=np.float64) * 3.0
+    svc = ShardedIndexService(base, ServiceConfig(num_shards=3))
+    res = svc.execute([
+        ("insert", [7.0, 10.0], [70, 100]),
+        ("get", [7.0]),
+        ("contains", [7.0, 8.0]),
+        ("delete", [7.0]),
+        ("contains", [7.0]),
+        ("range", 0.0, 30.0),
+    ])
+    assert res[0] == 2
+    assert res[1][1].all()
+    assert list(res[2]) == [True, False]
+    assert res[3] == 1
+    assert not res[4].any()
+    lo, hi = res[5]
+    assert hi - lo == 11
+
+
+def test_strategy_error_message_enumerates_registry():
+    """The validation error must name every registered strategy —
+    computed from MERGED_STRATEGIES, so new entries (like
+    sharded_fused) can never go stale in the message."""
+    assert "sharded_fused" in MERGED_STRATEGIES
+    for ctor in (
+        lambda: IndexService(
+            np.arange(8, dtype=np.float64),
+            ServiceConfig(strategy="fibonacci"),
+        ),
+        lambda: ShardedIndexService(
+            np.arange(8, dtype=np.float64),
+            ServiceConfig(strategy="fibonacci", num_shards=2),
+        ),
+    ):
+        with pytest.raises(ValueError) as err:
+            ctor()
+        msg = str(err.value)
+        for name in MERGED_STRATEGIES:
+            assert name in msg, f"{name} missing from: {msg}"
+
+
+def test_draining_one_shards_whole_range_survives():
+    """Deleting every key a shard owns must not wedge the service: the
+    drain pre-check merges shards (K halves) before any shard could be
+    asked to compact below 2 keys, and later growth restores K."""
+    svc = ShardedIndexService(
+        np.arange(1000, dtype=np.float64),
+        ServiceConfig(num_shards=4, delta_capacity=32),
+    )
+    for a in range(0, 250, 40):
+        svc.delete(np.arange(a, min(a + 40, 250), dtype=np.float64))
+    svc.flush()  # must not raise
+    live = np.arange(250, 1000, dtype=np.float64)
+    ranks, found = svc.get(live[::13])
+    assert found.all()
+    np.testing.assert_array_equal(ranks, np.searchsorted(live, live[::13]))
+    assert svc.stats["rebalances"] >= 1
+    # growth regrows K toward the configured target
+    svc.insert(np.arange(2000, 6000, dtype=np.float64))
+    assert svc.num_shards == 4
+    live = np.concatenate([live, np.arange(2000, 6000, dtype=np.float64)])
+    ranks, found = svc.get(live[::17])
+    assert found.all()
+    np.testing.assert_array_equal(ranks, np.searchsorted(live, live[::17]))
+
+
+def test_noop_absent_deletes_never_rebalance():
+    """Idempotent retries (deleting keys that are not live) must not
+    trip the drain guard: the guard refines with exact per-shard
+    liveness before paying for a rebalance."""
+    svc = ShardedIndexService(
+        np.arange(800, dtype=np.float64),
+        ServiceConfig(num_shards=8, delta_capacity=64),
+    )
+    assert svc.delete(np.arange(10_000, 10_200, dtype=np.float64)) == 0
+    assert svc.stats["rebalances"] == 0
+    assert svc.num_shards == 8
+
+
+def test_stats_and_version_monotone_across_rebalance():
+    svc = ShardedIndexService(
+        np.arange(800, dtype=np.float64),
+        ServiceConfig(num_shards=4, delta_capacity=64),
+    )
+    svc.insert(np.arange(2000, 2300, dtype=np.float64))
+    pre = svc.stats_summary()
+    v_pre = svc.version
+    svc.rebalance()
+    post = svc.stats_summary()
+    assert post["insert_applied"] == pre["insert_applied"] == 300
+    assert post["compactions"] >= pre["compactions"]
+    assert svc.version >= v_pre
+
+
+def test_near_total_drain_collapses_to_single_shard():
+    svc = ShardedIndexService(
+        np.arange(64, dtype=np.float64),
+        ServiceConfig(num_shards=8, delta_capacity=16),
+    )
+    svc.delete(np.arange(60, dtype=np.float64))
+    svc.flush()
+    assert svc.num_shards == 1  # unsharded semantics from here on
+    ranks, found = svc.get(np.arange(60, 64, dtype=np.float64))
+    assert found.all()
+    np.testing.assert_array_equal(ranks, np.arange(4))
+
+
+def test_too_few_keys_per_shard_rejected():
+    with pytest.raises(ValueError):
+        ShardedIndexService(
+            np.arange(6, dtype=np.float64), ServiceConfig(num_shards=4)
+        )
+
+
+# --------------------------------------------------------------------------
+# sharded KV page table
+# --------------------------------------------------------------------------
+
+def _paged_kv_churn_sharded(rounds, num_shards, strategy="binary"):
+    from repro.serve.kvcache import PagedKVAllocator
+
+    rng = np.random.default_rng(0)
+    alloc = PagedKVAllocator(num_pages=2048, page_size=16,
+                             delta_capacity=256, strategy=strategy,
+                             num_shards=num_shards)
+    active = []
+    for uid in range(150):
+        alloc.alloc(uid, int(rng.integers(1, 8)) * 16)
+        active.append(uid)
+    next_uid = 150
+    alloc.rebuild_index()
+    assert len(alloc._shards) == num_shards
+
+    for round_ in range(rounds):
+        for uid in rng.choice(active, len(active) // 3, replace=False):
+            alloc.free(int(uid))
+            active.remove(uid)
+        for _ in range(40):
+            alloc.alloc(next_uid, int(rng.integers(1, 8)) * 16)
+            active.append(next_uid)
+            next_uid += 1
+        assert alloc.num_allocated + len(alloc._free) == alloc.num_pages
+        req = rng.choice(active, 512)
+        logical = np.array(
+            [rng.integers(0, len(alloc._per_req[r])) for r in req]
+        )
+        got = alloc.translate(req, logical)
+        want = alloc.translate_binary(req, logical)
+        assert (got == want).all(), f"round {round_}: translation diverged"
+
+
+def test_paged_kv_sharded_table_quick():
+    _paged_kv_churn_sharded(rounds=4, num_shards=4)
+
+
+def test_paged_kv_sharded_survives_full_drain():
+    """Freeing every request (deltas full of tombstones, shards
+    drained) must fall back to bootstrap mode, then rebuild cleanly on
+    re-admission."""
+    from repro.serve.kvcache import PagedKVAllocator
+
+    rng = np.random.default_rng(1)
+    alloc = PagedKVAllocator(num_pages=4096, page_size=16,
+                             delta_capacity=128, num_shards=8)
+    for uid in range(200):
+        alloc.alloc(uid, int(rng.integers(1, 8)) * 16)
+    alloc.rebuild_index()
+    for uid in range(200):
+        alloc.free(uid)
+    alloc.rebuild_index()  # must not raise
+    assert alloc.num_allocated == 0
+    for uid in range(200, 280):
+        alloc.alloc(uid, 32)
+    alloc.rebuild_index()
+    req = np.arange(200, 280)
+    logical = np.zeros(80, np.int64)
+    got = alloc.translate(req, logical)
+    np.testing.assert_array_equal(
+        got, alloc.translate_binary(req, logical)
+    )
+
+
+@pytest.mark.slow
+def test_paged_kv_sharded_table_churn():
+    _paged_kv_churn_sharded(rounds=25, num_shards=4)
+    _paged_kv_churn_sharded(rounds=5, num_shards=4, strategy="sharded_fused")
