@@ -22,6 +22,12 @@ Four questions, all ns/lookup CSV rows:
      behind the learned router, one stacked merged-lookup dispatch) vs
      the K=1 baseline — `sharded_sweep`, also runnable alone via
      LIX_SHARDED_ONLY=1 (the CI benchmark-smoke job does).
+  6. What do range *scans* cost (pages/s) as the delta fills, and does
+     the paged iterator beat naive re-merge-then-slice?  `scan_sweep`
+     drains a fixed row range through `IndexService.scan` at several
+     delta fill fractions and races materializing the whole merged
+     array per query — also runnable alone via LIX_SCAN_ONLY=1 (the
+     CI benchmark-smoke job does).
 """
 
 from __future__ import annotations
@@ -81,6 +87,105 @@ def sharded_sweep(raw=None, ks=None) -> None:
             f"router_hit={svc.router.model_hit_rate:.3f};"
             f"compactions={summary['compactions']}",
         )
+
+
+def scan_sweep(raw=None, ks=None) -> None:
+    """Question 6: paged merged scans vs naive re-merge-then-slice.
+
+    At each delta fill fraction (staged inserts + tombstones), drain a
+    fixed key range through the paged scan iterator and through the
+    naive baseline that materializes the whole merged live array per
+    query (tombstone filter + concatenate + argsort) and slices it —
+    what a reader without the scan subsystem would do.  Also times the
+    one-dispatch device scan (`scan_batch`; interpret-mode numbers off
+    TPU are not meaningful, same caveat as the lookup kernels)."""
+    import time
+
+    import jax
+
+    rng = np.random.default_rng(2)
+    if raw is None:  # standalone (LIX_SCAN_ONLY) path
+        raw = gen_weblogs(BENCH_N)
+        ks = make_keyset(raw)
+    n = ks.n
+    page = 512
+    span = max(2 * page, min(n // 4, 50_000))
+    lo, hi = float(ks.raw[n // 8]), float(ks.raw[n // 8 + span])
+    svc = IndexService(
+        ks.raw, ServiceConfig(delta_capacity=DELTA_CAPACITY),
+        vals=np.arange(n, dtype=np.int64),
+    )
+    fresh = iter(np.setdiff1d(
+        rng.integers(0, 1 << 52, 3 * DELTA_CAPACITY).astype(np.float64),
+        ks.raw,
+    ))
+
+    def t_best(fn, repeats=3):
+        best = np.inf
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            fn()
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    def drain():
+        rows = 0
+        for pg in svc.scan(lo, hi, page):
+            rows += pg.count
+        return rows
+
+    def naive():
+        snap, frozen, active = svc._state()
+        keys, vals = snap.keys.raw, snap.vals
+        for level in (frozen, active):
+            if level is None or len(level) == 0:
+                continue
+            keep = np.ones(keys.size, bool)
+            if level.del_keys.size:
+                i = np.clip(np.searchsorted(level.del_keys, keys), 0,
+                            level.del_keys.size - 1)
+                keep = level.del_keys[i] != keys
+            keys = np.concatenate([keys[keep], level.ins_keys])
+            vals = np.concatenate([vals[keep], level.ins_vals])
+            order = np.argsort(keys, kind="stable")
+            keys, vals = keys[order], vals[order]
+        r0, r1 = np.searchsorted(keys, [lo, hi])
+        return keys[r0:r1], vals[r0:r1]
+
+    filled = 0
+    for pct in (0, 10, 50, 100):
+        target = int(DELTA_CAPACITY * pct / 100)
+        if target > filled:
+            add = target - filled
+            # 3/4 staged inserts, 1/4 tombstones: scans must both
+            # weave and elide
+            svc.insert(np.array([next(fresh) for _ in range(add - add // 4)]))
+            live = svc._mgr.current().keys.raw
+            svc.delete(rng.choice(live, add // 4, replace=False))
+            filled = target
+        rows = drain()
+        pages = -(-rows // page)
+        t_scan = t_best(drain)
+        t_naive = t_best(lambda: naive())
+        emit(
+            f"dynamic_index/scan_fill_{pct}pct",
+            t_scan / pages * 1e6,
+            f"rows={rows};pages_per_s={pages / t_scan:.0f};"
+            f"rows_per_s={rows / t_scan:.0f};"
+            f"naive_remerge_ms={t_naive * 1e3:.3f};"
+            f"scan_vs_naive={t_naive / t_scan:.1f}x",
+        )
+    # one-dispatch device scan at the final fill (kernel caveat: off
+    # TPU the pallas path interprets; the XLA fallback is the honest
+    # CPU number, so use the configured strategy's default)
+    t_dev = t_best(lambda: jax.block_until_ready(
+        svc.scan_batch(lo, hi, page)
+    ))
+    emit(
+        "dynamic_index/scan_device_batch",
+        t_dev / max(1, -(-span // page)) * 1e6,
+        f"pages={-(-span // page)};interpret={default_interpret()}",
+    )
 
 
 def main() -> None:
@@ -178,10 +283,13 @@ def main() -> None:
     )
 
     sharded_sweep(raw, ks)
+    scan_sweep(raw, ks)
 
 
 if __name__ == "__main__":
     if os.environ.get("LIX_SHARDED_ONLY", "0") == "1":
         sharded_sweep()
+    elif os.environ.get("LIX_SCAN_ONLY", "0") == "1":
+        scan_sweep()
     else:
         main()

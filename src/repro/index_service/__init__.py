@@ -9,21 +9,33 @@ Public API:
   Sharding:      LearnedRouter (boundary model), ShardedIndexService —
                  K shards, each with its own delta + compaction,
                  global ranks via prefix-sum reassembly
+  Scans:         ScanPage / PinnedView / scan_pages / repack_pages —
+                 paged (keys, vals, live_mask) streams in base+delta
+                 merge order over a view pinned at iterator creation
 """
 
 from repro.index_service.compact import (
+    CompactionStall,
     CompactionStats,
     Compactor,
     merge_delta,
 )
 from repro.index_service.delta import (
     DeltaBuffer,
+    collapse_levels,
     combine_for_device,
     count_less,
     live_mask,
     member,
 )
 from repro.index_service.router import LearnedRouter
+from repro.index_service.scan import (
+    PinnedView,
+    ScanPage,
+    pin_view,
+    repack_pages,
+    scan_pages,
+)
 from repro.index_service.service import IndexService, ServiceConfig
 from repro.index_service.sharded import ShardedIndexService
 from repro.index_service.snapshot import (
@@ -34,9 +46,11 @@ from repro.index_service.snapshot import (
 )
 
 __all__ = [
-    "CompactionStats", "Compactor", "merge_delta",
-    "DeltaBuffer", "combine_for_device", "count_less", "live_mask", "member",
+    "CompactionStall", "CompactionStats", "Compactor", "merge_delta",
+    "DeltaBuffer", "collapse_levels", "combine_for_device", "count_less",
+    "live_mask", "member",
     "IndexService", "ServiceConfig",
     "LearnedRouter", "ShardedIndexService",
+    "PinnedView", "ScanPage", "pin_view", "repack_pages", "scan_pages",
     "IndexSnapshot", "MERGED_STRATEGIES", "VersionManager", "build_snapshot",
 ]

@@ -27,6 +27,14 @@ from repro.index_service.delta import DeltaBuffer
 from repro.index_service.snapshot import IndexSnapshot, build_snapshot
 
 
+class CompactionStall(ValueError):
+    """Merging the frozen delta would leave fewer than ``min_keys``
+    live keys (nearly everything deleted) — the index cannot rebuild.
+    A ValueError subclass so callers treating it as invalid input keep
+    working; the service catches THIS type specifically to fold the
+    delta back and keep serving."""
+
+
 @dataclasses.dataclass
 class CompactionStats:
     version: int
@@ -84,7 +92,7 @@ class Compactor:
         t0 = time.perf_counter()
         merged, vals = merge_delta(snap, frozen)
         if merged.size < self.min_keys:
-            raise ValueError(
+            raise CompactionStall(
                 f"compaction would leave {merged.size} keys "
                 f"(< {self.min_keys}); retain the delta instead"
             )

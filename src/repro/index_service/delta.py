@@ -187,6 +187,23 @@ class DeltaBuffer:
         self._del = np.insert(self._del, np.searchsorted(self._del, newd), newd)
         return int(was_live.sum())
 
+    @classmethod
+    def from_arrays(
+        cls,
+        ins_keys: np.ndarray,
+        ins_vals: np.ndarray,
+        del_keys: np.ndarray,
+        capacity: int,
+    ) -> "DeltaBuffer":
+        """Rebuild a buffer from collapsed (ins, vals, del) arrays — the
+        compaction-stall fold-back path.  Capacity stretches to hold the
+        retained entries; normal staging room checks still apply."""
+        buf = cls(capacity=max(capacity, ins_keys.size + del_keys.size))
+        buf._ins = np.asarray(ins_keys, np.float64).copy()
+        buf._vals = np.asarray(ins_vals, np.int64).copy()
+        buf._del = np.asarray(del_keys, np.float64).copy()
+        return buf
+
     def lookup_value(self, keys: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
         """(found_in_ins, value) for a batch of raw keys."""
         q = np.asarray(keys, np.float64)
@@ -244,6 +261,50 @@ def count_less(
         net += np.searchsorted(level.ins_keys, q, side="left")
         net -= np.searchsorted(level.del_keys, q, side="left")
     return net
+
+
+def collapse_levels(
+    base_raw: np.ndarray,
+    frozen: Optional[DeltaBuffer],
+    active: Optional[DeltaBuffer],
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Collapse the (frozen, active) level stack against base liveness
+    into one *effective* single-level view:
+
+      ``eff_ins``  — keys live via a staged insert, with the youngest
+                     level's value.  A key here is either absent from
+                     the base or paired with an ``eff_del`` entry (the
+                     tombstone-then-reinsert pattern), so eff_ins and
+                     (base minus eff_del) never share a key;
+      ``eff_del``  — base keys whose base row is dead or superseded by
+                     a staged value.
+
+    The net ±1 contribution below any query is identical to the raw
+    level stack's (per-key cases all cancel the same way), so merged
+    ranks are unchanged — but scans get an unambiguous source + value
+    per merged row, with no cross-level run resolution left to do.
+    Returns ``(eff_ins_keys, eff_ins_vals, eff_del_keys)``, all sorted.
+    """
+    levels = [lv for lv in (frozen, active) if lv is not None and len(lv)]
+    empty = np.empty(0, np.float64)
+    if not levels:
+        return empty, np.empty(0, np.int64), empty
+    mentioned = empty
+    for lv in levels:
+        mentioned = np.union1d(mentioned, np.union1d(lv.ins_keys, lv.del_keys))
+    in_base = member(base_raw, mentioned)
+    live = live_mask(in_base, frozen, active, mentioned)
+    vals = np.zeros(mentioned.size, np.int64)
+    staged = np.zeros(mentioned.size, bool)
+    for lv in levels:  # youngest (active) last: its values win
+        found, v = lv.lookup_value(mentioned)
+        vals = np.where(found, v, vals)
+        staged |= found
+    # a live mentioned key always carries an insert entry in its
+    # youngest mentioning level (a bare tombstone would mark it dead)
+    ins_mask = live & staged
+    del_mask = in_base & (~live | staged)
+    return mentioned[ins_mask], vals[ins_mask], mentioned[del_mask]
 
 
 def combine_for_device(

@@ -34,13 +34,24 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.rmi import RMIConfig
-from repro.index_service.compact import CompactionStats, Compactor
+from repro.index_service.compact import (
+    CompactionStall,
+    CompactionStats,
+    Compactor,
+)
 from repro.index_service.delta import (
     DeltaBuffer,
+    collapse_levels,
     combine_for_device,
     count_less,
     live_mask,
     member,
+)
+from repro.index_service.scan import (
+    PinnedView,
+    device_scan_plan,
+    pin_view,
+    scan_pages,
 )
 from repro.index_service.snapshot import (
     VersionManager,
@@ -124,7 +135,8 @@ class IndexService:
             "insert": 0, "insert_s": 0.0, "insert_applied": 0,
             "delete": 0, "delete_s": 0.0, "delete_applied": 0,
             "bloom_screened": 0,
-            "compactions": 0, "compact_s": 0.0,
+            "scan": 0, "scan_s": 0.0, "scan_pages": 0, "scan_rows": 0,
+            "compactions": 0, "compact_s": 0.0, "compact_stalls": 0,
             "leaves_refit": 0, "cold_builds": 0,
         }
         self.compaction_log: List[CompactionStats] = []
@@ -232,12 +244,76 @@ class IndexService:
 
     def range_lookup(self, lo: float, hi: float) -> Tuple[int, int]:
         """[lo, hi) as merged ranks: (first rank >= lo, first rank >= hi);
-        the difference is the number of live keys in the interval."""
+        the difference is the number of live keys in the interval.  An
+        inverted request (``hi < lo``) clamps to the empty range
+        ``(r, r)`` at lo's rank — never an inverted pair whose
+        difference would go negative downstream."""
         t0 = time.perf_counter()
+        if hi < lo:
+            hi = lo
         ranks, _ = self._rank_exact(np.array([lo, hi], np.float64))
         self.stats["range"] += 1
         self.stats["range_s"] += time.perf_counter() - t0
         return int(ranks[0]), int(ranks[1])
+
+    # ---- scans -----------------------------------------------------------
+    def _pin(self) -> PinnedView:
+        """One immutable capture of the merged read state for an open
+        scan: snapshot + delta stack collapsed under the lock, valid
+        (and consistent) no matter what churn follows."""
+        with self._lock:
+            return pin_view(self._mgr.current(), self._frozen, self._active)
+
+    def scan(self, lo: float, hi: float, page_size: int = 256):
+        """Stream the live rows with keys in [lo, hi) as fixed-size
+        `ScanPage`s — `(keys, vals, live_mask)` in global base+delta
+        merge order, tombstones elided, staged inserts woven in with
+        their values, exact in float64.
+
+        The view pins at call time: writes, compactions, and snapshot
+        swaps between pages never tear an open iterator (it keeps
+        answering for the key set as of the call).  Empty or inverted
+        ranges yield no pages."""
+        t0 = time.perf_counter()
+        view = self._pin()
+        self.stats["scan"] += 1
+        self.stats["scan_s"] += time.perf_counter() - t0
+
+        def pages():
+            for page in scan_pages(view, lo, hi, page_size):
+                t1 = time.perf_counter()
+                self.stats["scan_pages"] += 1
+                self.stats["scan_rows"] += page.count
+                self.stats["scan_s"] += time.perf_counter() - t1
+                yield page
+
+        return pages()
+
+    def scan_batch(self, lo: float, hi: float, page_size: int = 256):
+        """Device fast path for scans: ONE dispatch gathers every page
+        of [lo, hi) through `kernels.ops.rmi_scan_page_op` (the Pallas
+        kernel under the kernel strategies, its bit-identical XLA
+        fallback otherwise).
+
+        Returns ``(keys (G, page_size) f32, vals i32, live_mask)`` in
+        the snapshot's *normalized float32 frame* with int32 values —
+        exact whenever float32 normalization is injective over the
+        base+delta keys, the same caveat as `lookup_batch`; `scan` is
+        the guaranteed-exact float64 surface."""
+        with self._lock:
+            snap = self._mgr.current()
+            view = pin_view(snap, self._frozen, self._active)
+        r0, r1 = (int(r) for r in view.rank(np.array([lo, hi])))
+        if hi < lo:
+            r1 = r0
+        ins, ivals, dpos = device_scan_plan(view, snap.keys.normalize)
+        starts = np.arange(r0, max(r1, r0 + 1), page_size, np.int32)
+        fn = snap.scan_page_fn(self.config.strategy, page_size)
+        keys, vals, live = fn(
+            jnp.asarray(starts), jnp.asarray(ins), jnp.asarray(ivals),
+            jnp.asarray(dpos), np.int32(r1),
+        )
+        return keys, vals, live
 
     def _rank_exact(self, q: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
         snap, frozen, active, dk, dp = self._capture()
@@ -279,14 +355,35 @@ class IndexService:
 
     def _staged(self, q: np.ndarray, stage) -> int:
         """Chunk a write batch by remaining delta room and stage each
-        chunk in one vectorized merge."""
+        chunk in one vectorized merge.  A compaction stalled below
+        ``min_keys`` (all-deleted index) surfaces here — on the write
+        that actually needs the room — rather than killing the worker
+        thread."""
         applied, pos = 0, 0
         while pos < q.size:
             self._ensure_capacity()
             with self._lock:
-                room = self.config.delta_capacity - len(self._active)
+                # the buffer's own capacity, not the config's: a
+                # stalled fold-back stretches it past the configured
+                # size so the writes that cure the stall can land
+                room = self._active.capacity - len(self._active)
             if room <= 0:
+                stalls = self.stats["compact_stalls"]
                 self.maybe_compact(wait=True)
+                if self.stats["compact_stalls"] > stalls:
+                    with self._lock:
+                        if len(self._active) >= 4 * self.config.delta_capacity:
+                            raise OverflowError(
+                                "delta buffer full and compaction "
+                                "stalled below min_keys (nearly all "
+                                "keys deleted); stage at least 2 live "
+                                "keys or raise delta_capacity"
+                            )
+                        # only new keys can make the merge viable
+                        # again — grant this batch bounded headroom
+                        self._active.capacity = len(self._active) + min(
+                            q.size - pos, self.config.delta_capacity
+                        )
                 continue
             chunk = slice(pos, pos + room)
             with self._lock:
@@ -344,6 +441,12 @@ class IndexService:
             self._join_worker()
             if self._frozen is not None:  # inline compaction pending commit
                 self._run_compaction()
+            if self._frozen is not None:
+                # the retry failed too: keep the frozen delta (its
+                # tombstones/inserts must NOT be dropped by the freeze
+                # below) and surface the recorded error
+                self._raise_worker_error()
+                return False
         with self._lock:
             if len(self._active) == 0:
                 return False
@@ -361,7 +464,10 @@ class IndexService:
 
     def flush(self) -> None:
         """Drain: wait for in-flight compaction, then compact any
-        remaining staged writes synchronously."""
+        remaining staged writes synchronously.  A min_keys stall
+        (nearly all keys deleted) is not an error: the staged entries
+        stay in the delta (reads remain exact) and ``stats``
+        records the stall; `save` refuses until it clears."""
         self._join_worker()
         self.maybe_compact(wait=True)
         self._raise_worker_error()
@@ -398,6 +504,31 @@ class IndexService:
             else:
                 self.stats["leaves_refit"] += stats.leaves_refit
             self.compaction_log.append(stats)
+        except CompactionStall:
+            # nearly all keys deleted: expected, not fatal.  Fold the
+            # frozen delta back into the active level
+            # (collapsed, so layering stays exact), record the stall,
+            # and keep serving — the next insert makes the merge
+            # viable again; a write that can't find room raises in
+            # `_staged` with the stall named.
+            with self._lock:
+                self._active = DeltaBuffer.from_arrays(
+                    *collapse_levels(
+                        snap.keys.raw, self._frozen, self._active
+                    ),
+                    # preserve any stall headroom `_staged` granted
+                    # (it may sit on either level after the freeze) —
+                    # resetting it would starve the very writes that
+                    # make the merge viable again
+                    capacity=max(
+                        self.config.delta_capacity,
+                        self._active.capacity,
+                        self._frozen.capacity,
+                    ),
+                )
+                self._frozen = None
+                self._device_cache = None
+            self.stats["compact_stalls"] += 1
         except BaseException as e:  # surfaced on the caller thread
             self._worker_error = e
 
@@ -417,6 +548,15 @@ class IndexService:
     def save(self, directory: Optional[str] = None) -> str:
         """Compact staged writes and persist the resulting snapshot."""
         self.flush()
+        if len(self._active):
+            # flush could not drain (compaction stalled below
+            # min_keys): refuse rather than persist a snapshot that
+            # silently resurrects the staged deletes on restart
+            raise RuntimeError(
+                "cannot persist: compaction stalled with "
+                f"{len(self._active)} staged entries (nearly all keys "
+                "deleted); insert at least 2 live keys first"
+            )
         if directory is not None:
             self._mgr.directory = directory
         return self._mgr.save_current()
@@ -444,11 +584,18 @@ class IndexService:
                 "bloom_screened": int(s["bloom_screened"]),
             },
             "range": per_op("range"),
+            "scan": {
+                "count": int(s["scan"]),
+                "pages": int(s["scan_pages"]),
+                "rows": int(s["scan_rows"]),
+                "total_s": round(s["scan_s"], 4),
+            },
             "insert": {**per_op("insert"), "applied": int(s["insert_applied"])},
             "delete": {**per_op("delete"), "applied": int(s["delete_applied"])},
             "compactions": {
                 "count": int(s["compactions"]),
                 "total_s": round(s["compact_s"], 4),
+                "stalls": int(s["compact_stalls"]),
                 "leaves_refit": int(s["leaves_refit"]),
                 "cold_builds": int(s["cold_builds"]),
             },

@@ -54,6 +54,7 @@ import numpy as np
 from repro.distributed.sharding import index_shard_mesh, place_index_shards
 from repro.index_service.delta import count_less
 from repro.index_service.router import LearnedRouter
+from repro.index_service.scan import repack_pages, scan_pages
 from repro.index_service.service import IndexService, ServiceConfig
 from repro.index_service.snapshot import validate_strategy
 from repro.kernels import ops as kernels_ops
@@ -156,7 +157,11 @@ class ShardedIndexService:
         if self.config.num_shards < 1:
             raise ValueError("num_shards must be >= 1")
         self.stats: Dict[str, float] = {
-            "rebalances": 0, "get": 0, "get_s": 0.0, "range": 0,
+            "rebalances": 0,
+            "get": 0, "get_s": 0.0, "get_hits": 0,
+            "contains": 0, "contains_s": 0.0, "contains_hits": 0,
+            "range": 0, "range_s": 0.0,
+            "scan": 0, "scan_s": 0.0, "scan_pages": 0, "scan_rows": 0,
         }
         # counters carried over from shards retired by rebalance(), so
         # aggregate stats and the version property stay monotone
@@ -272,10 +277,15 @@ class ShardedIndexService:
         q = np.atleast_1d(np.asarray(keys, np.float64))
         rank, live = self._ranks(q)
         self.stats["get"] += q.size
+        self.stats["get_hits"] += int(live.sum())
         self.stats["get_s"] += time.perf_counter() - t0
         return rank, live
 
     def contains(self, keys) -> np.ndarray:
+        """Existence check, with the same per-op accounting the
+        unsharded service keeps (count/hits/latency here; the Bloom
+        screens happen — and count — inside each shard)."""
+        t0 = time.perf_counter()
         q = np.atleast_1d(np.asarray(keys, np.float64))
         shard_of = self._router.route(q)
         out = np.zeros(q.shape, bool)
@@ -283,15 +293,58 @@ class ShardedIndexService:
             m = shard_of == s
             if m.any():
                 out[m] = svc.contains(q[m])
+        self.stats["contains"] += q.size
+        self.stats["contains_hits"] += int(out.sum())
+        self.stats["contains_s"] += time.perf_counter() - t0
         return out
 
     def range_lookup(self, lo: float, hi: float) -> Tuple[int, int]:
         """[lo, hi) as global merged ranks — the endpoints may route to
         different shards; the prefix-sum offsets make the two ranks
-        comparable anyway."""
-        self.stats["range"] += 1
+        comparable anyway.  ``hi < lo`` clamps to the empty range
+        ``(r, r)`` at lo's rank, even when the raw endpoints would have
+        routed to different shards."""
+        t0 = time.perf_counter()
+        if hi < lo:
+            hi = lo
         ranks, _ = self._ranks(np.array([lo, hi], np.float64))
+        self.stats["range"] += 1
+        self.stats["range_s"] += time.perf_counter() - t0
         return int(ranks[0]), int(ranks[1])
+
+    # ---- scans -----------------------------------------------------------
+    def scan(self, lo: float, hi: float, page_size: int = 256):
+        """Stream the live rows in [lo, hi) as fixed-size `ScanPage`s
+        in global merge order across every shard the range touches.
+
+        The endpoints route through the learned router; each touched
+        shard pins its (snapshot, frozen, active) view *eagerly at
+        call time*, so an open iterator survives per-shard
+        compactions, router re-fits, and full rebalances mid-scan —
+        the retired shards' arrays stay alive and immutable behind the
+        pinned views.  Per-shard page streams stitch back into full
+        pages in router boundary order (shard ranges tile the key
+        space, so concatenation IS global merge order)."""
+        t0 = time.perf_counter()
+        q = np.array([lo, hi], np.float64)
+        if not (hi > lo):
+            views = []
+        else:
+            s0, s1 = (int(s) for s in self._router.route(q))
+            views = [self._shards[s]._pin() for s in range(s0, s1 + 1)]
+        self.stats["scan"] += 1
+        self.stats["scan_s"] += time.perf_counter() - t0
+
+        def pages():
+            streams = (scan_pages(v, lo, hi, page_size) for v in views)
+            for page in repack_pages(streams, page_size):
+                t1 = time.perf_counter()
+                self.stats["scan_pages"] += 1
+                self.stats["scan_rows"] += page.count
+                self.stats["scan_s"] += time.perf_counter() - t1
+                yield page
+
+        return pages()
 
     # ---- device fast path ------------------------------------------------
     def lookup_batch(self, keys) -> jnp.ndarray:
@@ -566,23 +619,42 @@ class ShardedIndexService:
         def agg(key):
             return (self._retired.get(key, 0)
                     + sum(s.stats[key] for s in self._shards))
+        s = self.stats
+
+        def per_op(kind):
+            n = s[kind]
+            return {
+                "count": int(n),
+                "ns_per_op": (s[f"{kind}_s"] / n * 1e9) if n else 0.0,
+            }
         counts = self._live_counts()
         return {
             "num_shards": self.num_shards,
             "live_keys": int(counts.sum()),
             "shard_live_keys": counts.tolist(),
-            "shard_versions": [s.version for s in self._shards],
-            "rebalances": int(self.stats["rebalances"]),
+            "shard_versions": [sh.version for sh in self._shards],
+            "rebalances": int(s["rebalances"]),
             "router_model_hit_rate": self._router.model_hit_rate,
             "get": {
-                "count": int(self.stats["get"]),
-                "ns_per_op": (
-                    self.stats["get_s"] / self.stats["get"] * 1e9
-                    if self.stats["get"] else 0.0
-                ),
+                **per_op("get"),
+                "hit_rate": s["get_hits"] / s["get"] if s["get"] else 0.0,
+            },
+            "contains": {
+                **per_op("contains"),
+                "hit_rate": (s["contains_hits"] / s["contains"]
+                             if s["contains"] else 0.0),
+                "bloom_screened": int(agg("bloom_screened")),
+            },
+            "range": per_op("range"),
+            "scan": {
+                "count": int(s["scan"]),
+                "pages": int(s["scan_pages"]),
+                "rows": int(s["scan_rows"]),
+                "total_s": round(s["scan_s"], 4),
             },
             "insert_applied": int(agg("insert_applied")),
             "delete_applied": int(agg("delete_applied")),
             "compactions": int(agg("compactions")),
+            "compact_stalls": int(agg("compact_stalls")),
             "bloom_screened": int(agg("bloom_screened")),
         }

@@ -273,6 +273,47 @@ class IndexSnapshot:
             fn = self._compiled[strategy] = merged
         return fn
 
+    def scan_page_fn(
+        self, strategy: str = "binary", page_size: int = 256
+    ) -> Callable:
+        """jit fn (starts, ins_keys, ins_vals, del_pos, end_rank) ->
+        (keys (G, page_size) f32, vals i32, live_mask bool) — one page
+        of merged rows per start rank, gathered straight out of
+        base+delta merge order without materializing the merge.
+
+        Registered through the same strategy registry as the lookups:
+        the kernel strategies (``pallas``/``pallas_fused``/
+        ``sharded_fused``) run `rmi_scan_page_pallas` (interpret mode
+        off-TPU); everything else lowers to the bit-identical XLA
+        fallback (`ref.rmi_scan_page_reference`).  Delta inputs come
+        from `scan.device_scan_plan` (power-of-two pad buckets, so the
+        jit cache is keyed per bucket).  Same float32/int32 exactness
+        caveat as ``lookup_batch`` — the host `IndexService.scan` path
+        is the exact float64 surface.
+        """
+        validate_strategy(strategy)
+        use_kernel = strategy in ("pallas", "pallas_fused", "sharded_fused")
+        key = f"scan:{'kernel' if use_kernel else 'xla'}:{page_size}"
+        fn = self._compiled.get(key)
+        if fn is None:
+            base_norm = jnp.asarray(self.keys.norm)
+            if self.vals is not None:
+                bvals = jnp.asarray(np.clip(
+                    self.vals, np.iinfo(np.int32).min, np.iinfo(np.int32).max
+                ).astype(np.int32))
+            else:
+                bvals = jnp.zeros((self.n,), jnp.int32)
+
+            def fn(starts, ins_keys, ins_vals, del_pos, end_rank):
+                return kernels_ops.rmi_scan_page_op(
+                    starts, base_norm, bvals, ins_keys, ins_vals,
+                    del_pos, end_rank,
+                    page_size=page_size, use_kernel=use_kernel,
+                )
+
+            self._compiled[key] = fn
+        return fn
+
     def base_lookup_fn(self, strategy: str = "binary") -> Callable:
         """jit fn (q_norm) -> base lower bound — for callers that
         resolve the delta host-side (e.g. the KV page table) and would
@@ -388,7 +429,15 @@ class IndexSnapshot:
         with np.load(path) as z:
             raw = z["raw"]
             lo, hi = float(z["key_lo"]), float(z["key_hi"])
-            norm = ((raw - lo) / (hi - lo)).astype(np.float32)
+            # build-time normalization (make_keyset / build_snapshot)
+            # rejects a degenerate frame outright, so hi > lo for every
+            # snapshot we wrote ourselves — but a hand-rolled or
+            # corrupted file must not NaN-poison the whole key set
+            span = hi - lo
+            if span > 0:
+                norm = ((raw - lo) / span).astype(np.float32)
+            else:
+                norm = np.zeros(raw.shape, np.float32)
             keys = KeySet(raw=raw, norm=norm, lo=lo, hi=hi)
             hybrid = float(z["cfg_hybrid"])
             cfg = RMIConfig(

@@ -23,6 +23,7 @@ from repro.kernels.hash_probe import hash_probe_pallas
 from repro.kernels.rmi_lookup import (
     rmi_lookup_pallas,
     rmi_merged_lookup_pallas,
+    rmi_scan_page_pallas,
     rmi_sharded_merged_lookup_pallas,
     stage0_flat,
 )
@@ -214,6 +215,57 @@ def sharded_reassemble(local_base, delta_contrib, shard_of_q,
     ct = jnp.take_along_axis(delta_contrib, j, axis=0)[0]
     jq = j[0]
     return base_offsets[jq] + lb, merged_offsets[jq] + lb + ct
+
+
+def rmi_scan_page_op(
+    starts, base_keys, base_vals, ins_keys, ins_vals, del_pos, end_rank,
+    *, page_size=256, use_kernel=True, interpret=None,
+):
+    """Rank-addressed merged scan gather -> (keys, vals, live_mask).
+
+    Page g streams the merged rows at ranks ``starts[g] + [0,
+    page_size)`` of (base minus dead positions) ∪ (effective staged
+    inserts) — tombstones elided, insert values woven in — without
+    materializing the merge (`strategy` kernel paths); with
+    ``use_kernel=False`` the identical-signature XLA fallback runs the
+    same `_scan_page_body`, bit-identical for every input.  Keys come
+    back in the snapshot's normalized float32 frame and values as
+    int32 — the host `index_service.scan` path is the exact float64
+    surface; this op is its device data plane.  ``live_mask`` is True
+    for rows below ``end_rank`` (partial last page, empty ranges).
+    """
+    args = (
+        jnp.asarray(starts, jnp.int32),
+        jnp.asarray(base_keys, jnp.float32),
+        jnp.asarray(base_vals, jnp.int32),
+        jnp.asarray(ins_keys, jnp.float32),
+        jnp.asarray(ins_vals, jnp.int32),
+        jnp.asarray(del_pos, jnp.int32),
+        jnp.asarray(end_rank, jnp.int32).reshape(1),
+    )
+    if not use_kernel:
+        keys, vals, live = _scan_page_reference_jit(
+            *args, page_size=page_size
+        )
+    else:
+        keys, vals, live = rmi_scan_page_pallas(
+            *args, page_size=page_size, interpret=interpret
+        )
+    return keys, vals, live.astype(bool)
+
+
+@functools.partial(jax.jit, static_argnames=("page_size",))
+def _scan_page_reference_jit(
+    starts, base_keys, base_vals, ins_keys, ins_vals, del_pos, end_rank,
+    *, page_size,
+):
+    if starts.shape[0] == 0:
+        empty = jnp.zeros((0, page_size), jnp.int32)
+        return empty.astype(jnp.float32), empty, empty
+    return ref.rmi_scan_page_reference(
+        starts, base_keys, base_vals, ins_keys, ins_vals, del_pos,
+        end_rank, page_size=page_size,
+    )
 
 
 def bloom_probe_op(bf, queries_u32, *, interpret=True):

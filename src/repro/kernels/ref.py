@@ -136,6 +136,37 @@ def rmi_sharded_merged_lookup_reference(
     )
 
 
+def rmi_scan_page_reference(
+    starts: jax.Array,             # (G,) int32 page start ranks
+    base_keys: jax.Array,          # (N,) sorted normalized f32
+    base_vals: jax.Array,          # (N,) int32
+    ins_keys: jax.Array,           # (Di,) +inf-padded eff. insert keys
+    ins_vals: jax.Array,           # (Di,) int32
+    del_pos: jax.Array,            # (Dd,) n-padded dead base positions
+    end_rank: jax.Array,           # (1,) int32
+    *,
+    page_size: int,
+) -> tuple:
+    """XLA fallback for `rmi_scan_page_pallas`: the same
+    `_scan_page_body` evaluated on the full (G, page_size) rank matrix
+    instead of per kernel grid step, so ``(keys, vals, live)`` is
+    bit-identical to the kernel's for every input — including +inf pads
+    and out-of-range ranks.  Like the sharded fallback, sharing the
+    body is the point: the independent oracle for the scan path is the
+    NumPy merge in the test suite.
+    """
+    steps = rmi_lookup_lib._search_steps(base_keys.shape[0])
+    isteps = rmi_lookup_lib._search_steps(ins_keys.shape[0])
+    dsteps = rmi_lookup_lib._search_steps(del_pos.shape[0])
+    t = starts.astype(jnp.int32)[:, None] + jax.lax.broadcasted_iota(
+        jnp.int32, (1, page_size), 1
+    )
+    return rmi_lookup_lib._scan_page_body(
+        t, base_keys, base_vals, ins_keys, ins_vals, del_pos, end_rank[0],
+        steps=steps, isteps=isteps, dsteps=dsteps,
+    )
+
+
 def bloom_probe_reference(
     queries_u32: jax.Array, words: jax.Array, *, num_bits: int, k: int
 ) -> jax.Array:

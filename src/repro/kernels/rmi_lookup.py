@@ -192,6 +192,200 @@ def _rmi_merged_kernel(
     merged_ref[...] = lb + jnp.take(dprefix_ref[...], dlb)
 
 
+def _array_lower_bound(
+    arr: jnp.ndarray, q: jnp.ndarray, size, steps: int
+) -> jnp.ndarray:
+    """Branchless lower bound of each q in arr[0:size] (float or int
+    arrays; fixed trip count so it lowers inside kernels).  Unlike the
+    key-search loops, scan queries may equal or exceed every stored
+    element (q = +inf sentinels, position queries past the pad), so the
+    converged state is pinned with ``lo < hi`` — extra trips past
+    convergence must not walk ``lo`` off the end."""
+
+    lo = jnp.zeros(q.shape, jnp.int32)
+    hi = jnp.full(q.shape, size, jnp.int32)
+
+    def body(_, state):
+        lo, hi = state
+        mid = (lo + hi) // 2
+        v = jnp.take(arr, jnp.clip(mid, 0, size - 1))
+        r = (v < q) & (lo < hi)
+        return jnp.where(r, mid + 1, lo), jnp.where(r, hi, mid)
+
+    lo, hi = jax.lax.fori_loop(0, steps, body, (lo, hi))
+    return lo
+
+
+def _scan_page_body(
+    t: jnp.ndarray,              # int32 target merged ranks (any shape)
+    base_keys: jnp.ndarray,      # (N,) sorted normalized f32 base keys
+    base_vals: jnp.ndarray,      # (N,) int32 payload aligned with base
+    ins_keys: jnp.ndarray,       # (Di,) sorted eff. insert keys, +inf pad
+    ins_vals: jnp.ndarray,       # (Di,) int32 staged values (0 on pads)
+    del_pos: jnp.ndarray,        # (Dd,) sorted dead base positions, n pad
+    end_rank: jnp.ndarray,       # () int32 — one past the last live rank
+    *,
+    steps: int,
+    isteps: int,
+    dsteps: int,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One merged row per target rank, without materializing the merge.
+
+    The live merged array is A ∪ C with A = base minus the dead
+    positions (``del_pos``) and C = the effective staged inserts —
+    disjoint by construction (`delta.collapse_levels`), so every rank
+    decomposes uniquely.  Per slot t:
+
+      1. partition:  j = |{c ∈ C : merged_rank(c) < t}| by binary
+         search on j over  merged_rank(C[j]) = j + a_before(C[j]),
+         where a_before(x) = lower_bound(base, x) - dead_before;
+      2. select:     the (t-j)-th live base row by binary search over
+         base positions with live_before(p) = p - lower_bound(del_pos, p);
+      3. emit        min(A[t-j], C[j]) with its source's value; slots
+         at or past ``end_rank`` are masked dead (+inf key, 0 value).
+
+    Fixed trip counts everywhere, so the same body lowers inside the
+    Pallas kernel and the XLA fallback with bit-identical results.
+    """
+    inf = jnp.float32(jnp.inf)
+    n = base_keys.shape[0]
+    ni = ins_keys.shape[0]
+    nd = del_pos.shape[0]
+
+    # ---- partition: inserts among the first t merged rows -------------
+    lo = jnp.zeros(t.shape, jnp.int32)
+    hi = jnp.full(t.shape, ni, jnp.int32)
+
+    def jbody(_, state):
+        lo, hi = state
+        mid = (lo + hi) // 2
+        ck = jnp.take(ins_keys, jnp.clip(mid, 0, ni - 1))
+        ck = jnp.where(mid >= ni, inf, ck)
+        bl = _array_lower_bound(base_keys, ck, n, steps)
+        dl = _array_lower_bound(del_pos, bl, nd, dsteps)
+        pred = mid + (bl - dl) >= t
+        adv = ~pred & (lo < hi)  # converged lanes stay pinned
+        return jnp.where(adv, mid + 1, lo), jnp.where(pred, mid, hi)
+
+    j, _ = jax.lax.fori_loop(0, isteps, jbody, (lo, hi))
+    i = t - j
+
+    # ---- select: the i-th live base position --------------------------
+    lo = jnp.zeros(t.shape, jnp.int32)
+    hi = jnp.full(t.shape, n, jnp.int32)
+
+    def pbody(_, state):
+        lo, hi = state
+        mid = (lo + hi) // 2
+        dl = _array_lower_bound(del_pos, mid + 1, nd, dsteps)
+        pred = (mid + 1 - dl) >= (i + 1)
+        adv = ~pred & (lo < hi)
+        return jnp.where(adv, mid + 1, lo), jnp.where(pred, mid, hi)
+
+    p, _ = jax.lax.fori_loop(0, steps, pbody, (lo, hi))
+
+    a_key = jnp.where(p >= n, inf, jnp.take(base_keys, jnp.clip(p, 0, n - 1)))
+    a_val = jnp.take(base_vals, jnp.clip(p, 0, n - 1))
+    c_key = jnp.where(j >= ni, inf, jnp.take(ins_keys, jnp.clip(j, 0, ni - 1)))
+    c_val = jnp.take(ins_vals, jnp.clip(j, 0, ni - 1))
+
+    from_ins = c_key < a_key
+    live = ((t >= 0) & (t < end_rank)).astype(jnp.int32)
+    key = jnp.where(from_ins, c_key, a_key)
+    val = jnp.where(from_ins, c_val, a_val)
+    key = jnp.where(live == 1, key, inf)
+    val = jnp.where(live == 1, val, 0)
+    return key, val, live
+
+
+def _scan_page_kernel(
+    # refs: starts (1,), base_keys, base_vals, ins_keys, ins_vals,
+    # del_pos, end_rank (1,), out_keys (1,P), out_vals, out_live
+    starts_ref,
+    base_keys_ref,
+    base_vals_ref,
+    ins_keys_ref,
+    ins_vals_ref,
+    del_pos_ref,
+    end_ref,
+    keys_out,
+    vals_out,
+    live_out,
+    *,
+    page_size: int,
+    steps: int,
+    isteps: int,
+    dsteps: int,
+):
+    t = starts_ref[...][:, None] + jax.lax.broadcasted_iota(
+        jnp.int32, (1, page_size), 1
+    )
+    key, val, live = _scan_page_body(
+        t, base_keys_ref[...], base_vals_ref[...], ins_keys_ref[...],
+        ins_vals_ref[...], del_pos_ref[...], end_ref[0],
+        steps=steps, isteps=isteps, dsteps=dsteps,
+    )
+    keys_out[...] = key
+    vals_out[...] = val
+    live_out[...] = live
+
+
+@functools.partial(
+    jax.jit, static_argnames=("page_size", "interpret")
+)
+def rmi_scan_page_pallas(
+    starts: jax.Array,             # (G,) int32 page start ranks
+    base_keys: jax.Array,          # (N,) sorted normalized f32
+    base_vals: jax.Array,          # (N,) int32
+    ins_keys: jax.Array,           # (Di,) +inf-padded eff. insert keys
+    ins_vals: jax.Array,           # (Di,) int32
+    del_pos: jax.Array,            # (Dd,) n-padded dead base positions
+    end_rank: jax.Array,           # (1,) int32
+    *,
+    page_size: int,
+    interpret: Optional[bool] = None,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Rank-addressed merged scan gather: grid = pages, ONE pallas_call.
+
+    Page g emits rows at merged ranks ``starts[g] + [0, page_size)`` as
+    ``(keys f32, vals i32, live i32)`` — the streaming read path that
+    follows a merged-rank lookup, with the same VMEM-residency argument
+    as the lookup kernels (base + delta + one page tile).  No RMI here:
+    ranks address the merge directly, so the kernel is three nested
+    fixed-trip binary searches plus gathers, vectorized over the page.
+    """
+    interpret = _resolve_interpret(interpret)
+    g = starts.shape[0]
+    if g == 0:
+        empty = jnp.zeros((0, page_size), jnp.int32)
+        return empty.astype(jnp.float32), empty, empty
+    steps = _search_steps(base_keys.shape[0])
+    isteps = _search_steps(ins_keys.shape[0])
+    dsteps = _search_steps(del_pos.shape[0])
+
+    in_specs = [pl.BlockSpec((1,), lambda i: (i,))]
+    in_specs += [_full_spec(a) for a in
+                 (base_keys, base_vals, ins_keys, ins_vals, del_pos,
+                  end_rank)]
+    tile_spec = lambda: pl.BlockSpec((1, page_size), lambda i: (i, 0))
+    keys, vals, live = pl.pallas_call(
+        functools.partial(
+            _scan_page_kernel, page_size=page_size, steps=steps,
+            isteps=isteps, dsteps=dsteps,
+        ),
+        grid=(g,),
+        in_specs=in_specs,
+        out_specs=(tile_spec(), tile_spec(), tile_spec()),
+        out_shape=(
+            jax.ShapeDtypeStruct((g, page_size), jnp.float32),
+            jax.ShapeDtypeStruct((g, page_size), jnp.int32),
+            jax.ShapeDtypeStruct((g, page_size), jnp.int32),
+        ),
+        interpret=interpret,
+    )(starts, base_keys, base_vals, ins_keys, ins_vals, del_pos, end_rank)
+    return keys, vals, live
+
+
 def _sharded_shard_body(
     q: jnp.ndarray,              # (B,) this shard's normalized queries
     params,                      # flat (w0, b0, ...) values for this shard

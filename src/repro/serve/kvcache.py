@@ -37,6 +37,12 @@ from repro.core.rmi import RMIConfig
 from repro.index_service.compact import Compactor
 from repro.index_service.delta import DeltaBuffer
 from repro.index_service.router import LearnedRouter
+from repro.index_service.scan import (
+    PinnedView,
+    pin_view,
+    repack_pages,
+    scan_pages,
+)
 from repro.index_service.snapshot import (
     IndexSnapshot,
     build_snapshot,
@@ -243,6 +249,47 @@ class PagedKVAllocator:
             in_ins, ins_vals = delta.lookup_value(qs)
             out[mask] = np.where(in_ins, ins_vals, vals)
         return out
+
+    def scan(self, lo: float, hi: float, page_size: int = 256):
+        """Stream live page-table rows with keys in [lo, hi) as
+        `ScanPage`s — `(keys, physical_page vals, live_mask)` in global
+        merge order across every shard's base snapshot + staged delta,
+        without compacting and without materializing the merge (the
+        `index_service` scan machinery applied to value rows).
+
+        Views pin per shard at call time, so concurrent alloc/free
+        churn (and the compactions it triggers) never tears an open
+        iterator.  In bootstrap mode (< 2 entries indexed) the dict
+        table serves directly."""
+        if not self._shards:
+            items = sorted(
+                (k, v) for k, v in self._table.items() if lo <= k < hi
+            )
+            view = PinnedView(
+                base_keys=np.array([k for k, _ in items], np.float64),
+                base_vals=np.array([v for _, v in items], np.int64),
+                ins_keys=np.empty(0, np.float64),
+                ins_vals=np.empty(0, np.int64),
+                del_pos=np.empty(0, np.int64),
+            )
+            return scan_pages(view, lo, hi, page_size)
+        views = [
+            pin_view(shard.snap, None, shard.delta)
+            for shard in self._shards
+        ]
+        return repack_pages(
+            (scan_pages(v, lo, hi, page_size) for v in views), page_size
+        )
+
+    def request_pages(self, request_id: int, page_size: int = 256):
+        """The physical pages of one request in logical order, streamed
+        through `scan` over the request's key range — the consumer a
+        cache serializer / defragmenter uses to walk a request's KV
+        without touching the dict table."""
+        lo = float(request_id * MAX_PAGES_PER_REQ)
+        hi = float((request_id + 1) * MAX_PAGES_PER_REQ)
+        for page in self.scan(lo, hi, page_size):
+            yield from (int(v) for v in page.vals[page.live_mask])
 
     def translate_binary(self, request_ids, logical_pages) -> np.ndarray:
         """Baseline: numpy searchsorted over the same (live) table."""

@@ -188,6 +188,21 @@ def test_range_lookup_counts_live_keys():
     assert r1 - r0 == 1000 - 100 + 2
 
 
+def test_range_lookup_inverted_clamps_to_empty():
+    """lo > hi used to return an inverted pair (negative count
+    downstream); it must clamp to the empty range at lo's rank."""
+    base = np.arange(2, 1_002, dtype=np.float64)
+    svc = IndexService(base, ServiceConfig(delta_capacity=64))
+    r0, r1 = svc.range_lookup(500.0, 100.0)
+    assert r0 == r1 == np.searchsorted(base, 500.0)
+    # degenerate-but-ordered stays the ordinary empty range
+    assert svc.range_lookup(500.0, 500.0) == (r0, r0)
+    # staged writes do not resurrect the inversion
+    svc.insert(np.array([100.5, 499.5]))
+    r0, r1 = svc.range_lookup(499.9, 100.0)
+    assert r0 == r1
+
+
 def test_execute_mixed_batch():
     base = np.arange(0, 5000, dtype=np.float64) * 3.0
     svc = IndexService(base)
@@ -238,6 +253,26 @@ def test_snapshot_save_load_lookup_roundtrip(tmp_path):
     idx, in_base = back.refine_base_rank(q, np.asarray(b))
     assert in_base.all()
     assert (idx == np.searchsorted(base, q)).all()
+
+
+def test_snapshot_load_guards_degenerate_normalization(tmp_path):
+    """`IndexSnapshot.load` recomputes norm = (raw - lo) / (hi - lo);
+    a near-degenerate frame must round-trip NaN-free (and a corrupted
+    hi == lo frame must not NaN-poison every key)."""
+    # near-degenerate: two keys a tiny span apart
+    base = np.array([1.0, 1.0 + 1e-9, 1.0 + 2e-9])
+    snap, _ = build_snapshot(base, version=1)
+    back = IndexSnapshot.load(snap.save(str(tmp_path)))
+    assert np.isfinite(back.keys.norm).all()
+    np.testing.assert_array_equal(back.keys.norm, snap.keys.norm)
+    np.testing.assert_array_equal(back.keys.raw, base)
+    # corrupted frame: force hi == lo in the payload
+    path = snap.save(str(tmp_path))
+    z = dict(np.load(path))
+    z["key_hi"] = z["key_lo"]
+    np.savez_compressed(path, **z)
+    poisoned = IndexSnapshot.load(path)
+    assert np.isfinite(poisoned.keys.norm).all()  # guarded, not NaN
 
 
 def test_service_save_load_restart(tmp_path):
@@ -312,11 +347,54 @@ def test_compaction_resizes_leaves_as_key_count_drifts():
     assert found.all() and (ranks == np.searchsorted(live, sample)).all()
 
 
-def test_compaction_below_min_keys_refuses():
+def test_compaction_below_min_keys_stalls_and_recovers():
+    """Deleting everything must not kill compaction (the min_keys
+    ValueError used to escape on the worker thread and the next freeze
+    silently dropped the frozen tombstones): the stall is recorded, the
+    delta is retained, reads stay exact, and the next inserts make
+    compaction viable again."""
     svc = IndexService(np.array([1.0, 2.0, 3.0]), ServiceConfig(delta_capacity=64))
     svc.delete(np.array([1.0, 2.0, 3.0]))
+    svc.flush()  # stalls, does not raise
+    assert svc.stats["compact_stalls"] >= 1
+    assert svc.num_keys == 0
+    assert not svc.contains(np.array([1.0, 2.0, 3.0])).any()
+    # persisting a stalled state would resurrect the deletes on restart
     with pytest.raises(RuntimeError):
-        svc.flush()
+        svc.save("/tmp/lix-stall-refuse")
+    # service stays live: new keys compact the stall away
+    svc.insert(np.array([10.0, 20.0]))
+    svc.flush()
+    assert svc.num_keys == 2 and svc.version >= 1
+    ranks, found = svc.get(np.array([10.0, 20.0]))
+    assert found.all() and (ranks == [0, 1]).all()
+
+
+def test_delete_everything_churn_keeps_service_live():
+    """Delete-everything churn on one shard (K=1) through many
+    stalled compactions: every read stays oracle-exact and later
+    growth recovers without a restart."""
+    rng = np.random.default_rng(11)
+    svc = IndexService(
+        np.arange(64, dtype=np.float64),
+        ServiceConfig(delta_capacity=32, background=True),
+    )
+    live = set(np.arange(64.0).tolist())
+    for round_ in range(6):
+        arr = np.array(sorted(live))
+        if arr.size:
+            svc.delete(arr)  # drain completely
+            live.clear()
+        assert svc.num_keys == 0
+        ins = np.unique(rng.integers(0, 1 << 20, 40).astype(np.float64))
+        svc.insert(ins)
+        live.update(ins.tolist())
+        arr = np.array(sorted(live))
+        ranks, found = svc.get(arr)
+        assert found.all() and (ranks == np.arange(arr.size)).all()
+    assert svc.stats["compact_stalls"] >= 1
+    svc.flush()
+    assert svc.num_keys == len(live)
 
 
 # --------------------------------------------------------------------------

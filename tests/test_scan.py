@@ -1,0 +1,315 @@
+"""Scan subsystem: paged (keys, vals, live_mask) streams over
+base+delta merge order, pinned to a NumPy merge oracle.
+
+The load-bearing guarantees:
+
+  * `scan` pages concatenated equal a plain NumPy merge of (base minus
+    tombstones, plus staged inserts) — through heavy interleaved churn,
+    at K in {1, 3, 8}, across per-shard compactions and rebalances
+    (tier-1 runs a reduced op count; the >= 100k-op sweep rides in the
+    nightly slow job);
+  * an OPEN iterator is snapshot-pinned: inserts/deletes (and the
+    compactions/rebalances they trigger) between pages never tear it —
+    it keeps answering for the key set as of `scan()` time;
+  * the Pallas scan-page kernel and its XLA fallback are bit-identical
+    for ANY query — pads, empty pages, ranks past the end;
+  * page boundaries behave at non-multiple sizes, and empty/inverted
+    ranges yield no pages.
+"""
+
+import numpy as np
+import pytest
+
+from repro.index_service import (
+    IndexService,
+    ServiceConfig,
+    ShardedIndexService,
+)
+from repro.kernels import ops
+
+KS = (1, 3, 8)
+
+
+def _concat(pages):
+    pages = list(pages)
+    if not pages:
+        return np.empty(0), np.empty(0, np.int64)
+    keys = np.concatenate([p.keys[p.live_mask] for p in pages])
+    vals = np.concatenate([p.vals[p.live_mask] for p in pages])
+    # every page but the last must be full, and pads must be inert
+    for p in pages[:-1]:
+        assert p.count == p.live_mask.size
+    for p in pages:
+        assert np.isinf(p.keys[~p.live_mask]).all()
+        assert (p.vals[~p.live_mask] == 0).all()
+    return keys, vals
+
+
+def _oracle_slice(live, lo, hi):
+    arr = np.array(sorted(live))
+    vals = np.array([live[k] for k in arr], np.int64)
+    m = (arr >= lo) & (arr < hi)
+    return arr[m], vals[m]
+
+
+# --------------------------------------------------------------------------
+# the acceptance gate: scan == NumPy merge under interleaved churn
+# --------------------------------------------------------------------------
+
+def _churn_scan(total_target, n_base, k, delta_capacity=768,
+                page_size=113):
+    """Interleaved inserts/deletes with scans between batches — and
+    WITHIN open iterators — all checked against one dict oracle."""
+    rng = np.random.default_rng(k + 17)
+    base = np.unique(rng.integers(0, 1 << 48, n_base).astype(np.float64))
+    bvals = rng.integers(0, 1 << 30, base.size)
+    ctor = (
+        (lambda: IndexService(
+            base, ServiceConfig(delta_capacity=delta_capacity),
+            vals=bvals))
+        if k == 1 else
+        (lambda: ShardedIndexService(
+            base, ServiceConfig(num_shards=k, delta_capacity=delta_capacity),
+            vals=bvals))
+    )
+    svc = ctor()
+    live = dict(zip(base.tolist(), bvals.tolist()))
+
+    total_ops = 0
+    batch = 0
+    while total_ops < total_target:
+        # fresh keys only (value semantics for re-inserting a live key
+        # are level-dependent; churn sticks to the well-defined path)
+        ins = np.unique(rng.integers(0, 1 << 48, 500).astype(np.float64))
+        ins = ins[~np.isin(ins, np.array(sorted(live)))]
+        iv = rng.integers(0, 1 << 30, ins.size)
+        svc.insert(ins, iv)
+        live.update(zip(ins.tolist(), iv.tolist()))
+        arr = np.array(sorted(live))
+        dels = rng.choice(arr, 300, replace=False)
+        svc.delete(dels)
+        for x in dels:
+            del live[float(x)]
+        total_ops += ins.size + dels.size
+        batch += 1
+        if batch % 3 != 0:
+            continue
+        arr = np.array(sorted(live))
+        lo = float(arr[int(rng.integers(0, arr.size // 2))])
+        hi = float(arr[int(rng.integers(arr.size // 2, arr.size))])
+        # plain scan vs oracle
+        got_k, got_v = _concat(svc.scan(lo, hi, page_size))
+        want_k, want_v = _oracle_slice(live, lo, hi)
+        np.testing.assert_array_equal(got_k, want_k)
+        np.testing.assert_array_equal(got_v, want_v)
+        # open iterator survives concurrent churn (pinned view)
+        it = svc.scan(lo, hi, page_size)
+        consumed = [p for _, p in zip(range(2), it)]
+        mut_ins = np.unique(
+            rng.integers(0, 1 << 48, 200).astype(np.float64)
+        )
+        mut_ins = mut_ins[~np.isin(mut_ins, np.array(sorted(live)))]
+        svc.insert(mut_ins)
+        live.update((k2, 0) for k2 in mut_ins.tolist())
+        arr = np.array(sorted(live))
+        mut_del = rng.choice(arr, 150, replace=False)
+        svc.delete(mut_del)
+        for x in mut_del:
+            del live[float(x)]
+        total_ops += mut_ins.size + mut_del.size
+        got_k, got_v = _concat(consumed + list(it))
+        np.testing.assert_array_equal(got_k, want_k)  # pin-time view
+        np.testing.assert_array_equal(got_v, want_v)
+    assert svc.stats_summary()["scan"]["pages"] > 0
+    return svc
+
+
+@pytest.mark.parametrize("k", KS)
+def test_scan_churn_quick_vs_numpy_merge(k):
+    _churn_scan(6_000, 6_000, k)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("k", KS)
+def test_scan_churn_100k_vs_numpy_merge(k):
+    _churn_scan(100_000, 30_000, k, delta_capacity=4096, page_size=509)
+
+
+def test_scan_survives_rebalance_mid_scan():
+    """A rebalance between pages of an open sharded iterator must not
+    tear it: the pinned per-shard views answer for scan-time state."""
+    rng = np.random.default_rng(5)
+    base = np.unique(rng.integers(0, 1 << 40, 8_000).astype(np.float64))
+    svc = ShardedIndexService(base, ServiceConfig(
+        num_shards=4, delta_capacity=4096, shard_balance_factor=2.0,
+    ))
+    lo, hi = float(base[100]), float(base[-100])
+    want = base[(base >= lo) & (base < hi)]
+    it = svc.scan(lo, hi, 97)
+    first = [p for _, p in zip(range(3), it)]
+    # hot-tail insert: routes everything to the last shard -> rebalance
+    hot = base.max() + 1.0 + np.arange(30_000, dtype=np.float64)
+    svc.insert(hot)
+    assert svc.stats["rebalances"] >= 1
+    got_k, _ = _concat(first + list(it))
+    np.testing.assert_array_equal(got_k, want)
+    # a fresh scan sees the new keys
+    got2, _ = _concat(svc.scan(lo, float(hot[-1]) + 1.0, 1024))
+    want2 = np.concatenate([base[base >= lo], hot])
+    np.testing.assert_array_equal(got2, want2)
+
+
+# --------------------------------------------------------------------------
+# page geometry: boundaries, non-multiples, empty ranges
+# --------------------------------------------------------------------------
+
+def test_scan_page_boundaries_and_empty_ranges():
+    base = np.arange(0, 1000, dtype=np.float64) * 2.0
+    vals = np.arange(1000, dtype=np.int64) * 7
+    svc = IndexService(base, ServiceConfig(delta_capacity=128), vals=vals)
+    svc.delete(base[::5])
+    live_k = base[np.arange(1000) % 5 != 0]
+    live_v = vals[np.arange(1000) % 5 != 0]
+    for page_size in (1, 7, 100, 4096):
+        pages = list(svc.scan(0.0, 2001.0, page_size))
+        got_k = np.concatenate([p.keys[p.live_mask] for p in pages])
+        got_v = np.concatenate([p.vals[p.live_mask] for p in pages])
+        np.testing.assert_array_equal(got_k, live_k)
+        np.testing.assert_array_equal(got_v, live_v)
+        counts = [p.count for p in pages]
+        assert all(c == page_size for c in counts[:-1])
+        assert counts[-1] == live_k.size - page_size * (len(counts) - 1)
+    # a range that is an exact multiple of the page size
+    got_k, _ = _concat(svc.scan(float(live_k[0]), float(live_k[100]), 50))
+    assert got_k.size == 100
+    # empty, inverted, and out-of-domain ranges scan nothing
+    assert list(svc.scan(10.0, 10.0, 64)) == []
+    assert list(svc.scan(500.0, 10.0, 64)) == []
+    assert list(svc.scan(1e12, 2e12, 64)) == []
+    assert list(svc.scan(-500.0, -1.0, 64)) == []
+    with pytest.raises(ValueError):
+        next(iter(svc.scan(0.0, 1.0, 0)))
+
+
+def test_scan_resurrected_keys_carry_staged_values():
+    """Tombstone-then-reinsert: the scanned row must carry the staged
+    value, not the dead base row's."""
+    base = np.arange(10, dtype=np.float64)
+    vals = np.arange(10, dtype=np.int64) * 100
+    svc = IndexService(base, ServiceConfig(delta_capacity=64), vals=vals)
+    svc.delete(np.array([3.0, 4.0]))
+    svc.insert(np.array([3.0]), np.array([999]))
+    got_k, got_v = _concat(svc.scan(0.0, 10.0, 4))
+    want_k = np.array([0.0, 1.0, 2.0, 3.0, 5.0, 6.0, 7.0, 8.0, 9.0])
+    want_v = np.array([0, 100, 200, 999, 500, 600, 700, 800, 900])
+    np.testing.assert_array_equal(got_k, want_k)
+    np.testing.assert_array_equal(got_v, want_v)
+
+
+# --------------------------------------------------------------------------
+# device path: kernel vs fallback bit-identity, device vs host
+# --------------------------------------------------------------------------
+
+def test_scan_kernel_bit_identical_to_fallback_any_query():
+    """Pallas scan-page kernel vs XLA fallback on adversarial inputs:
+    pads, ranks past the end, negative starts, empty deltas."""
+    rng = np.random.default_rng(0)
+    for trial in range(4):
+        nb = int(rng.integers(40, 700))
+        base = np.sort(rng.choice(
+            np.arange(0, 1 << 20, 3, dtype=np.float64), nb, replace=False))
+        norm = ((base - base[0]) / (base[-1] - base[0])).astype(np.float32)
+        bvals = rng.integers(0, 1 << 30, nb).astype(np.int32)
+        ni = int(rng.integers(0, 50))
+        pad_i = 64
+        ins = np.full(pad_i, np.inf, np.float32)
+        ins[:ni] = np.sort(rng.random(ni).astype(np.float32))
+        ivals = np.zeros(pad_i, np.int32)
+        ivals[:ni] = rng.integers(0, 1 << 30, ni)
+        nd = int(rng.integers(0, min(30, nb)))
+        dpos = np.full(32, nb, np.int32)
+        dpos[:nd] = np.sort(rng.choice(nb, nd, replace=False))
+        end = nb - nd + ni
+        starts = np.array(
+            [-7, 0, 1, end // 2, end - 1, end, end + 99], np.int32
+        )
+        for page_size in (8, 129):
+            a = ops.rmi_scan_page_op(
+                starts, norm, bvals, ins, ivals, dpos, end,
+                page_size=page_size, use_kernel=True,
+            )
+            b = ops.rmi_scan_page_op(
+                starts, norm, bvals, ins, ivals, dpos, end,
+                page_size=page_size, use_kernel=False,
+            )
+            for x, y in zip(a, b):
+                np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_scan_batch_device_matches_host_pages():
+    """On a float32-injective lattice the device scan (normalized f32
+    keys, int32 vals) must match the exact host pages row for row —
+    kernel strategy and XLA strategy alike."""
+    base = np.arange(2, 6002, dtype=np.float64) * 1024.0
+    vals = np.arange(base.size, dtype=np.int64) * 3
+    for strategy in ("binary", "pallas_fused"):
+        svc = IndexService(
+            base, ServiceConfig(delta_capacity=1024, strategy=strategy),
+            vals=vals,
+        )
+        svc.insert(
+            np.arange(3, 1500, 7, dtype=np.float64) * 1024.0 + 512.0,
+            np.arange(214, dtype=np.int64) + 10_000,
+        )
+        svc.delete(base[::13])
+        lo, hi = float(base[5]), float(base[-5])
+        keys, dvals, live = svc.scan_batch(lo, hi, 128)
+        m = np.asarray(live).ravel()
+        got_k = np.asarray(keys).ravel()[m]
+        got_v = np.asarray(dvals).ravel()[m]
+        host_k, host_v = _concat(svc.scan(lo, hi, 128))
+        snap = svc._mgr.current()
+        np.testing.assert_array_equal(got_k, snap.keys.normalize(host_k))
+        np.testing.assert_array_equal(got_v, host_v.astype(np.int32))
+
+
+# --------------------------------------------------------------------------
+# KV page table consumer
+# --------------------------------------------------------------------------
+
+def test_paged_kv_scan_streams_table_in_merge_order():
+    from repro.serve.kvcache import MAX_PAGES_PER_REQ, PagedKVAllocator
+
+    rng = np.random.default_rng(2)
+    alloc = PagedKVAllocator(num_pages=2048, page_size=16,
+                             delta_capacity=128, num_shards=4)
+    active = []
+    for uid in range(120):
+        alloc.alloc(uid, int(rng.integers(1, 8)) * 16)
+        active.append(uid)
+    # bootstrap (dict) mode scans before any index exists
+    want = sorted(alloc._table.items())
+    got_k, got_v = _concat(alloc.scan(0.0, float(1 << 60), 100))
+    np.testing.assert_array_equal(got_k, [k for k, _ in want])
+    np.testing.assert_array_equal(got_v, [v for _, v in want])
+    alloc.rebuild_index()
+    # churn so the sharded deltas hold staged inserts AND tombstones
+    for uid in rng.choice(active, 40, replace=False):
+        alloc.free(int(uid))
+        active.remove(uid)
+    for uid in range(200, 260):
+        alloc.alloc(uid, 32)
+        active.append(uid)
+    want = sorted(alloc._table.items())
+    got_k, got_v = _concat(alloc.scan(0.0, float(1 << 60), 100))
+    np.testing.assert_array_equal(got_k, [k for k, _ in want])
+    np.testing.assert_array_equal(got_v, [v for _, v in want])
+    # per-request walk: physical pages in logical order
+    uid = active[-1]
+    assert list(alloc.request_pages(uid)) == alloc._per_req[uid]
+    lo = uid * MAX_PAGES_PER_REQ
+    assert list(alloc.request_pages(uid)) == [
+        alloc._table[k] for k in sorted(
+            k for k in alloc._table if lo <= k < lo + MAX_PAGES_PER_REQ
+        )
+    ]

@@ -371,9 +371,13 @@ def test_noop_absent_deletes_never_rebalance():
 def test_stats_and_version_monotone_across_rebalance():
     svc = ShardedIndexService(
         np.arange(800, dtype=np.float64),
-        ServiceConfig(num_shards=4, delta_capacity=64),
+        ServiceConfig(num_shards=4, delta_capacity=64, bloom_fpr=0.02),
     )
     svc.insert(np.arange(2000, 2300, dtype=np.float64))
+    # exercise every read counter before the rebalance
+    svc.get(np.array([10.0, 99999.0]))
+    svc.contains(np.arange(0, 4000, 7, dtype=np.float64))
+    svc.range_lookup(10.0, 500.0)
     pre = svc.stats_summary()
     v_pre = svc.version
     svc.rebalance()
@@ -381,6 +385,55 @@ def test_stats_and_version_monotone_across_rebalance():
     assert post["insert_applied"] == pre["insert_applied"] == 300
     assert post["compactions"] >= pre["compactions"]
     assert svc.version >= v_pre
+    # contains/get/bloom accounting survives the rebalance monotonically
+    for key in ("get", "contains", "range"):
+        assert post[key]["count"] == pre[key]["count"] > 0
+    assert pre["contains"]["bloom_screened"] > 0
+    assert post["contains"]["bloom_screened"] >= pre["contains"]["bloom_screened"]
+    svc.contains(np.array([2000.0]))
+    after = svc.stats_summary()
+    assert after["contains"]["count"] == post["contains"]["count"] + 1
+    assert after["contains"]["hit_rate"] > 0
+
+
+def test_sharded_stats_parity_with_unsharded():
+    """The sharded front end must keep the same per-op accounting the
+    unsharded service does (get/contains hits, latencies, bloom
+    screens) — these counters silently read zero before."""
+    rng = np.random.default_rng(3)
+    base = np.unique(rng.integers(0, 1 << 40, 6_000).astype(np.float64))
+    cfg = ServiceConfig(delta_capacity=512, bloom_fpr=0.02)
+    ref = IndexService(base, dataclasses.replace(cfg))
+    svc = ShardedIndexService(base, dataclasses.replace(cfg, num_shards=3))
+    present = rng.choice(base, 400, replace=False)
+    absent = rng.integers(1 << 41, 1 << 42, 400).astype(np.float64)
+    sample = np.concatenate([present, absent])
+    for service in (ref, svc):
+        service.get(sample)
+        service.contains(sample)
+        service.range_lookup(float(sample.min()), float(sample.max()))
+    r_sum, s_sum = ref.stats_summary(), svc.stats_summary()
+    for op in ("get", "contains"):
+        assert s_sum[op]["count"] == r_sum[op]["count"] == sample.size
+        assert s_sum[op]["hit_rate"] == r_sum[op]["hit_rate"]
+        assert s_sum[op]["ns_per_op"] > 0
+    assert s_sum["range"]["count"] == 1
+    assert s_sum["contains"]["bloom_screened"] > 0
+
+
+def test_range_lookup_inverted_cross_shard_clamps():
+    """lo > hi with endpoints routing to different shards must clamp
+    to the empty range (r, r), not an inverted cross-shard pair."""
+    base = np.arange(0, 4000, dtype=np.float64)
+    svc = ShardedIndexService(base, ServiceConfig(num_shards=4))
+    ref = IndexService(base)
+    # lo in the last shard, hi in the first
+    r0, r1 = svc.range_lookup(3900.0, 5.0)
+    assert r0 == r1 == 3900
+    assert svc.range_lookup(3900.0, 5.0) == ref.range_lookup(3900.0, 5.0)
+    # forward ranges still count across the same shards
+    lo, hi = svc.range_lookup(5.0, 3900.0)
+    assert hi - lo == 3895
 
 
 def test_near_total_drain_collapses_to_single_shard():
