@@ -32,10 +32,11 @@ Four questions, all ns/lookup CSV rows:
 
 from __future__ import annotations
 
+import json
+import os
+
 import numpy as np
 import jax.numpy as jnp
-
-import os
 
 from benchmarks.common import BENCH_LOOKUPS, BENCH_N, emit, ns_per_item
 from repro.core import RMIConfig, build_rmi, compile_lookup, make_keyset
@@ -45,12 +46,65 @@ from repro.index_service import (
     ServiceConfig,
     ShardedIndexService,
 )
+from repro.kernels import ops as kernels_ops
 from repro.kernels.rmi_lookup import default_interpret
 
 DELTA_CAPACITY = 4096
 # interpret-mode pallas is orders of magnitude slower than compiled
 # XLA; keep the fused-vs-two-dispatch comparison batch bounded on CPU
 FUSED_BATCH = 4096
+
+# machine-readable mirror of the CSV rows: per-sweep median latency,
+# dispatch counts, and speedups, merged into BENCH_dynamic_index.json
+# at exit (standalone LIX_*_ONLY runs merge into the same file, so the
+# CI bench-smoke steps accumulate one artifact)
+JSON_PATH = os.environ.get("LIX_BENCH_JSON", "BENCH_dynamic_index.json")
+_JSON_ROWS: list = []
+
+
+def record(name: str, us_per_item: float, derived: str = "", **extra):
+    """CSV row + JSON row in one call."""
+    emit(name, us_per_item, derived)
+    _JSON_ROWS.append({
+        "name": name,
+        "median_us_per_item": round(float(us_per_item), 4),
+        "derived": derived,
+        **extra,
+    })
+
+
+def write_json() -> None:
+    data = {
+        "bench": "dynamic_index",
+        "n": BENCH_N,
+        "lookups": BENCH_LOOKUPS,
+        "interpret": default_interpret(),
+        "rows": [],
+    }
+    if os.path.exists(JSON_PATH):
+        try:
+            with open(JSON_PATH) as f:
+                old = json.load(f)
+            fresh = {r["name"] for r in _JSON_ROWS}
+            data["rows"] = [
+                r for r in old.get("rows", []) if r["name"] not in fresh
+            ]
+        except (OSError, ValueError, KeyError):
+            pass
+    data["rows"] += _JSON_ROWS
+    with open(JSON_PATH, "w") as f:
+        json.dump(data, f, indent=2)
+    print(f"wrote {JSON_PATH} ({len(data['rows'])} rows)", flush=True)
+
+
+def dispatches(fn) -> int:
+    """Device-op entries one call of ``fn`` costs (post-warmup)."""
+    import jax
+
+    jax.block_until_ready(fn())
+    with kernels_ops.count_dispatches() as n:
+        jax.block_until_ready(fn())
+        return n()
 
 
 def sharded_sweep(raw=None, ks=None) -> None:
@@ -79,13 +133,29 @@ def sharded_sweep(raw=None, ks=None) -> None:
             lambda q: jax.block_until_ready(svc.lookup_batch(q)),
             sample, batch=b,
         )
+        d = dispatches(lambda: svc.lookup_batch(sample))
         summary = svc.stats_summary()
-        emit(
+        record(
             f"dynamic_index/sharded_k{k}",
             t / 1e3,
             f"devices={len(jax.devices())};"
             f"router_hit={svc.router.model_hit_rate:.3f};"
-            f"compactions={summary['compactions']}",
+            f"compactions={summary['compactions']};dispatches={d}",
+            dispatches=d,
+        )
+        # one-dispatch stacked scan over all touched shards
+        lo, hi = float(ks.raw[ks.n // 8]), float(ks.raw[(7 * ks.n) // 8])
+        page = 512
+        t_s = ns_per_item(
+            lambda: jax.block_until_ready(svc.scan_batch(lo, hi, page)),
+            batch=1,
+        )
+        d_s = dispatches(lambda: svc.scan_batch(lo, hi, page))
+        record(
+            f"dynamic_index/sharded_scan_k{k}",
+            t_s / 1e3,
+            f"page={page};dispatches={d_s};interpret={default_interpret()}",
+            dispatches=d_s,
         )
 
 
@@ -167,24 +237,61 @@ def scan_sweep(raw=None, ks=None) -> None:
         pages = -(-rows // page)
         t_scan = t_best(drain)
         t_naive = t_best(lambda: naive())
-        emit(
+        record(
             f"dynamic_index/scan_fill_{pct}pct",
             t_scan / pages * 1e6,
             f"rows={rows};pages_per_s={pages / t_scan:.0f};"
             f"rows_per_s={rows / t_scan:.0f};"
             f"naive_remerge_ms={t_naive * 1e3:.3f};"
             f"scan_vs_naive={t_naive / t_scan:.1f}x",
+            speedup_vs_naive=round(t_naive / t_scan, 2),
         )
-    # one-dispatch device scan at the final fill (kernel caveat: off
-    # TPU the pallas path interprets; the XLA fallback is the honest
-    # CPU number, so use the configured strategy's default)
+    # one-dispatch fused device scan at the final fill vs the PR 4
+    # path (host rank round-trip + per-call re-pack + rank-addressed
+    # page op) on the same service state.  Kernel caveat: off TPU the
+    # pallas path interprets; the XLA fallback is the honest CPU
+    # number, so use the configured strategy's default.
+    pages_n = max(1, -(-span // page))
     t_dev = t_best(lambda: jax.block_until_ready(
         svc.scan_batch(lo, hi, page)
     ))
-    emit(
+    t_pr4 = t_best(lambda: jax.block_until_ready(
+        _scan_batch_pr4(svc, lo, hi, page)
+    ))
+    d_new = dispatches(lambda: svc.scan_batch(lo, hi, page))
+    d_pr4 = dispatches(lambda: _scan_batch_pr4(svc, lo, hi, page))
+    record(
         "dynamic_index/scan_device_batch",
-        t_dev / max(1, -(-span // page)) * 1e6,
-        f"pages={-(-span // page)};interpret={default_interpret()}",
+        t_dev / pages_n * 1e6,
+        f"pages={pages_n};interpret={default_interpret()};"
+        f"pr4_us_per_page={t_pr4 / pages_n * 1e6:.3f};"
+        f"fused_vs_pr4={t_pr4 / t_dev:.1f}x;"
+        f"dispatches={d_new};pr4_dispatches={d_pr4}",
+        dispatches=d_new,
+        pr4_dispatches=d_pr4,
+        speedup_vs_pr4=round(t_pr4 / t_dev, 2),
+    )
+
+
+def _scan_batch_pr4(svc: IndexService, lo, hi, page_size):
+    """The PR 4 scan_batch read path, preserved as the benchmark
+    baseline: pin + collapse the delta PER CALL, rank the endpoints on
+    the host, re-pack/upload the delta arrays, then dispatch the
+    rank-addressed page op over host-computed starts."""
+    from repro.index_service.scan import device_scan_plan, pin_view
+
+    with svc._lock:
+        snap = svc._mgr.current()
+        view = pin_view(snap, svc._frozen, svc._active)
+    r0, r1 = (int(r) for r in view.rank(np.array([lo, hi])))
+    if hi < lo:
+        r1 = r0
+    ins, ivals, dpos = device_scan_plan(view, snap.keys.normalize)
+    starts = np.arange(r0, max(r1, r0 + 1), page_size, np.int32)
+    fn = snap.scan_page_fn(svc.config.strategy, page_size)
+    return fn(
+        jnp.asarray(starts), jnp.asarray(ins), jnp.asarray(ivals),
+        jnp.asarray(dpos), np.int32(r1),
     )
 
 
@@ -203,7 +310,7 @@ def main() -> None:
     # ---- static floor: the read-only RMI of §3 ---------------------------
     static_lookup = compile_lookup(build_rmi(ks, cfg), ks)
     t_static = ns_per_item(static_lookup, qn, batch=b)
-    emit("dynamic_index/static_rmi", t_static / 1e3, f"n={n}")
+    record("dynamic_index/static_rmi", t_static / 1e3, f"n={n}")
 
     # ---- merged path vs delta fill ---------------------------------------
     svc = IndexService(ks.raw, ServiceConfig(
@@ -221,7 +328,7 @@ def main() -> None:
         snap, _, _, dk, dp = svc._capture()
         fn = snap.merged_lookup_fn(svc.config.strategy)
         t = ns_per_item(fn, qn, dk, dp, batch=b)
-        emit(
+        record(
             f"dynamic_index/fill_{pct}pct",
             t / 1e3,
             f"delta={target};vs_static={t / t_static:.2f}x",
@@ -237,7 +344,7 @@ def main() -> None:
                              batch=bf)
             tf = ns_per_item(snap.merged_lookup_fn("pallas_fused"), qf, dk,
                              dp, batch=bf)
-            emit(
+            record(
                 f"dynamic_index/fused_fill_{pct}pct",
                 tf / 1e3,
                 f"two_dispatch_us={t2 / 1e3:.4f};xla_fused_us={tx / 1e3:.4f};"
@@ -263,7 +370,7 @@ def main() -> None:
                          ).block_until_ready()
         ops += b
     t_mixed = (time.perf_counter() - t0) / ops * 1e9
-    emit(
+    record(
         "dynamic_index/mixed_90_10",
         t_mixed / 1e3,
         f"compactions={svc.stats['compactions']};vs_static={t_mixed / t_static:.2f}x",
@@ -275,7 +382,7 @@ def main() -> None:
     fn = snap.merged_lookup_fn(svc.config.strategy)
     qn2 = jnp.asarray(snap.keys.normalize(raw[sample]))
     t_post = ns_per_item(fn, qn2, dk, dp, batch=b)
-    emit(
+    record(
         "dynamic_index/post_compaction",
         t_post / 1e3,
         f"version={svc.version};leaves_refit={svc.stats['leaves_refit']};"
@@ -293,3 +400,4 @@ if __name__ == "__main__":
         scan_sweep()
     else:
         main()
+    write_json()

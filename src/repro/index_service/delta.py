@@ -58,8 +58,16 @@ class DeltaBuffer:
         self._ins = np.empty(0, np.float64)
         self._vals = np.empty(0, np.int64)
         self._del = np.empty(0, np.float64)
+        self._version = 0
 
     # ---- introspection ---------------------------------------------------
+    @property
+    def version(self) -> int:
+        """Monotone mutation counter: bumps on every staging call (and
+        on `clear`), so device-plane caches can key a capture on
+        ``(buffer identity, version)`` and re-pack only the shards
+        whose delta actually changed."""
+        return self._version
     @property
     def num_inserts(self) -> int:
         return int(self._ins.size)
@@ -103,6 +111,7 @@ class DeltaBuffer:
     def stage_insert(self, key: float, live_below: bool, val: int = 0) -> bool:
         """Returns True iff the logical key set changed (the key became
         live).  Re-inserting a live key only refreshes its value."""
+        self._version += 1  # conservative: value refreshes count too
         i = np.searchsorted(self._ins, key)
         if i < self._ins.size and self._ins[i] == key:
             self._vals[i] = val
@@ -118,6 +127,7 @@ class DeltaBuffer:
 
     def stage_delete(self, key: float, live_below: bool) -> bool:
         """Returns True iff the key was live and is now dead."""
+        self._version += 1
         i = np.searchsorted(self._ins, key)
         if i < self._ins.size and self._ins[i] == key:
             self._ins = np.delete(self._ins, i)
@@ -143,6 +153,7 @@ class DeltaBuffer:
     ) -> int:
         """Vectorized `stage_insert` over a batch (last write wins for
         in-batch duplicates).  Returns how many keys became live."""
+        self._version += 1
         q = np.asarray(keys, np.float64)
         v = (np.zeros(q.shape, np.int64) if vals is None
              else np.asarray(vals, np.int64))
@@ -167,6 +178,7 @@ class DeltaBuffer:
     def stage_delete_many(self, keys: np.ndarray, live_below: np.ndarray) -> int:
         """Vectorized `stage_delete` over a batch.  Returns how many
         keys went from live to dead."""
+        self._version += 1
         q = np.asarray(keys, np.float64)
         lb = np.asarray(live_below, bool)
         u, first = np.unique(q, return_index=True)
@@ -216,7 +228,9 @@ class DeltaBuffer:
         return found, np.where(found, vals, 0)
 
     def clear(self) -> None:
+        v = self._version
         self.__post_init__()
+        self._version = v + 1
 
 
 def live_mask(

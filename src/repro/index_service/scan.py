@@ -17,10 +17,18 @@ values — without ever materializing the merged array:
     tombstone-filtered base slice and one insert slice merge into the
     next ``page_size`` rows (O(page + tombstones-in-window + log n)
     per page, vs O(n log n) for re-merging the whole key set).
-  * `device_scan_plan` — the same view lowered to the padded
-    float32/int32 arrays `kernels.ops.rmi_scan_page_op` consumes
-    (power-of-two pad buckets, so jit retraces per bucket, never per
-    write).
+  * `device_scan_slab` / `pack_scan_slab` / `live_prefix_index` — a
+    view lowered to the FUSED device scan's inputs
+    (`kernels.ops.rmi_scan_range_op` / `rmi_sharded_scan_page_op`):
+    staged-insert arrays plus the prefix-sum page index
+    (``live_prefix``, ``ins_rank``) that lets the kernel rank the
+    endpoints and resolve rank→row with single-gather fixed-trip
+    searches.  Built once per (snapshot, delta) version and cached by
+    the services; quarter-pow2 pad buckets (`_pad_bucket`) key the jit
+    cache per capacity bucket, never per write.
+  * `device_scan_plan` — the older rank-addressed lowering for
+    `kernels.ops.rmi_scan_page_op` (still the building block for
+    callers that already hold ranks).
   * `repack_pages` — stitches sub-iterators (per-shard scans, ordered
     by router boundaries) back into full fixed-size pages.
 """
@@ -245,6 +253,190 @@ def repack_pages(
             if held >= page_size:
                 yield from flush(final=False)
     yield from flush(final=True)
+
+
+def _pad_bucket(x: int, *, min_pad: int = 64) -> int:
+    """Shape bucket for jit caching: the next value of the form
+    ``k * 2^m`` with k in {4..7} at or above ``max(min_pad, x)`` —
+    quarter-power-of-two steps, so padded widths stay stable across
+    small growth (few retraces) without the up-to-2x wasted lanes a
+    pure power-of-two bucket costs on scan grids."""
+    x = max(min_pad, x)
+    p = _next_pow2(x)
+    for k in (4, 5, 6, 7):
+        c = k * (p // 8)
+        if c >= x:
+            return c
+    return p
+
+
+# pad value for `ins_rank` slots past the staged-insert count: larger
+# than any reachable merged rank (int32-safe), so the partition search
+# never selects a pad
+_RANK_PAD = np.int32(1 << 30)
+
+
+def live_prefix_index(
+    del_pos: np.ndarray, n: int, *, n_pad: Optional[int] = None
+) -> np.ndarray:
+    """The prefix-sum page index over base positions:
+    ``live_prefix[p] = p - #tombstoned positions < p`` — i.e. how many
+    LIVE base rows sit below position p.  Monotone, so the device scan
+    resolves rank -> base row (and base position -> rank) with one
+    fixed-trip binary search instead of a nested tombstone search per
+    trip.  Padded (when ``n_pad`` is given) by repeating the final
+    value, which pins searches past the true size."""
+    mark = np.zeros(n + 1, np.int64)
+    if del_pos.size:
+        mark[np.asarray(del_pos, np.int64) + 1] = 1
+    lp = np.arange(n + 1, dtype=np.int64) - np.cumsum(mark)
+    if n_pad is None or n_pad == n:
+        return lp.astype(np.int32)
+    out = np.full(n_pad + 1, lp[-1], np.int32)
+    out[: n + 1] = lp
+    return out
+
+
+def device_scan_slab(
+    view: PinnedView, base_norm: np.ndarray, normalize, *,
+    min_pad: int = 64,
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Lower a pinned view's delta side to the fused-endpoint scan
+    inputs `kernels.ops.rmi_scan_range_op` consumes:
+
+        (ins_norm f32 (+inf pad), ins_vals i32, ins_rank i32,
+         live_prefix i32 (n+1,))
+
+    ``ins_rank[j] = j + live_prefix[lower_bound(base_norm, ins[j])]``
+    is staged insert j's merged rank, precomputed in the SAME float32
+    frame the kernel searches (``base_norm``), so the device partition
+    is internally consistent with the device select even where float32
+    normalization collides.  Built once per (snapshot, delta version)
+    and cached by the service — the per-scan host cost of the old path
+    (collapse + re-pack per call) amortizes to zero on the read path.
+
+    Pads go to quarter-pow2 buckets (`_pad_bucket`), keying the jit
+    cache per capacity bucket, never per write.
+    """
+    k = view.ins_keys.size
+    pad_i = _pad_bucket(k + 1, min_pad=min_pad)
+    ins = np.full(pad_i, np.inf, np.float32)
+    ins[:k] = normalize(view.ins_keys)
+    ivals = np.zeros(pad_i, np.int32)
+    ivals[:k] = np.clip(
+        view.ins_vals, np.iinfo(np.int32).min, np.iinfo(np.int32).max
+    )
+    lp = live_prefix_index(view.del_pos, view.base_keys.size)
+    ins_rank = np.full(pad_i, _RANK_PAD, np.int32)
+    if k:
+        bl = np.searchsorted(base_norm, ins[:k], side="left")
+        ins_rank[:k] = np.arange(k, dtype=np.int32) + lp[bl]
+    return ins, ivals, ins_rank, lp
+
+
+def fit_scan_frame(views) -> Tuple[float, float]:
+    """One shared affine frame covering every view's base + staged
+    keys: ``(lo, hi)`` with ``hi > lo`` guaranteed (degenerate spans
+    widen by 1), THE frame rule for every stacked scan plane — the
+    sharded service and the KV page table must agree on it or their
+    slabs stop being comparable across shards."""
+    lo = min(float(v.base_keys[0]) for v in views if v.base_keys.size)
+    hi = max(float(v.base_keys[-1]) for v in views if v.base_keys.size)
+    for v in views:
+        if v.ins_keys.size:
+            lo = min(lo, float(v.ins_keys[0]))
+            hi = max(hi, float(v.ins_keys[-1]))
+    if not (hi > lo):
+        hi = lo + 1.0
+    return lo, hi
+
+
+def scan_page_bound(
+    raws, ins_total: int, lo: float, hi: float, page_size: int
+) -> int:
+    """Conservative static page count for a fused device scan of
+    [lo, hi): per-array base windows plus every staged insert can only
+    over-count rows (tombstones shrink), bucketed for jit-cache
+    stability.  Host metadata sizing the output shape — NOT a rank fed
+    to the device program.  One extra page of slack covers the device
+    resolving the endpoints in float32 (a bound that rounds onto a
+    duplicate run can pull a handful of extra rows into the range that
+    the float64 window here would exclude)."""
+    span = int(ins_total)
+    for raw in raws:
+        a, b = np.searchsorted(raw, [lo, hi])
+        span += max(0, int(b - a))
+    return _pad_bucket(-(-max(1, span) // page_size) + 1, min_pad=1)
+
+
+def pack_scan_slab(
+    view: PinnedView, normalize, n_pad: int, d_pad: int
+) -> dict:
+    """One shard's stacked-scan slab row for
+    `kernels.ops.rmi_sharded_scan_page_op`: the `device_scan_slab`
+    layout padded to the fleet-wide ``(n_pad, d_pad)`` bucket, with the
+    base keys re-normalized into the SHARED frame ``normalize`` (shard
+    ranges tile the key space, so one global affine frame keeps
+    cross-shard rows comparable).  Returns a dict of per-row arrays
+    plus the shard's live row count."""
+    n = view.base_keys.size
+    base = np.full(n_pad, np.inf, np.float32)
+    base[:n] = normalize(view.base_keys)
+    bvals = np.zeros(n_pad, np.int32)
+    if view.base_vals is not None:
+        bvals[:n] = np.clip(
+            view.base_vals, np.iinfo(np.int32).min, np.iinfo(np.int32).max
+        )
+    lp = live_prefix_index(view.del_pos, n, n_pad=n_pad)
+    k = view.ins_keys.size
+    ins = np.full(d_pad, np.inf, np.float32)
+    ins[:k] = normalize(view.ins_keys)
+    ivals = np.zeros(d_pad, np.int32)
+    ivals[:k] = np.clip(
+        view.ins_vals, np.iinfo(np.int32).min, np.iinfo(np.int32).max
+    )
+    ins_rank = np.full(d_pad, _RANK_PAD, np.int32)
+    if k:
+        bl = np.searchsorted(base[:n], ins[:k], side="left")
+        ins_rank[:k] = np.arange(k, dtype=np.int32) + lp[bl]
+    return {
+        "base": base, "bvals": bvals, "live_prefix": lp,
+        "ins": ins, "ivals": ivals, "ins_rank": ins_rank,
+        "live": view.live_count,
+    }
+
+
+def stack_scan_slabs(views) -> dict:
+    """Full (non-incremental) assembly of a stacked scan plane from
+    per-shard pinned views: fit the shared frame, size the pad buckets,
+    pack each view's slab, and stack — everything
+    `kernels.ops.rmi_sharded_scan_page_op` consumes except the device
+    upload, plus the ``normalize`` callable and the sizing metadata
+    (``raws``, ``ins_total``) `scan_page_bound` needs.  One definition
+    of the plane-assembly rule: the KV page table uses this directly;
+    `ShardedIndexService` layers its incremental per-row cache on the
+    same `pack_scan_slab` rows."""
+    lo, hi = fit_scan_frame(views)
+    n_pad = _pad_bucket(max(v.base_keys.size for v in views) + 1)
+    d_pad = _pad_bucket(max(v.ins_keys.size for v in views) + 1)
+
+    def normalize(x):
+        return (
+            (np.asarray(x, np.float64) - lo) / (hi - lo)
+        ).astype(np.float32)
+
+    rows = [pack_scan_slab(v, normalize, n_pad, d_pad) for v in views]
+    return {
+        "lo": lo, "hi": hi, "normalize": normalize,
+        "raws": [v.base_keys for v in views],
+        "ins_total": int(sum(v.ins_keys.size for v in views)),
+        "base": np.stack([r["base"] for r in rows]),
+        "bvals": np.stack([r["bvals"] for r in rows]),
+        "live_prefix": np.stack([r["live_prefix"] for r in rows]),
+        "ins": np.stack([r["ins"] for r in rows]),
+        "ivals": np.stack([r["ivals"] for r in rows]),
+        "ins_rank": np.stack([r["ins_rank"] for r in rows]),
+    }
 
 
 def device_scan_plan(

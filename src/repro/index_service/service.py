@@ -49,8 +49,9 @@ from repro.index_service.delta import (
 )
 from repro.index_service.scan import (
     PinnedView,
-    device_scan_plan,
+    device_scan_slab,
     pin_view,
+    scan_page_bound,
     scan_pages,
 )
 from repro.index_service.snapshot import (
@@ -75,12 +76,38 @@ class ServiceConfig:
     num_shards: int = 1
     shard_balance_factor: float = 4.0  # re-fit boundaries when a shard
     #                                    exceeds factor x the mean fill
+    # write-rate-aware compaction: with gain > 0, the fill-fraction
+    # trigger scales DOWN as the write-rate EWMA rises, so hot shards
+    # compact earlier (smaller merges, fresher RMIs) while cold shards
+    # keep batching up to compact_fraction.  The effective trigger is
+    #   compact_fraction * (1 - gain * ewma / (ewma + capacity/8))
+    # floored at compact_rate_floor.  gain = 0 keeps the rate-blind
+    # behaviour.
+    compact_rate_gain: float = 0.0
+    compact_rate_floor: float = 0.2
 
 
 def _default_rmi(n: int) -> RMIConfig:
     return RMIConfig(
         num_leaves=max(16, n // 64), stage0_hidden=(), stage0_train_steps=0
     )
+
+
+def scan_plane_key(snap, frozen, active) -> tuple:
+    """THE cache-coherence key for device scan planes: snapshot and
+    delta-buffer identities plus delta mutation versions.  Both the
+    unsharded plane cache and the sharded per-shard slab diff use this
+    one definition — a new delta level added here invalidates every
+    plane consistently."""
+    return (
+        snap, frozen, -1 if frozen is None else frozen.version,
+        active, active.version,
+    )
+
+
+def scan_plane_key_eq(a: tuple, b: tuple) -> bool:
+    return (a[0] is b[0] and a[1] is b[1] and a[2] == b[2]
+            and a[3] is b[3] and a[4] == b[4])
 
 
 class IndexService:
@@ -128,6 +155,8 @@ class IndexService:
         self._worker: Optional[threading.Thread] = None
         self._worker_error: Optional[BaseException] = None
         self._device_cache = None
+        self._scan_plane = None  # keyed (snap, frozen+ver, active+ver)
+        self._write_ewma = 0.0   # staged entries per recent write call
         self.stats: Dict[str, float] = {
             "get": 0, "get_s": 0.0, "get_hits": 0,
             "contains": 0, "contains_s": 0.0, "contains_hits": 0,
@@ -289,31 +318,62 @@ class IndexService:
 
         return pages()
 
+    def _scan_plane_cached(self):
+        """The device-resident scan plane for the current (snapshot,
+        delta) version: staged-insert arrays plus the prefix-sum page
+        index (`scan.device_scan_slab`), packed and uploaded once per
+        version and reused by every `scan_batch` until the next write
+        or compaction — keyed on (snapshot identity, delta identity +
+        mutation version), so the read path never re-collapses or
+        re-uploads an unchanged delta."""
+        with self._lock:
+            snap, frozen, active = (
+                self._mgr.current(), self._frozen, self._active
+            )
+            key = scan_plane_key(snap, frozen, active)
+            plane = self._scan_plane
+            if plane is not None and scan_plane_key_eq(plane[0], key):
+                return snap, plane[1], plane[2]
+            view = pin_view(snap, frozen, active)
+        # the O(n) index build + upload run OUTSIDE the lock (the
+        # pinned view is immutable), so writers and compaction commits
+        # don't stall behind it; publishing is one reference write, and
+        # a plane made stale by a concurrent write just misses its key
+        # check on the next read
+        ins, ivals, ins_rank, lp = device_scan_slab(
+            view, snap.keys.norm, snap.keys.normalize
+        )
+        slab = tuple(jnp.asarray(a) for a in (ins, ivals, ins_rank, lp))
+        self._scan_plane = (key, slab, view.ins_keys.size)
+        return snap, slab, view.ins_keys.size
+
     def scan_batch(self, lo: float, hi: float, page_size: int = 256):
-        """Device fast path for scans: ONE dispatch gathers every page
-        of [lo, hi) through `kernels.ops.rmi_scan_page_op` (the Pallas
-        kernel under the kernel strategies, its bit-identical XLA
-        fallback otherwise).
+        """Device fast path for scans: ONE dispatch — endpoint ranking,
+        page starts, and every page gather fused into a single device
+        program (`snapshot.scan_range_fn`: one pallas_call under the
+        kernel strategies, the bit-identical XLA program otherwise).
+        The merged ranks ``(r0, r1)`` of [lo, hi) never touch the host;
+        the only host work is a cache-hit on the scan plane and a
+        conservative page-count bound for the static output shape.
 
         Returns ``(keys (G, page_size) f32, vals i32, live_mask)`` in
-        the snapshot's *normalized float32 frame* with int32 values —
-        exact whenever float32 normalization is injective over the
-        base+delta keys, the same caveat as `lookup_batch`; `scan` is
-        the guaranteed-exact float64 surface."""
-        with self._lock:
-            snap = self._mgr.current()
-            view = pin_view(snap, self._frozen, self._active)
-        r0, r1 = (int(r) for r in view.rank(np.array([lo, hi])))
-        if hi < lo:
-            r1 = r0
-        ins, ivals, dpos = device_scan_plan(view, snap.keys.normalize)
-        starts = np.arange(r0, max(r1, r0 + 1), page_size, np.int32)
-        fn = snap.scan_page_fn(self.config.strategy, page_size)
-        keys, vals, live = fn(
-            jnp.asarray(starts), jnp.asarray(ins), jnp.asarray(ivals),
-            jnp.asarray(dpos), np.int32(r1),
+        the snapshot's *normalized float32 frame* with int32 values;
+        pages past the range come back fully masked.  Exact whenever
+        float32 normalization is injective over the base+delta keys
+        (now including the range endpoints), the same caveat as
+        `lookup_batch`; `scan` is the guaranteed-exact float64
+        surface."""
+        snap, (ins, ivals, ins_rank, lp), ins_n = self._scan_plane_cached()
+        # static output-shape bound (host metadata sizing the output,
+        # not a rank fed to the device; see scan.scan_page_bound)
+        pages = scan_page_bound(
+            [snap.keys.raw], ins_n, lo, hi, page_size
         )
-        return keys, vals, live
+        fn = snap.scan_range_fn(self.config.strategy, page_size, pages)
+        bounds = jnp.asarray(
+            snap.keys.normalize(np.array([lo, hi], np.float64))
+        )
+        return fn(bounds, ins, ivals, ins_rank, lp)
 
     def _rank_exact(self, q: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
         snap, frozen, active, dk, dp = self._capture()
@@ -333,6 +393,7 @@ class IndexService:
         q = np.atleast_1d(np.asarray(keys, np.float64))
         v = (np.zeros(q.shape, np.int64) if vals is None
              else np.atleast_1d(np.asarray(vals, np.int64)))
+        self._note_write_rate(q.size)
         applied = self._staged(
             q, lambda c, lb: self._active.stage_insert_many(q[c], lb, v[c])
         )
@@ -345,6 +406,7 @@ class IndexService:
         """Stage deletes; returns how many keys went from live to dead."""
         t0 = time.perf_counter()
         q = np.atleast_1d(np.asarray(keys, np.float64))
+        self._note_write_rate(q.size)
         applied = self._staged(
             q, lambda c, lb: self._active.stage_delete_many(q[c], lb)
         )
@@ -425,9 +487,38 @@ class IndexService:
         return out
 
     # ---- compaction ------------------------------------------------------
+    @property
+    def write_rate_ewma(self) -> float:
+        """EWMA of staged entries per recent write call — the hotness
+        signal the rate-aware compaction trigger scales by."""
+        return self._write_ewma
+
+    def _note_write_rate(self, batch: int) -> None:
+        # per-call exponential average (deterministic — no wall clock):
+        # shards fed large/frequent batches converge to a high EWMA,
+        # cold shards decay toward their trickle size
+        self._write_ewma = 0.7 * self._write_ewma + 0.3 * float(batch)
+
+    def _compact_trigger(self) -> float:
+        """Fill level (entries) that arms compaction.  With
+        ``compact_rate_gain`` > 0 the fraction scales down as the write
+        EWMA rises — hot shards compact earlier (ROADMAP: write-rate-
+        aware scheduling), cold shards batch up to compact_fraction."""
+        cfg = self.config
+        frac = cfg.compact_fraction
+        if cfg.compact_rate_gain > 0.0 and self._write_ewma > 0.0:
+            hot = self._write_ewma / (
+                self._write_ewma + max(1.0, cfg.delta_capacity / 8.0)
+            )
+            frac = max(
+                cfg.compact_rate_floor,
+                frac * (1.0 - cfg.compact_rate_gain * hot),
+            )
+        return frac * cfg.delta_capacity
+
     def _ensure_capacity(self) -> None:
         self._raise_worker_error()
-        trigger = self.config.compact_fraction * self.config.delta_capacity
+        trigger = self._compact_trigger()
         if len(self._active) >= trigger:
             # block only when staging could otherwise overflow
             self.maybe_compact(wait=len(self._active) >= self.config.delta_capacity - 2)
@@ -453,6 +544,7 @@ class IndexService:
             self._frozen = self._active
             self._active = DeltaBuffer(self.config.delta_capacity)
             self._device_cache = None
+            self._scan_plane = None  # release the retired delta's slab
         if self.config.background and not wait:
             self._worker = threading.Thread(
                 target=self._run_compaction, daemon=True
@@ -497,6 +589,7 @@ class IndexService:
                 self._mgr.swap(new)
                 self._frozen = None
                 self._device_cache = None
+                self._scan_plane = None  # drop the retired snapshot's plane
             self.stats["compactions"] += 1
             self.stats["compact_s"] += stats.seconds
             if stats.leaves_refit < 0:
@@ -528,6 +621,7 @@ class IndexService:
                 )
                 self._frozen = None
                 self._device_cache = None
+                self._scan_plane = None
             self.stats["compact_stalls"] += 1
         except BaseException as e:  # surfaced on the caller thread
             self._worker_error = e

@@ -30,13 +30,29 @@ Boundary re-fit: when compactions leave a shard holding more than
 every shard, re-cuts quantile boundaries over the merged live key set,
 and rebuilds the shards — keys change owners, never global ranks.
 
-Device path: `lookup_batch` stacks the per-shard snapshot/delta arrays
-(zero/inf padded; true sizes travel as traced scalars) and runs ONE
-`rmi_sharded_merged_lookup` dispatch with the shard axis as a kernel
-grid dimension — or, off the kernel path, the vmapped XLA fallback
-whose stacked inputs are placed shard-per-device through
-`distributed.sharding.index_shard_mesh` when the host exposes multiple
-devices (CI forces 8 with ``--xla_force_host_platform_device_count``).
+Device path — every hot read is ONE dispatch over an INCREMENTAL
+device-plane cache:
+
+  * `lookup_batch` stacks the per-shard snapshot/delta arrays
+    (zero/inf padded; true sizes travel as traced scalars) and runs
+    the `rmi_sharded_merged_lookup` grid kernel (shard axis as a grid
+    dimension) — or the vmapped XLA fallback placed shard-per-device
+    through `distributed.sharding.index_shard_mesh` — WITH the routed
+    prefix-sum reassembly fused into the same jitted program;
+  * `get` / `contains` pre-screen whole batches through that same
+    stacked dispatch and finish with exact float64 host refinement per
+    routed shard (no per-shard device loop);
+  * `scan_batch` runs the stacked scan twin
+    (`rmi_sharded_scan_page_pallas`): a fused rank pre-pass turns the
+    per-shard spans of [lo, hi) into stream ownership, the grid kernel
+    gathers each shard's rows through its prefix-sum page index, and
+    an owner-masked reduction emits the global page stream;
+  * both plans cache per shard on (snapshot identity, delta version):
+    a write re-PACKS only its own shard's slab row (collapse,
+    normalize, prefix-index, live count) into persistent host mirrors
+    — PR 4 rebuilt every row on every write; the stacked device
+    buffers then refresh in one bulk transfer (device-side per-row
+    `.at[s].set` updates are the real-TPU follow-on).
 """
 
 from __future__ import annotations
@@ -47,15 +63,26 @@ import shutil
 import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.distributed.sharding import index_shard_mesh, place_index_shards
-from repro.index_service.delta import count_less
+from repro.index_service.delta import count_less, live_mask, member
 from repro.index_service.router import LearnedRouter
-from repro.index_service.scan import repack_pages, scan_pages
-from repro.index_service.service import IndexService, ServiceConfig
+from repro.index_service.scan import (
+    _pad_bucket,
+    fit_scan_frame,
+    pack_scan_slab,
+    repack_pages,
+    scan_page_bound,
+    scan_pages,
+)
+from repro.index_service.service import (
+    IndexService,
+    ServiceConfig,
+    scan_plane_key,
+    scan_plane_key_eq,
+)
 from repro.index_service.snapshot import validate_strategy
 from repro.kernels import ops as kernels_ops
 
@@ -112,9 +139,14 @@ def _same_objects(a: tuple, b: tuple) -> bool:
 
 @dataclasses.dataclass
 class _DevicePlan:
-    """Stacked per-shard arrays for the one-dispatch sharded lookup."""
+    """Stacked per-shard arrays for the one-dispatch sharded lookup,
+    plus the host mirrors that make the cache *incremental*: a write to
+    one shard re-packs that shard's delta row in the host buffers —
+    the other rows (and their live-count bookkeeping) are reused
+    byte-for-byte; only the final bulk upload touches the device."""
 
     key: tuple                 # (snapshot, delta-array) object pairs
+    caps: list                 # per-shard (snap, frozen, active, dk, dp)
     q_normalizers: list        # per-shard KeySet.normalize callables
     stage0: tuple              # stacked (S, ...) flat params
     leaf_w: jnp.ndarray
@@ -131,6 +163,46 @@ class _DevicePlan:
     merged_off: jnp.ndarray    # (S,) int32: LIVE keys in lower shards
     hidden: tuple
     max_window: int
+    dkeys_np: np.ndarray       # host mirrors for incremental row updates
+    dprefix_np: np.ndarray
+    live_np: np.ndarray        # (S,) int64 live counts per shard
+    base_off_np: np.ndarray    # (S,) int64
+    merged_off_np: np.ndarray  # (S,) int64
+
+
+@dataclasses.dataclass
+class _ScanPlane:
+    """Stacked per-shard scan slabs (one shared normalized frame) +
+    host mirrors and per-shard row cache for incremental re-packs."""
+
+    key: tuple                 # per-shard (snap, frozen, fver, active, aver)
+    shards_key: tuple          # the shard service objects themselves
+    lo: float                  # shared affine frame (fixed per full build)
+    hi: float
+    n_pad: int
+    d_pad: int
+    rows: list                 # per-shard pack_scan_slab dicts (+ sizes)
+    raws: list                 # per-shard base raw arrays (sizing bounds)
+    ins_total: int
+    base: jnp.ndarray          # (S, Npad) f32 +inf padded, shared frame
+    bvals: jnp.ndarray         # (S, Npad) i32
+    live_prefix: jnp.ndarray   # (S, Npad+1) i32
+    ins: jnp.ndarray           # (S, Dpad) f32
+    ivals: jnp.ndarray         # (S, Dpad) i32
+    ins_rank: jnp.ndarray      # (S, Dpad) i32
+    base_np: np.ndarray        # host mirrors of the six stacks
+    bvals_np: np.ndarray
+    lp_np: np.ndarray
+    ins_np: np.ndarray
+    ivals_np: np.ndarray
+    irank_np: np.ndarray
+
+    def normalize(self, x) -> np.ndarray:
+        """Raw float64 keys -> the plane's shared float32 frame (the
+        frame `scan_batch` rows come back in)."""
+        return (
+            (np.asarray(x, np.float64) - self.lo) / (self.hi - self.lo)
+        ).astype(np.float32)
 
 
 class ShardedIndexService:
@@ -167,6 +239,7 @@ class ShardedIndexService:
         # aggregate stats and the version property stay monotone
         self._retired: Dict[str, int] = {"versions": 0}
         self._plan: Optional[_DevicePlan] = None
+        self._scan_cache: Optional[_ScanPlane] = None
         if _router is not None and _shards is not None:
             self._router, self._shards = _router, _shards
             return
@@ -248,26 +321,43 @@ class ShardedIndexService:
     def _live_counts(self) -> np.ndarray:
         return np.array([s.num_keys for s in self._shards], np.int64)
 
-    def _live_offsets(self) -> np.ndarray:
-        counts = self._live_counts()
-        off = np.zeros(counts.size, np.int64)
-        off[1:] = np.cumsum(counts[:-1])
-        return off
-
     # ---- reads -----------------------------------------------------------
     def _ranks(self, q: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
-        """Exact global merged ranks + live mask: route, per-shard exact
-        rank, prefix-sum reassembly."""
+        """Exact global merged ranks + live mask, pre-screened through
+        ONE stacked device dispatch: every query's float32 base lower
+        bound comes back from the sharded merged-lookup kernel (or its
+        vmapped fallback) in a single program, and the remaining work —
+        float64 refinement against each routed shard's raw keys, delta
+        count, liveness — is pure host NumPy over the same capture the
+        device plan was packed from.  The old path dispatched one
+        device program per non-empty shard."""
         shard_of = self._router.route(q)
-        offsets = self._live_offsets()
+        plan = self._device_plan()
+        qs = np.stack([norm(q) for norm in plan.q_normalizers])
+        gbase, _ = kernels_ops.rmi_sharded_routed_lookup_op(
+            qs, shard_of, plan.stage0, plan.leaf_w, plan.leaf_b,
+            plan.err_lo, plan.err_hi, plan.keys, plan.dkeys,
+            plan.dprefix, plan.shard_n, plan.shard_m, plan.shard_ratio,
+            plan.base_off, plan.merged_off,
+            hidden=plan.hidden, max_window=plan.max_window,
+            use_kernel=self.config.strategy in _KERNEL_STRATEGIES,
+        )
+        gbase = np.asarray(gbase).astype(np.int64)
         rank = np.zeros(q.shape, np.int64)
         live = np.zeros(q.shape, bool)
-        for s, svc in enumerate(self._shards):
+        for s, c in enumerate(plan.caps):
             m = shard_of == s
-            if m.any():
-                r, lv = svc._rank_exact(q[m])
-                rank[m] = r + offsets[s]
-                live[m] = lv
+            if not m.any():
+                continue
+            snap, frozen, active = c[0], c[1], c[2]
+            qm = q[m]
+            lb_local = gbase[m] - int(plan.base_off_np[s])
+            base_rank, in_base = snap.refine_base_rank(qm, lb_local)
+            rank[m] = (
+                base_rank + count_less(frozen, active, qm)
+                + int(plan.merged_off_np[s])
+            )
+            live[m] = live_mask(in_base, frozen, active, qm)
         return rank, live
 
     def get(self, keys) -> Tuple[np.ndarray, np.ndarray]:
@@ -282,17 +372,39 @@ class ShardedIndexService:
         return rank, live
 
     def contains(self, keys) -> np.ndarray:
-        """Existence check, with the same per-op accounting the
-        unsharded service keeps (count/hits/latency here; the Bloom
-        screens happen — and count — inside each shard)."""
+        """Existence check: per-shard Bloom + delta-mention screen on
+        the host (definite misses never touch the index), then the
+        surviving queries resolve through ONE `_ranks` device dispatch
+        — where the old path dispatched per shard.  Accounting matches
+        the unsharded service (count/hits/latency here; Bloom screens
+        credited to the owning shard, so aggregate screening telemetry
+        survives rebalances)."""
         t0 = time.perf_counter()
         q = np.atleast_1d(np.asarray(keys, np.float64))
         shard_of = self._router.route(q)
-        out = np.zeros(q.shape, bool)
-        for s, svc in enumerate(self._shards):
+        plan = self._device_plan()
+        maybe = np.zeros(q.shape, bool)
+        for s, c in enumerate(plan.caps):
             m = shard_of == s
-            if m.any():
-                out[m] = svc.contains(q[m])
+            if not m.any():
+                continue
+            snap, frozen, active = c[0], c[1], c[2]
+            qm = q[m]
+            mentioned = np.zeros(qm.shape, bool)
+            for level in (frozen, active):
+                if level is not None:
+                    mentioned |= member(level.ins_keys, qm)
+                    mentioned |= member(level.del_keys, qm)
+            if snap.bloom is not None:
+                mb = snap.bloom.contains(qm) | mentioned
+                self._shards[s].stats["bloom_screened"] += int((~mb).sum())
+            else:
+                mb = np.ones(qm.shape, bool)
+            maybe[m] = mb
+        out = np.zeros(q.shape, bool)
+        if maybe.any():
+            _, lv = self._ranks(q[maybe])
+            out[maybe] = lv
         self.stats["contains"] += q.size
         self.stats["contains_hits"] += int(out.sum())
         self.stats["contains_s"] += time.perf_counter() - t0
@@ -348,30 +460,183 @@ class ShardedIndexService:
 
     # ---- device fast path ------------------------------------------------
     def lookup_batch(self, keys) -> jnp.ndarray:
-        """One-dispatch sharded merged lookup: route host-side, stack
-        per-shard (snapshot, delta) arrays, run the grid-over-shards
-        kernel (or the device-mapped XLA fallback), reassemble global
-        ranks with the live-count prefix sums.  Same exactness caveat
-        as `IndexService.lookup_batch` (float32 frame, no host
-        refinement)."""
+        """ONE-dispatch sharded merged lookup: route host-side, then a
+        single jitted program runs the grid-over-shards kernel (or the
+        device-mapped XLA fallback) AND the prefix-sum reassembly —
+        the old path paid a second dispatch (plus an HBM round-trip of
+        the (S, B) local-rank matrices) for the reassembly.  Same
+        exactness caveat as `IndexService.lookup_batch` (float32
+        frame, no host refinement)."""
         q = np.atleast_1d(np.asarray(keys, np.float64))
         plan = self._device_plan()
-        shard_of = jnp.asarray(self._router.route(q))
-        qs = jnp.asarray(
-            np.stack([norm(q) for norm in plan.q_normalizers])
-        )
-        use_kernel = self.config.strategy in _KERNEL_STRATEGIES
-        lb, ct = kernels_ops.rmi_sharded_merged_lookup_op(
-            qs, plan.stage0, plan.leaf_w, plan.leaf_b, plan.err_lo,
-            plan.err_hi, plan.keys, plan.dkeys, plan.dprefix,
-            plan.shard_n, plan.shard_m, plan.shard_ratio,
+        shard_of = self._router.route(q)
+        qs = np.stack([norm(q) for norm in plan.q_normalizers])
+        _, merged = kernels_ops.rmi_sharded_routed_lookup_op(
+            qs, shard_of, plan.stage0, plan.leaf_w, plan.leaf_b,
+            plan.err_lo, plan.err_hi, plan.keys, plan.dkeys,
+            plan.dprefix, plan.shard_n, plan.shard_m, plan.shard_ratio,
+            plan.base_off, plan.merged_off,
             hidden=plan.hidden, max_window=plan.max_window,
-            use_kernel=use_kernel,
-        )
-        _, merged = kernels_ops.sharded_reassemble(
-            lb, ct, shard_of, plan.base_off, plan.merged_off
+            use_kernel=self.config.strategy in _KERNEL_STRATEGIES,
         )
         return merged
+
+    def scan_batch(self, lo: float, hi: float, page_size: int = 256):
+        """Device fast path for sharded scans: ONE dispatch ranks
+        [lo, hi) on every shard, prefix-sums the per-shard spans into
+        stream ownership, and gathers the global page stream through
+        `rmi_sharded_scan_page_pallas` (shard axis as a grid dimension,
+        like ``sharded_fused``) or its bit-identical vmapped fallback —
+        replacing the host-stitched per-shard page streams of `scan`
+        on the device plane.  The stacked slabs come from the
+        incremental scan-plane cache: a write re-packs only its own
+        shard's slab row.
+
+        Returns ``(keys (G, page_size) f32, vals i32, live_mask)`` in
+        the plane's SHARED normalized frame (`scan_normalize` maps raw
+        keys into it); pages past the range come back fully masked.
+        Exact under the usual float32-injectivity caveat; the host
+        `scan` is the exact float64 surface."""
+        plane = self._scan_plane()
+        pages = scan_page_bound(
+            plane.raws, plane.ins_total, lo, hi, page_size
+        )
+        bounds = jnp.asarray(
+            plane.normalize(np.array([lo, hi], np.float64))
+        )
+        return kernels_ops.rmi_sharded_scan_page_op(
+            bounds, plane.base, plane.bvals, plane.live_prefix,
+            plane.ins, plane.ivals, plane.ins_rank,
+            page_size=page_size, max_pages=pages,
+            use_kernel=self.config.strategy in _KERNEL_STRATEGIES,
+        )
+
+    def scan_normalize(self, keys) -> np.ndarray:
+        """Raw keys -> the shared float32 frame `scan_batch` rows use
+        (per-shard snapshots each carry their own frame, so the stacked
+        scan plane fixes one global affine map at plane build)."""
+        return self._scan_plane().normalize(keys)
+
+    @staticmethod
+    def _scan_key(svc: IndexService) -> tuple:
+        return scan_plane_key(*svc._state())
+
+    def _scan_plane(self) -> _ScanPlane:
+        """The incremental stacked scan plane: per-shard slabs (base
+        keys re-normalized into one shared frame, prefix-sum page
+        index, staged-insert arrays) cached per (snapshot, delta
+        version) — a write to one shard re-packs ONE slab row; the
+        frame and every other row are reused, and a delta-only change
+        skips re-uploading the (much larger) base/bvals stacks.  A
+        rebalance (new shard services) or a pad-bucket change rebuilds
+        from scratch.
+
+        Publication is atomic: each rebuild assembles a NEW plane
+        object and installs it with one reference write, so a reader
+        racing a (single-writer) rebuild sees either the old
+        fully-consistent plane or the new one — never a half-updated
+        mix of device arrays."""
+        svcs = self._shards
+        keys = [self._scan_key(s) for s in svcs]
+        old = self._scan_cache
+        same_shards = (
+            old is not None
+            and len(old.shards_key) == len(svcs)
+            and all(a is b for a, b in zip(old.shards_key, svcs))
+        )
+        if same_shards and all(
+            scan_plane_key_eq(a, b) for a, b in zip(old.key, keys)
+        ):
+            return old
+
+        changed = [
+            s for s in range(len(svcs))
+            if not (same_shards and scan_plane_key_eq(old.key[s], keys[s]))
+        ]
+        pins = {s: svcs[s]._pin() for s in changed}
+        sizes_n = [
+            pins[s].base_keys.size if s in pins else old.rows[s]["n"]
+            for s in range(len(svcs))
+        ]
+        sizes_d = [
+            pins[s].ins_keys.size if s in pins else old.rows[s]["d"]
+            for s in range(len(svcs))
+        ]
+        n_pad = _pad_bucket(max(sizes_n) + 1)
+        d_pad = _pad_bucket(max(sizes_d) + 1)
+        if same_shards and old.n_pad == n_pad and old.d_pad == d_pad:
+            # incremental: fresh plane object sharing the host mirrors
+            # (the published old plane is never mutated — its device
+            # arrays are copies, see the upload note below); base keys
+            # and payloads only change when a shard's SNAPSHOT moved
+            plane = dataclasses.replace(
+                old, rows=list(old.rows), raws=list(old.raws)
+            )
+            snap_dirty = any(
+                old.key[s][0] is not keys[s][0] for s in changed
+            )
+        else:
+            # full rebuild: pin the shards not already pinned (reuse
+            # the rest), then size pads and frame from the FINAL pin
+            # set — a background compaction between the key probe and
+            # the pin may have grown a shard past the probed sizes
+            changed = list(range(len(svcs)))
+            for s in changed:
+                if s not in pins:
+                    pins[s] = svcs[s]._pin()
+            n_pad = _pad_bucket(
+                max(v.base_keys.size for v in pins.values()) + 1
+            )
+            d_pad = _pad_bucket(
+                max(v.ins_keys.size for v in pins.values()) + 1
+            )
+            lo, hi = fit_scan_frame([pins[s] for s in changed])
+            s_count = len(svcs)
+            plane = _ScanPlane(
+                key=(), shards_key=tuple(svcs),
+                lo=float(lo), hi=float(hi), n_pad=n_pad, d_pad=d_pad,
+                rows=[None] * s_count, raws=[None] * s_count, ins_total=0,
+                base=None, bvals=None, live_prefix=None, ins=None,
+                ivals=None, ins_rank=None,
+                base_np=np.full((s_count, n_pad), np.inf, np.float32),
+                bvals_np=np.zeros((s_count, n_pad), np.int32),
+                lp_np=np.zeros((s_count, n_pad + 1), np.int32),
+                ins_np=np.full((s_count, d_pad), np.inf, np.float32),
+                ivals_np=np.zeros((s_count, d_pad), np.int32),
+                irank_np=np.zeros((s_count, d_pad), np.int32),
+            )
+            snap_dirty = True
+        for s in changed:
+            view = pins[s]
+            row = pack_scan_slab(view, plane.normalize, n_pad, d_pad)
+            # keep only the true sizes — the arrays live in the mirrors
+            plane.rows[s] = {
+                "n": view.base_keys.size, "d": view.ins_keys.size,
+            }
+            plane.raws[s] = view.base_keys
+            plane.base_np[s] = row["base"]
+            plane.bvals_np[s] = row["bvals"]
+            plane.lp_np[s] = row["live_prefix"]
+            plane.ins_np[s] = row["ins"]
+            plane.ivals_np[s] = row["ivals"]
+            plane.irank_np[s] = row["ins_rank"]
+        plane.ins_total = int(sum(r["d"] for r in plane.rows))
+        # jnp.array (copy=True): jnp.asarray can zero-copy ALIAS a f32
+        # NumPy buffer on the CPU backend, and these mirrors mutate in
+        # place on the next incremental build — an aliased upload would
+        # corrupt device arrays still referenced from earlier calls.
+        # Delta-only changes reuse the old base/bvals device arrays
+        # outright (the dominant transfer for large indexes).
+        if snap_dirty:
+            plane.base = jnp.array(plane.base_np)
+            plane.bvals = jnp.array(plane.bvals_np)
+        plane.live_prefix = jnp.array(plane.lp_np)
+        plane.ins = jnp.array(plane.ins_np)
+        plane.ivals = jnp.array(plane.ivals_np)
+        plane.ins_rank = jnp.array(plane.irank_np)
+        plane.key = tuple(keys)
+        self._scan_cache = plane  # atomic publish of the finished plane
+        return plane
 
     def _shard_mesh(self):
         """1-D shard mesh for the vmapped (non-kernel) path, or None."""
@@ -382,69 +647,142 @@ class ShardedIndexService:
     def _static_stack(self, snaps):
         """Snapshot-derived stacks (base keys, leaf SoA, stage-0, base
         offsets) — rebuilt only when a compaction/rebalance publishes a
-        new snapshot, NOT on every write; the per-write delta stacks
-        rebuild separately in `_device_plan`."""
+        new snapshot, NOT on every write, and then only the CHANGED
+        shard's row is re-packed: per-shard rows are cached by snapshot
+        identity and padded to stable quarter-pow2 buckets, so one
+        shard's compaction leaves every other slab byte-identical."""
         static_key = tuple((sn,) for sn in snaps)
         cached = getattr(self, "_static_plan", None)
         if cached is not None and _same_objects(cached[0], static_key):
             return cached
-        stacked = kernels_ops.stack_shard_arrays(
-            [sn.index for sn in snaps],
-            [sn.keys.norm for sn in snaps],
-        )
-        hidden = stacked.pop("hidden")
-        max_window = stacked.pop("max_window")
+        n_pad = _pad_bucket(max(sn.n for sn in snaps) + 1)
+        m_pad = _pad_bucket(max(sn.index.num_leaves for sn in snaps),
+                            min_pad=16)
+        hiddens = {tuple(sn.index.config.stage0_hidden) for sn in snaps}
+        if len(hiddens) != 1:
+            raise ValueError("shards disagree on stage-0 architecture")
+        rows_cache = getattr(self, "_static_rows", {})
+        rows = []
+        new_cache = {}
+        for s, sn in enumerate(snaps):
+            prev = rows_cache.get(s)
+            if (prev is not None and prev[0] is sn
+                    and prev[1]["keys"].shape[0] == n_pad
+                    and prev[1]["leaf_w"].shape[0] == m_pad):
+                row = prev[1]
+            else:
+                row = kernels_ops.pad_shard_row(
+                    sn.index, sn.keys.norm, n_pad, m_pad
+                )
+            rows.append(row)
+            new_cache[s] = (sn, row)
+        self._static_rows = new_cache
+        nl = len(next(iter(hiddens))) + 1
+        stacked = {
+            "stage0": tuple(
+                jnp.asarray(np.stack([r["stage0"][i] for r in rows]))
+                for i in range(2 * nl)
+            ),
+            "leaf_w": jnp.asarray(np.stack([r["leaf_w"] for r in rows])),
+            "leaf_b": jnp.asarray(np.stack([r["leaf_b"] for r in rows])),
+            "err_lo": jnp.asarray(np.stack([r["err_lo"] for r in rows])),
+            "err_hi": jnp.asarray(np.stack([r["err_hi"] for r in rows])),
+            "keys": jnp.asarray(np.stack([r["keys"] for r in rows])),
+            "shard_n": jnp.asarray(np.array([r["n"] for r in rows])),
+            "shard_m": jnp.asarray(np.array([r["m"] for r in rows])),
+            "shard_ratio": jnp.asarray(
+                np.array([r["ratio"] for r in rows], np.float32)
+            ),
+        }
+        hidden = next(iter(hiddens))
+        max_window = max(r["max_window"] for r in rows)
         base_n = np.array([sn.n for sn in snaps], np.int64)
-        base_off = np.zeros(len(snaps), np.int32)
-        base_off[1:] = np.cumsum(base_n[:-1]).astype(np.int32)
-        stacked["base_off"] = jnp.asarray(base_off)
+        base_off_np = np.zeros(len(snaps), np.int64)
+        base_off_np[1:] = np.cumsum(base_n[:-1])
+        stacked["base_off"] = jnp.asarray(base_off_np.astype(np.int32))
         mesh = self._shard_mesh()
         if mesh is not None:
             # device-mapped shards: the vmapped XLA path partitions
             # over a 1-D shard mesh when the host exposes enough devices
             stacked = place_index_shards(stacked, mesh)
         cached = (static_key, stacked, hidden, max_window,
-                  [sn.keys.normalize for sn in snaps])
+                  [sn.keys.normalize for sn in snaps], base_off_np)
         self._static_plan = cached
         return cached
 
     def _device_plan(self) -> _DevicePlan:
+        """The one-dispatch lookup plan, cached incrementally: keyed
+        per shard on (snapshot identity, packed-delta identity) — a
+        shard's `_capture` publishes a new device delta array only when
+        that shard's (snapshot version, delta version) state changed,
+        so a write to one shard re-packs exactly one row of the host
+        delta mirrors (and its live count) before the re-upload; the
+        old path rebuilt and re-counted every shard on every write."""
         caps = [s._capture() for s in self._shards]
         key = tuple((c[0], c[3]) for c in caps)
-        if self._plan is not None and _same_objects(self._plan.key, key):
-            return self._plan
+        plan = self._plan
+        if plan is not None and _same_objects(plan.key, key):
+            return plan
         snaps = [c[0] for c in caps]
-        _, stacked, hidden, max_window, normalizers = self._static_stack(snaps)
+        (_, stacked, hidden, max_window, normalizers,
+         base_off_np) = self._static_stack(snaps)
 
         d_max = max(int(c[3].shape[0]) for c in caps)
-        dkeys = np.full((len(caps), d_max), np.inf, np.float32)
-        dprefix = np.zeros((len(caps), d_max + 1), np.int32)
-        for s, c in enumerate(caps):
+        reuse = (
+            plan is not None
+            and len(plan.key) == len(key)
+            and plan.dkeys_np.shape[1] == d_max
+        )
+        if reuse:
+            dkeys = plan.dkeys_np
+            dprefix = plan.dprefix_np
+            live = plan.live_np
+            changed = [
+                s for s in range(len(caps))
+                if not (plan.key[s][0] is key[s][0]
+                        and plan.key[s][1] is key[s][1])
+            ]
+        else:
+            dkeys = np.full((len(caps), d_max), np.inf, np.float32)
+            dprefix = np.zeros((len(caps), d_max + 1), np.int32)
+            live = np.zeros(len(caps), np.int64)
+            changed = list(range(len(caps)))
+        for s in changed:
+            c = caps[s]
             dk, dp = np.asarray(c[3]), np.asarray(c[4])
+            dkeys[s, :] = np.inf
             dkeys[s, : dk.size] = dk
             dprefix[s, : dp.size] = dp
             dprefix[s, dp.size:] = dp[-1]
-        live = np.array(
-            [sn.n + int(count_less(c[1], c[2], np.array([np.inf]))[0])
-             for sn, c in zip(snaps, caps)], np.int64,
-        )
-        merged_off = np.zeros(len(caps), np.int64)
-        merged_off[1:] = np.cumsum(live[:-1])
+            live[s] = snaps[s].n + int(
+                count_less(c[1], c[2], np.array([np.inf]))[0]
+            )
+        merged_off_np = np.zeros(len(caps), np.int64)
+        merged_off_np[1:] = np.cumsum(live[:-1])
         delta = {
-            "dkeys": jnp.asarray(dkeys),
-            "dprefix": jnp.asarray(dprefix),
-            "merged_off": jnp.asarray(merged_off.astype(np.int32)),
+            # copies, not asarray: the host mirrors mutate in place on
+            # the next incremental build (same aliasing hazard as the
+            # scan plane)
+            "dkeys": jnp.array(dkeys),
+            "dprefix": jnp.array(dprefix),
+            "merged_off": jnp.array(merged_off_np.astype(np.int32)),
         }
         mesh = self._shard_mesh()
         if mesh is not None:
             delta = place_index_shards(delta, mesh)
         plan = _DevicePlan(
             key=key,
+            caps=caps,
             q_normalizers=normalizers,
             **stacked,
             **delta,
             hidden=hidden,
             max_window=max_window,
+            dkeys_np=dkeys,
+            dprefix_np=dprefix,
+            live_np=live,
+            base_off_np=base_off_np,
+            merged_off_np=merged_off_np,
         )
         self._plan = plan
         return plan
@@ -459,7 +797,8 @@ class ShardedIndexService:
             m = shard_of == s
             if m.any():
                 applied += svc.insert(q[m], None if v is None else v[m])
-        self._plan = None
+        # no plan invalidation: the device-plane caches diff per-shard
+        # (snapshot, delta version) keys and re-pack only touched rows
         self._maybe_rebalance()
         return applied
 
@@ -482,7 +821,6 @@ class ShardedIndexService:
             m = shard_of == s
             if m.any():
                 applied += svc.delete(q[m])
-        self._plan = None
         self._maybe_rebalance()
         return applied
 
@@ -522,7 +860,6 @@ class ShardedIndexService:
             self.rebalance(max(1, self.num_shards // 2))
         for s in self._shards:
             s.flush()
-        self._plan = None
 
     def _maybe_rebalance(self) -> bool:
         k = self.num_shards
@@ -566,7 +903,11 @@ class ShardedIndexService:
         k = max(1, min(num_shards or self.num_shards, keys.size // 2))
         self._router = LearnedRouter.from_keys(keys, k)
         self._shards = self._build_shards(keys, vals)
+        # new shard services: every device-plane cache starts over
         self._plan = None
+        self._scan_cache = None
+        self._static_plan = None
+        self._static_rows = {}
         self.stats["rebalances"] += 1
         if self.config.snapshot_dir is not None:
             self._save_router()

@@ -183,6 +183,24 @@ class IndexSnapshot:
         self._shard_plan = plan
         return plan
 
+    def _device_base(self) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Snapshot-resident device buffers (normalized f32 keys, i32
+        payload), uploaded once per snapshot and shared by every
+        compiled closure — the snapshot side of the incremental
+        device-plane cache (closures used to upload their own copies
+        per (strategy, page-size) cache key)."""
+        cached = self._compiled.get("devbase")
+        if cached is None:
+            base_norm = jnp.asarray(self.keys.norm)
+            if self.vals is not None:
+                bvals = jnp.asarray(np.clip(
+                    self.vals, np.iinfo(np.int32).min, np.iinfo(np.int32).max
+                ).astype(np.int32))
+            else:
+                bvals = jnp.zeros((self.n,), jnp.int32)
+            cached = self._compiled["devbase"] = (base_norm, bvals)
+        return cached
+
     def merged_lookup_fn(self, strategy: str = "binary") -> Callable:
         """jit fn (q_norm, delta_keys, delta_prefix) -> (base_lb, rank).
 
@@ -296,19 +314,48 @@ class IndexSnapshot:
         key = f"scan:{'kernel' if use_kernel else 'xla'}:{page_size}"
         fn = self._compiled.get(key)
         if fn is None:
-            base_norm = jnp.asarray(self.keys.norm)
-            if self.vals is not None:
-                bvals = jnp.asarray(np.clip(
-                    self.vals, np.iinfo(np.int32).min, np.iinfo(np.int32).max
-                ).astype(np.int32))
-            else:
-                bvals = jnp.zeros((self.n,), jnp.int32)
+            base_norm, bvals = self._device_base()
 
             def fn(starts, ins_keys, ins_vals, del_pos, end_rank):
                 return kernels_ops.rmi_scan_page_op(
                     starts, base_norm, bvals, ins_keys, ins_vals,
                     del_pos, end_rank,
                     page_size=page_size, use_kernel=use_kernel,
+                )
+
+            self._compiled[key] = fn
+        return fn
+
+    def scan_range_fn(
+        self, strategy: str = "binary", page_size: int = 256,
+        max_pages: int = 1,
+    ) -> Callable:
+        """jit fn (bounds, ins_keys, ins_vals, ins_rank, live_prefix)
+        -> (keys (max_pages, page_size) f32, vals i32, live_mask bool)
+        — the FUSED scan read path: the merged ranks of ``bounds =
+        [lo, hi)``, every page start, and every row gather all happen
+        inside one device program (`kernels.ops.rmi_scan_range_op`:
+        one pallas_call under the kernel strategies, the bit-identical
+        XLA program otherwise).  Nothing ranks on the host;
+        ``max_pages`` is only the static output-shape bound (pages past
+        the range come back masked).  Delta inputs come from
+        `scan.device_scan_slab`, cached by the service per (snapshot,
+        delta version).  Same float32/int32 exactness caveat as
+        `lookup_batch` — host `IndexService.scan` is the exact float64
+        surface."""
+        validate_strategy(strategy)
+        use_kernel = strategy in ("pallas", "pallas_fused", "sharded_fused")
+        key = f"scanr:{'kernel' if use_kernel else 'xla'}:{page_size}:{max_pages}"
+        fn = self._compiled.get(key)
+        if fn is None:
+            base_norm, bvals = self._device_base()
+
+            def fn(bounds, ins_keys, ins_vals, ins_rank, live_prefix):
+                return kernels_ops.rmi_scan_range_op(
+                    bounds, base_norm, bvals, live_prefix, ins_keys,
+                    ins_vals, ins_rank,
+                    page_size=page_size, max_pages=max_pages,
+                    use_kernel=use_kernel,
                 )
 
             self._compiled[key] = fn

@@ -10,6 +10,7 @@ flipped to False by the TPU launcher.
 
 from __future__ import annotations
 
+import contextlib
 import functools
 
 import jax
@@ -21,18 +22,47 @@ from repro.kernels.bloom_probe import bloom_probe_pallas
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.hash_probe import hash_probe_pallas
 from repro.kernels.rmi_lookup import (
+    _merged_rank_from_prefix,
+    _search_steps,
     rmi_lookup_pallas,
     rmi_merged_lookup_pallas,
     rmi_scan_page_pallas,
+    rmi_scan_range_pallas,
     rmi_sharded_merged_lookup_pallas,
+    rmi_sharded_scan_page_pallas,
     stage0_flat,
 )
+
+# ---------------------------------------------------------------------------
+# dispatch accounting
+# ---------------------------------------------------------------------------
+# Every public RMI op below is one host->device program entry: a single
+# jitted XLA executable (which may embed a pallas_call).  Incrementing
+# here — at the non-jitted op boundary, so compiled re-executions still
+# count — gives the dispatch-discipline regression tests an observable:
+# a read path that silently regresses into per-shard or per-page
+# dispatch loops shows up as DISPATCH_COUNT > 1 per logical call.
+DISPATCH_COUNT = 0
+
+
+def _count_dispatch() -> None:
+    global DISPATCH_COUNT
+    DISPATCH_COUNT += 1
+
+
+@contextlib.contextmanager
+def count_dispatches():
+    """Context manager yielding a zero-arg callable that reports how
+    many device-op entries ran since the context opened."""
+    start = DISPATCH_COUNT
+    yield lambda: DISPATCH_COUNT - start
 
 
 def rmi_lookup_op(index, sorted_keys_norm, q_norm, *, block_q=1024,
                   interpret=None):
     """Batched RMI lookup via the fused kernel.  `index` is an RMIndex.
     ``interpret=None`` auto-selects interpret mode off-TPU."""
+    _count_dispatch()
     return rmi_lookup_pallas(
         jnp.asarray(q_norm),
         stage0_flat(index.stage0_params),
@@ -61,6 +91,7 @@ def rmi_merged_lookup_op(index, sorted_keys_norm, q_norm, delta_keys,
     instead (`strategy="xla_fused"`) — same arithmetic, same results,
     no pallas_call.
     """
+    _count_dispatch()
     args = (
         jnp.asarray(q_norm),
         stage0_flat(index.stage0_params),
@@ -147,6 +178,39 @@ def stack_shard_arrays(indexes, key_arrays):
     }
 
 
+def pad_shard_row(index, keys_norm, n_pad: int, m_pad: int) -> dict:
+    """One shard's row of the stacked lookup layout, padded to an
+    explicit ``(n_pad, m_pad)`` bucket — the incremental counterpart of
+    `stack_shard_arrays`: the sharded service re-packs only the rows
+    whose snapshot changed and keeps the rest byte-stable, so the
+    per-shard pad contract must be reproducible row by row.  Same pad
+    values as the full stacker (leaf arrays zero, keys +inf, ratio
+    host-computed float32(m / n))."""
+    k = np.asarray(keys_norm, np.float32)
+    m = index.num_leaves
+
+    def pad_m(a):
+        return np.pad(np.asarray(a, np.float32), (0, m_pad - m))
+
+    keys = np.full(n_pad, np.inf, np.float32)
+    keys[: k.size] = k
+    nl = len(index.config.stage0_hidden) + 1
+    stage0 = tuple(
+        np.asarray(index.stage0_params[f"{kind}{i}"], np.float32)
+        for i in range(nl) for kind in ("w", "b")
+    )
+    return {
+        "stage0": stage0,
+        "leaf_w": pad_m(index.leaf_w), "leaf_b": pad_m(index.leaf_b),
+        "err_lo": pad_m(index.err_lo), "err_hi": pad_m(index.err_hi),
+        "keys": keys,
+        "n": np.int32(index.n), "m": np.int32(m),
+        "ratio": np.float32(index.num_leaves / index.n),
+        "max_window": index.max_window,
+        "hidden": tuple(index.config.stage0_hidden),
+    }
+
+
 def rmi_sharded_merged_lookup_op(
     q_stacked, stage0, leaf_w, leaf_b, err_lo, err_hi, sorted_keys,
     delta_keys, delta_prefix, shard_n, shard_m, shard_ratio, *,
@@ -161,6 +225,7 @@ def rmi_sharded_merged_lookup_op(
     Returns the per-shard local ``(base_lb, delta_contrib)`` matrices;
     feed them to `sharded_reassemble` for global ranks.
     """
+    _count_dispatch()
     args = (
         jnp.asarray(q_stacked),
         tuple(jnp.asarray(p) for p in stage0),
@@ -234,6 +299,7 @@ def rmi_scan_page_op(
     surface; this op is its device data plane.  ``live_mask`` is True
     for rows below ``end_rank`` (partial last page, empty ranges).
     """
+    _count_dispatch()
     args = (
         jnp.asarray(starts, jnp.int32),
         jnp.asarray(base_keys, jnp.float32),
@@ -266,6 +332,190 @@ def _scan_page_reference_jit(
         starts, base_keys, base_vals, ins_keys, ins_vals, del_pos,
         end_rank, page_size=page_size,
     )
+
+
+def rmi_scan_range_op(
+    bounds, base_keys, base_vals, live_prefix, ins_keys, ins_vals,
+    ins_rank, *, page_size=256, max_pages=1, use_kernel=True,
+    interpret=None,
+):
+    """Fused endpoint-ranking + paged merged-scan gather: ONE device
+    dispatch computes the merged ranks of ``bounds = [lo, hi)`` and
+    streams every page of rows in between -> (keys, vals, live_mask).
+
+    The successor to `rmi_scan_page_op` for the service scan path: no
+    host rank feeds the program — ranks, page starts, and rows all
+    resolve on device through the prefix-sum page index
+    (``live_prefix``, ``ins_rank``, precomputed per (snapshot, delta)
+    version by `index_service.scan.device_scan_slab`).  ``max_pages``
+    is a conservative *shape* bound (base window + staged inserts);
+    pages past the true range come back fully masked.  Kernel and XLA
+    fallback share the same body — bit-identical for every input.
+    """
+    _count_dispatch()
+    args = (
+        jnp.asarray(bounds, jnp.float32),
+        jnp.asarray(base_keys, jnp.float32),
+        jnp.asarray(base_vals, jnp.int32),
+        jnp.asarray(live_prefix, jnp.int32),
+        jnp.asarray(ins_keys, jnp.float32),
+        jnp.asarray(ins_vals, jnp.int32),
+        jnp.asarray(ins_rank, jnp.int32),
+    )
+    if not use_kernel:
+        keys, vals, live = _scan_range_reference_jit(
+            *args, page_size=page_size, max_pages=max_pages
+        )
+    else:
+        keys, vals, live = rmi_scan_range_pallas(
+            *args, page_size=page_size, max_pages=max_pages,
+            interpret=interpret,
+        )
+    return keys, vals, live.astype(bool)
+
+
+@functools.partial(jax.jit, static_argnames=("page_size", "max_pages"))
+def _scan_range_reference_jit(
+    bounds, base_keys, base_vals, live_prefix, ins_keys, ins_vals,
+    ins_rank, *, page_size, max_pages,
+):
+    return ref.rmi_scan_range_reference(
+        bounds, base_keys, base_vals, live_prefix, ins_keys, ins_vals,
+        ins_rank, page_size=page_size, max_pages=max_pages,
+    )
+
+
+def rmi_sharded_scan_page_op(
+    bounds, base_keys, base_vals, live_prefix, ins_keys, ins_vals,
+    ins_rank, *, page_size=256, max_pages=1, use_kernel=True,
+    interpret=None,
+):
+    """Sharded fused scan: ONE device dispatch ranks ``bounds`` on
+    every shard, prefix-sums the per-shard spans into stream ownership,
+    gathers each shard's rows (grid kernel with the shard axis as a
+    grid dimension, or the vmapped XLA fallback sharing the same
+    body), and reduces the (S, G, P) owner-masked matrices into the
+    global (G, P) page stream — the scan twin of the ``sharded_fused``
+    lookup.  All inputs are stacked per-shard slabs in ONE shared
+    normalized frame (see `index_service.scan.pack_scan_slab`); rows
+    come back in that frame.  Returns ``(keys (G,P) f32, vals i32,
+    live_mask bool)``; pages past the range are fully masked.
+    """
+    _count_dispatch()
+    return _sharded_scan_jit(
+        jnp.asarray(bounds, jnp.float32),
+        jnp.asarray(base_keys, jnp.float32),
+        jnp.asarray(base_vals, jnp.int32),
+        jnp.asarray(live_prefix, jnp.int32),
+        jnp.asarray(ins_keys, jnp.float32),
+        jnp.asarray(ins_vals, jnp.int32),
+        jnp.asarray(ins_rank, jnp.int32),
+        page_size=page_size, max_pages=max_pages,
+        use_kernel=use_kernel, interpret=interpret,
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("page_size", "max_pages", "use_kernel", "interpret"),
+)
+def _sharded_scan_jit(
+    bounds, base_keys, base_vals, live_prefix, ins_keys, ins_vals,
+    ins_rank, *, page_size, max_pages, use_kernel, interpret,
+):
+    steps = _search_steps(base_keys.shape[1])
+    isteps = _search_steps(ins_keys.shape[1])
+
+    # rank pre-pass: each shard's local ranks of [lo, hi) — all keys in
+    # lower shards sort below both bounds, so the per-shard spans
+    # concatenate into the global stream and their prefix sums are the
+    # ownership offsets (same program, no host round-trip)
+    def rank_one(base, lp, ins):
+        return _merged_rank_from_prefix(
+            bounds, base, lp, ins, steps=steps, isteps=isteps
+        )
+
+    lr = jax.vmap(rank_one)(base_keys, live_prefix, ins_keys)  # (S, 2)
+    ls0 = lr[:, 0]
+    ls1 = jnp.maximum(lr[:, 1], ls0)  # inverted ranges clamp empty
+    span = ls1 - ls0
+    pre = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(span)])
+    own_lo, own_hi = pre[:-1], pre[1:]
+
+    if use_kernel:
+        keys, vals, live = rmi_sharded_scan_page_pallas(
+            base_keys, base_vals, live_prefix, ins_keys, ins_vals,
+            ins_rank, ls0, own_lo, own_hi,
+            page_size=page_size, max_pages=max_pages, interpret=interpret,
+        )
+    else:
+        keys, vals, live = ref.rmi_sharded_scan_page_reference(
+            base_keys, base_vals, live_prefix, ins_keys, ins_vals,
+            ins_rank, ls0, own_lo, own_hi,
+            page_size=page_size, max_pages=max_pages,
+        )
+    # exactly one shard owns each stream slot: min/sum/max reassemble
+    return (
+        jnp.min(keys, axis=0), jnp.sum(vals, axis=0),
+        jnp.max(live, axis=0).astype(bool),
+    )
+
+
+def rmi_sharded_routed_lookup_op(
+    q_stacked, shard_of, stage0, leaf_w, leaf_b, err_lo, err_hi,
+    sorted_keys, delta_keys, delta_prefix, shard_n, shard_m, shard_ratio,
+    base_off, merged_off, *, hidden=(), max_window, block_q=1024,
+    interpret=None, use_kernel=True,
+):
+    """Sharded merged lookup + routed reassembly in ONE device
+    dispatch: the grid kernel (or vmapped fallback) and
+    `sharded_reassemble` lower into a single jitted program, where the
+    previous two-call path paid a second dispatch (and an HBM
+    round-trip of the full (S, B) local-rank matrices) just to gather
+    the routed rows.  Returns global ``(base_rank, merged_rank)``."""
+    _count_dispatch()
+    return _sharded_routed_jit(
+        jnp.asarray(q_stacked),
+        jnp.asarray(shard_of, jnp.int32),
+        tuple(jnp.asarray(p) for p in stage0),
+        jnp.asarray(leaf_w), jnp.asarray(leaf_b),
+        jnp.asarray(err_lo), jnp.asarray(err_hi),
+        jnp.asarray(sorted_keys),
+        jnp.asarray(delta_keys), jnp.asarray(delta_prefix),
+        jnp.asarray(shard_n), jnp.asarray(shard_m),
+        jnp.asarray(shard_ratio),
+        jnp.asarray(base_off), jnp.asarray(merged_off),
+        hidden=tuple(hidden), max_window=max_window, block_q=block_q,
+        interpret=interpret, use_kernel=use_kernel,
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("hidden", "max_window", "block_q", "interpret",
+                     "use_kernel"),
+)
+def _sharded_routed_jit(
+    q, shard_of, stage0, leaf_w, leaf_b, err_lo, err_hi, sorted_keys,
+    delta_keys, delta_prefix, shard_n, shard_m, shard_ratio, base_off,
+    merged_off, *, hidden, max_window, block_q, interpret, use_kernel,
+):
+    if use_kernel:
+        lb, ct = rmi_sharded_merged_lookup_pallas(
+            q, stage0, leaf_w, leaf_b, err_lo, err_hi, sorted_keys,
+            delta_keys, delta_prefix, shard_n, shard_m, shard_ratio,
+            hidden=hidden, max_window=max_window, block_q=block_q,
+            interpret=interpret,
+        )
+    elif q.shape[1] == 0:
+        lb = ct = jnp.zeros(q.shape, jnp.int32)
+    else:
+        lb, ct = ref.rmi_sharded_merged_lookup_reference(
+            q, stage0, leaf_w, leaf_b, err_lo, err_hi, sorted_keys,
+            delta_keys, delta_prefix, shard_n, shard_m, shard_ratio,
+            max_window=max_window,
+        )
+    return sharded_reassemble(lb, ct, shard_of, base_off, merged_off)
 
 
 def bloom_probe_op(bf, queries_u32, *, interpret=True):

@@ -386,6 +386,285 @@ def rmi_scan_page_pallas(
     return keys, vals, live
 
 
+def _merged_rank_from_prefix(
+    q: jnp.ndarray,              # f32 queries (any shape), normalized frame
+    base_keys: jnp.ndarray,      # (N,) sorted f32, +inf past the true size
+    live_prefix: jnp.ndarray,    # (N+1,) i32 live base rows below position p
+    ins_keys: jnp.ndarray,       # (D,) sorted eff. insert keys, +inf pad
+    *,
+    steps: int,
+    isteps: int,
+) -> jnp.ndarray:
+    """Merged lower-bound rank straight from the prefix-sum page index:
+
+        rank(q) = live_prefix[lower_bound(base, q)] + lower_bound(ins, q)
+
+    — the device-side twin of `PinnedView.rank`, so scan endpoints never
+    round-trip through host NumPy.  ``live_prefix[p] = p - #tombstoned
+    positions < p`` is precomputed host-side per (snapshot, delta)
+    version; the two searches are fixed-trip and pad-safe (+inf pads
+    sort past every finite query, `jnp.take` clamps)."""
+    bl = _array_lower_bound(base_keys, q, base_keys.shape[0], steps)
+    ins = _array_lower_bound(ins_keys, q, ins_keys.shape[0], isteps)
+    return jnp.take(live_prefix, bl) + ins
+
+
+def _scan_rows_from_index(
+    t: jnp.ndarray,              # int32 target merged ranks (any shape)
+    valid: jnp.ndarray,          # bool: lanes that hold a live row
+    base_keys: jnp.ndarray,      # (N,) sorted f32, +inf past the true size
+    base_vals: jnp.ndarray,      # (N,) int32 payload aligned with base
+    live_prefix: jnp.ndarray,    # (N+1,) i32, pinned past the true size
+    ins_keys: jnp.ndarray,       # (D,) sorted eff. insert keys, +inf pad
+    ins_vals: jnp.ndarray,       # (D,) int32 staged values (0 on pads)
+    ins_rank: jnp.ndarray,       # (D,) i32 merged rank of insert j, big pad
+    *,
+    psteps: int,
+    msteps: int,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One merged row per target rank, resolved entirely through the
+    precomputed prefix-sum page index — two single-gather fixed-trip
+    searches per lane instead of `_scan_page_body`'s nested
+    search-inside-search loops:
+
+      1. partition:  j = lower_bound(ins_rank, t) — ``ins_rank[j] =
+         j + live_base_before(ins[j])`` is the merged rank of staged
+         insert j, strictly increasing, HOST-precomputed;
+      2. select:     the (t-j)-th live base row via one lower bound
+         over the monotone ``live_prefix`` array;
+      3. emit        min(base row, insert row) with its source's value;
+         lanes with ``valid`` False are masked dead (+inf key, 0 val).
+
+    Decomposition identical to `_scan_page_body` (same j, same base
+    position, same min rule), so rows match the NumPy merge oracle.
+    """
+    inf = jnp.float32(jnp.inf)
+    n = base_keys.shape[0]
+    ni = ins_keys.shape[0]
+
+    j = _array_lower_bound(ins_rank, t, ni, msteps)
+    a_i = t - j
+    # smallest idx with live_prefix[idx] >= a_i + 1; row position idx-1
+    p = _array_lower_bound(live_prefix, a_i + 1, n + 1, psteps) - 1
+
+    a_key = jnp.where(
+        (p < 0) | (p >= n), inf, jnp.take(base_keys, jnp.clip(p, 0, n - 1))
+    )
+    a_val = jnp.take(base_vals, jnp.clip(p, 0, n - 1))
+    c_key = jnp.where(j >= ni, inf, jnp.take(ins_keys, jnp.clip(j, 0, ni - 1)))
+    c_val = jnp.take(ins_vals, jnp.clip(j, 0, ni - 1))
+
+    from_ins = c_key < a_key
+    live = valid.astype(jnp.int32)
+    key = jnp.where(from_ins, c_key, a_key)
+    val = jnp.where(from_ins, c_val, a_val)
+    key = jnp.where(live == 1, key, inf)
+    val = jnp.where(live == 1, val, 0)
+    return key, val, live
+
+
+def _scan_range_kernel(
+    # refs: bounds (2,), base_keys, base_vals, live_prefix, ins_keys,
+    # ins_vals, ins_rank, out_keys (1,P), out_vals, out_live
+    bounds_ref,
+    base_keys_ref,
+    base_vals_ref,
+    live_prefix_ref,
+    ins_keys_ref,
+    ins_vals_ref,
+    ins_rank_ref,
+    keys_out,
+    vals_out,
+    live_out,
+    *,
+    page_size: int,
+    steps: int,
+    isteps: int,
+    psteps: int,
+    msteps: int,
+):
+    b = bounds_ref[...]
+    r = _merged_rank_from_prefix(
+        b, base_keys_ref[...], live_prefix_ref[...], ins_keys_ref[...],
+        steps=steps, isteps=isteps,
+    )
+    r0 = r[0]
+    r1 = jnp.maximum(r[1], r0)  # inverted ranges clamp empty
+    g = pl.program_id(0)
+    t = r0 + g * page_size + jax.lax.broadcasted_iota(
+        jnp.int32, (1, page_size), 1
+    )
+    key, val, live = _scan_rows_from_index(
+        t, t < r1, base_keys_ref[...], base_vals_ref[...],
+        live_prefix_ref[...], ins_keys_ref[...], ins_vals_ref[...],
+        ins_rank_ref[...], psteps=psteps, msteps=msteps,
+    )
+    keys_out[...] = key
+    vals_out[...] = val
+    live_out[...] = live
+
+
+@functools.partial(
+    jax.jit, static_argnames=("page_size", "max_pages", "interpret")
+)
+def rmi_scan_range_pallas(
+    bounds: jax.Array,             # (2,) f32 normalized [lo, hi)
+    base_keys: jax.Array,          # (N,) sorted normalized f32
+    base_vals: jax.Array,          # (N,) int32
+    live_prefix: jax.Array,        # (N+1,) i32 prefix-sum page index
+    ins_keys: jax.Array,           # (D,) +inf-padded eff. insert keys
+    ins_vals: jax.Array,           # (D,) int32
+    ins_rank: jax.Array,           # (D,) i32 merged rank of each insert
+    *,
+    page_size: int,
+    max_pages: int,
+    interpret: Optional[bool] = None,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused scan endpoints + page gather: ONE pallas_call computes the
+    merged ranks ``(r0, r1)`` of [lo, hi) *and* streams every page of
+    merged rows at ranks ``r0 + [0, r1 - r0)`` — no host rank
+    round-trip between ranking and gathering.  Grid = pages
+    (``max_pages`` is the caller's conservative static bound; pages
+    past ``r1`` come back fully masked).  Rank-to-row resolution runs
+    through the precomputed prefix-sum page index (`live_prefix`,
+    ``ins_rank``), so each lane costs two single-gather fixed-trip
+    searches — the nested tombstone searches of `rmi_scan_page_pallas`
+    are hoisted to host precompute, amortized across every scan of a
+    (snapshot, delta) version."""
+    interpret = _resolve_interpret(interpret)
+    g = max_pages
+    steps = _search_steps(base_keys.shape[0])
+    isteps = _search_steps(ins_keys.shape[0])
+    psteps = _search_steps(base_keys.shape[0] + 1)
+    msteps = _search_steps(ins_rank.shape[0])
+
+    in_specs = [_full_spec(a) for a in
+                (bounds, base_keys, base_vals, live_prefix, ins_keys,
+                 ins_vals, ins_rank)]
+    tile_spec = lambda: pl.BlockSpec((1, page_size), lambda i: (i, 0))
+    keys, vals, live = pl.pallas_call(
+        functools.partial(
+            _scan_range_kernel, page_size=page_size, steps=steps,
+            isteps=isteps, psteps=psteps, msteps=msteps,
+        ),
+        grid=(g,),
+        in_specs=in_specs,
+        out_specs=(tile_spec(), tile_spec(), tile_spec()),
+        out_shape=(
+            jax.ShapeDtypeStruct((g, page_size), jnp.float32),
+            jax.ShapeDtypeStruct((g, page_size), jnp.int32),
+            jax.ShapeDtypeStruct((g, page_size), jnp.int32),
+        ),
+        interpret=interpret,
+    )(bounds, base_keys, base_vals, live_prefix, ins_keys, ins_vals,
+      ins_rank)
+    return keys, vals, live
+
+
+def _sharded_scan_kernel(
+    # refs: base (1,N), bvals (1,N), live_prefix (1,N+1), ins (1,D),
+    # ivals (1,D), ins_rank (1,D), ls0 (1,), own_lo (1,), own_hi (1,),
+    # out_keys (1,1,P), out_vals, out_live
+    base_ref,
+    bvals_ref,
+    lp_ref,
+    ins_ref,
+    ivals_ref,
+    irank_ref,
+    ls0_ref,
+    own_lo_ref,
+    own_hi_ref,
+    keys_out,
+    vals_out,
+    live_out,
+    *,
+    page_size: int,
+    psteps: int,
+    msteps: int,
+):
+    g = pl.program_id(1)
+    t_rel = g * page_size + jax.lax.broadcasted_iota(
+        jnp.int32, (1, page_size), 1
+    )
+    own_lo, own_hi, ls0 = own_lo_ref[0], own_hi_ref[0], ls0_ref[0]
+    owner = (t_rel >= own_lo) & (t_rel < own_hi)
+    t_local = ls0 + t_rel - own_lo
+    key, val, live = _scan_rows_from_index(
+        t_local, owner, base_ref[0], bvals_ref[0], lp_ref[0],
+        ins_ref[0], ivals_ref[0], irank_ref[0],
+        psteps=psteps, msteps=msteps,
+    )
+    keys_out[0] = key
+    vals_out[0] = val
+    live_out[0] = live
+
+
+@functools.partial(
+    jax.jit, static_argnames=("page_size", "max_pages", "interpret")
+)
+def rmi_sharded_scan_page_pallas(
+    base_keys: jax.Array,          # (S, N) sorted f32, +inf padded
+    base_vals: jax.Array,          # (S, N) int32, 0 padded
+    live_prefix: jax.Array,        # (S, N+1) i32, pinned past true n
+    ins_keys: jax.Array,           # (S, D) +inf-padded eff. inserts
+    ins_vals: jax.Array,           # (S, D) int32
+    ins_rank: jax.Array,           # (S, D) i32, big pad
+    ls0: jax.Array,                # (S,) i32 local rank of lo per shard
+    own_lo: jax.Array,             # (S,) i32 shard's first output rank
+    own_hi: jax.Array,             # (S,) i32 one past its last
+    *,
+    page_size: int,
+    max_pages: int,
+    interpret: Optional[bool] = None,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Sharded stacked scan gather: grid = (shard, page), ONE
+    pallas_call — the scan twin of `rmi_sharded_merged_lookup_pallas`.
+
+    Shard ranges tile the key space, so the global page stream of
+    [lo, hi) is the concatenation of per-shard sub-streams; ``own_lo``
+    / ``own_hi`` (prefix sums of per-shard in-range spans, computed in
+    the same jitted program by `ops.rmi_sharded_scan_page_op`'s rank
+    pre-pass) say which slice of the output stream each shard owns.
+    Every (shard, page) grid step resolves the page's target ranks
+    against its own slab through the per-shard prefix-sum page index;
+    non-owned lanes emit (+inf, 0, dead), so reducing min/sum/max over
+    the shard axis reassembles the global pages.  Returns the raw
+    (S, G, P) per-shard matrices; the op does the reduction."""
+    interpret = _resolve_interpret(interpret)
+    s = base_keys.shape[0]
+    g = max_pages
+    psteps = _search_steps(base_keys.shape[1] + 1)
+    msteps = _search_steps(ins_rank.shape[1])
+
+    def row_spec(a: jax.Array) -> pl.BlockSpec:
+        return pl.BlockSpec(
+            (1,) + a.shape[1:], lambda si, gi: (si,) + (0,) * (a.ndim - 1)
+        )
+
+    in_specs = [row_spec(a) for a in
+                (base_keys, base_vals, live_prefix, ins_keys, ins_vals,
+                 ins_rank, ls0, own_lo, own_hi)]
+    tile_spec = lambda: pl.BlockSpec((1, 1, page_size),
+                                     lambda si, gi: (si, gi, 0))
+    keys, vals, live = pl.pallas_call(
+        functools.partial(
+            _sharded_scan_kernel, page_size=page_size, psteps=psteps,
+            msteps=msteps,
+        ),
+        grid=(s, g),
+        in_specs=in_specs,
+        out_specs=(tile_spec(), tile_spec(), tile_spec()),
+        out_shape=(
+            jax.ShapeDtypeStruct((s, g, page_size), jnp.float32),
+            jax.ShapeDtypeStruct((s, g, page_size), jnp.int32),
+            jax.ShapeDtypeStruct((s, g, page_size), jnp.int32),
+        ),
+        interpret=interpret,
+    )(base_keys, base_vals, live_prefix, ins_keys, ins_vals, ins_rank,
+      ls0, own_lo, own_hi)
+    return keys, vals, live
+
+
 def _sharded_shard_body(
     q: jnp.ndarray,              # (B,) this shard's normalized queries
     params,                      # flat (w0, b0, ...) values for this shard

@@ -41,8 +41,11 @@ from repro.index_service.scan import (
     PinnedView,
     pin_view,
     repack_pages,
+    scan_page_bound,
     scan_pages,
+    stack_scan_slabs,
 )
+from repro.kernels import ops as kernels_ops
 from repro.index_service.snapshot import (
     IndexSnapshot,
     build_snapshot,
@@ -88,6 +91,7 @@ class PagedKVAllocator:
         # boundary model + exact fallback the index service uses)
         self._router = LearnedRouter(np.empty(0, np.float64))
         self._binary_cache = None
+        self._scan_plane_cache = None  # keyed (snap, delta, delta.version)
 
     # ---- control plane -------------------------------------------------
     def alloc(self, request_id: int, num_tokens: int) -> List[int]:
@@ -280,6 +284,78 @@ class PagedKVAllocator:
         return repack_pages(
             (scan_pages(v, lo, hi, page_size) for v in views), page_size
         )
+
+    def _scan_plane(self):
+        """Stacked per-shard scan slabs for the one-dispatch device
+        scan, cached per (snapshot identity, delta identity + mutation
+        version) — alloc/free churn bumps a delta version and the next
+        `scan_batch` re-packs; unchanged table states reuse the upload
+        outright (no explicit invalidation hooks to keep in sync)."""
+        key = tuple(
+            (sh.snap, sh.delta, sh.delta.version) for sh in self._shards
+        )
+        plane = self._scan_plane_cache
+        if (
+            plane is not None and len(plane["key"]) == len(key)
+            and all(a[0] is b[0] and a[1] is b[1] and a[2] == b[2]
+                    for a, b in zip(plane["key"], key))
+        ):
+            return plane
+        views = [pin_view(sh.snap, None, sh.delta) for sh in self._shards]
+        slabs = stack_scan_slabs(views)
+        plane = {
+            "key": key,
+            "normalize": slabs["normalize"],
+            "raws": slabs["raws"],
+            "ins_total": slabs["ins_total"],
+            # fresh arrays per build: plain asarray upload is safe here
+            # (no in-place mirror mutation like the sharded plane)
+            "base": jnp.asarray(slabs["base"]),
+            "bvals": jnp.asarray(slabs["bvals"]),
+            "live_prefix": jnp.asarray(slabs["live_prefix"]),
+            "ins": jnp.asarray(slabs["ins"]),
+            "ivals": jnp.asarray(slabs["ivals"]),
+            "ins_rank": jnp.asarray(slabs["ins_rank"]),
+        }
+        self._scan_plane_cache = plane
+        return plane
+
+    def scan_batch(self, lo: float, hi: float, page_size: int = 256):
+        """Device fast path over the page table: ONE dispatch ranks
+        [lo, hi) on every shard and gathers the global page stream
+        (`kernels.ops.rmi_sharded_scan_page_op`) — the device twin of
+        `scan` for serializers that want `(keys, physical_page, live)`
+        pages as device arrays without the host iterator.  Keys come
+        back in the plane's shared float32 frame (`scan_normalize`);
+        `scan` remains the exact float64 surface.  Requires an index
+        (call `rebuild_index` first); bootstrap (dict) mode has no
+        device plane."""
+        if not self._shards:
+            self.rebuild_index()
+        if not self._shards:
+            raise RuntimeError(
+                "page table still in bootstrap mode (< 2 entries); "
+                "use scan() instead"
+            )
+        plane = self._scan_plane()
+        pages = scan_page_bound(
+            plane["raws"], plane["ins_total"], lo, hi, page_size
+        )
+        bounds = jnp.asarray(
+            plane["normalize"](np.array([lo, hi], np.float64))
+        )
+        use_kernel = self.strategy in ("pallas", "pallas_fused",
+                                       "sharded_fused")
+        return kernels_ops.rmi_sharded_scan_page_op(
+            bounds, plane["base"], plane["bvals"], plane["live_prefix"],
+            plane["ins"], plane["ivals"], plane["ins_rank"],
+            page_size=page_size, max_pages=pages, use_kernel=use_kernel,
+        )
+
+    def scan_normalize(self, keys) -> np.ndarray:
+        """Raw page-table keys -> the float32 frame `scan_batch` rows
+        use."""
+        return self._scan_plane()["normalize"](keys)
 
     def request_pages(self, request_id: int, page_size: int = 256):
         """The physical pages of one request in logical order, streamed

@@ -1,0 +1,95 @@
+"""Dispatch-discipline regression tests.
+
+The perf contract of the device read path is structural, not just a
+benchmark number: every hot read must be ONE device dispatch.  The
+counting wrapper in `kernels.ops` (`count_dispatches`) increments at
+each non-jitted op boundary — one increment per jitted program entry —
+so a read path that silently regresses into per-shard or per-page
+dispatch loops fails here long before a latency dashboard notices.
+
+Pinned: `IndexService.scan_batch`, `ShardedIndexService.scan_batch`,
+`ShardedIndexService.lookup_batch` / `get` / `contains` — exactly one
+dispatch per call, kernel strategies and XLA fallbacks alike, cache
+cold or warm.
+"""
+
+import numpy as np
+import pytest
+
+from repro.index_service import (
+    IndexService,
+    ServiceConfig,
+    ShardedIndexService,
+)
+from repro.kernels import ops
+
+
+def _lattice(n=4_000):
+    return np.arange(2, n + 2, dtype=np.float64) * 1024.0
+
+
+def _dispatches(fn) -> int:
+    fn()  # warmup: compile + fill device-plane caches
+    with ops.count_dispatches() as n:
+        fn()
+        return n()
+
+
+@pytest.mark.parametrize("strategy", ["binary", "pallas_fused"])
+def test_scan_batch_single_dispatch(strategy):
+    base = _lattice()
+    svc = IndexService(
+        base, ServiceConfig(delta_capacity=512, strategy=strategy),
+        vals=np.arange(base.size, dtype=np.int64),
+    )
+    svc.insert(np.arange(3, 300, 7, dtype=np.float64) * 1024.0 + 512.0)
+    svc.delete(base[::11])
+    lo, hi = float(base[10]), float(base[-10])
+    assert _dispatches(lambda: svc.scan_batch(lo, hi, 128)) == 1
+    # a write invalidates the scan plane; the rebuild still costs ONE
+    # dispatch (re-pack is host work, not a device program)
+    svc.insert(np.array([5.0 * 1024.0 + 512.0]))
+    with ops.count_dispatches() as n:
+        svc.scan_batch(lo, hi, 128)
+        assert n() == 1
+
+
+@pytest.mark.parametrize("strategy", ["binary", "pallas_fused"])
+def test_sharded_read_paths_single_dispatch(strategy):
+    base = _lattice(6_000)
+    svc = ShardedIndexService(base, ServiceConfig(
+        num_shards=3, delta_capacity=512, strategy=strategy,
+        bloom_fpr=0.02,
+    ))
+    svc.insert(np.arange(3, 900, 13, dtype=np.float64) * 1024.0 + 512.0)
+    sample = np.concatenate([
+        base[::17], np.arange(7, 400, 31, dtype=np.float64) * 1024.0 + 256.0,
+    ])
+    lo, hi = float(base[20]), float(base[-20])
+    assert _dispatches(lambda: svc.lookup_batch(sample)) == 1
+    assert _dispatches(lambda: svc.scan_batch(lo, hi, 128)) == 1
+    assert _dispatches(lambda: svc.get(sample)) == 1
+    assert _dispatches(lambda: svc.contains(sample)) == 1
+
+
+def test_sharded_plan_reuse_across_reads():
+    """Interleaved read kinds share one device plan: no per-call
+    re-pack forcing extra dispatches, and a single-shard write only
+    re-packs that shard (the plan key diff) — still one dispatch."""
+    base = _lattice(6_000)
+    svc = ShardedIndexService(base, ServiceConfig(
+        num_shards=3, delta_capacity=512,
+    ))
+    sample = base[::13]
+    svc.lookup_batch(sample)  # warm
+    with ops.count_dispatches() as n:
+        svc.get(sample)
+        svc.contains(sample)
+        svc.lookup_batch(sample)
+        assert n() == 3  # one each, nothing hidden
+    # write to exactly one shard, then read: the incremental plan
+    # rebuild is host-side; reads stay one dispatch each
+    svc.insert(np.array([3.0 * 1024.0 + 128.0]))
+    with ops.count_dispatches() as n:
+        svc.get(sample)
+        assert n() == 1

@@ -273,6 +273,117 @@ def test_scan_batch_device_matches_host_pages():
         np.testing.assert_array_equal(got_v, host_v.astype(np.int32))
 
 
+def _sharded_lattice(k, n=9_000, strategy="binary"):
+    """Float32-injective lattice sharded service + live dict oracle."""
+    base = np.arange(2, n + 2, dtype=np.float64) * 1024.0
+    vals = np.arange(n, dtype=np.int64) * 5
+    svc = ShardedIndexService(
+        base, ServiceConfig(num_shards=k, delta_capacity=1024,
+                            strategy=strategy),
+        vals=vals,
+    )
+    return svc, dict(zip(base.tolist(), vals.tolist()))
+
+
+def _assert_scan_batch_matches_host(svc, lo, hi, page_size):
+    keys, vals, live = svc.scan_batch(lo, hi, page_size)
+    m = np.asarray(live).ravel()
+    # the stream is dense: live rows form a prefix of the page matrix
+    assert (np.cumsum(~m) * m).sum() == 0
+    got_k = np.asarray(keys).ravel()[m]
+    got_v = np.asarray(vals).ravel()[m]
+    host_k, host_v = _concat(svc.scan(lo, hi, page_size))
+    np.testing.assert_array_equal(got_k, svc.scan_normalize(host_k))
+    np.testing.assert_array_equal(got_v, host_v.astype(np.int32))
+
+
+@pytest.mark.parametrize("k", KS)
+def test_sharded_scan_batch_matches_host_pages(k):
+    """One-dispatch sharded device scan vs the host `scan()` page
+    stream, bit-for-bit in the plane's frame, through staged inserts,
+    tombstones, and per-shard compactions at K in {1, 3, 8}."""
+    rng = np.random.default_rng(k + 60)
+    svc, live = _sharded_lattice(k)
+    base = np.array(sorted(live))
+    for round_ in range(3):
+        ins = np.unique(rng.integers(2, 2 + base.size, 400)) * 1024.0 + 512.0
+        ins = ins[~np.isin(ins, np.array(sorted(live)))]
+        svc.insert(ins, np.arange(ins.size, dtype=np.int64) + 10_000)
+        live.update(zip(ins.tolist(), (np.arange(ins.size) + 10_000).tolist()))
+        arr = np.array(sorted(live))
+        dels = rng.choice(arr, 200, replace=False)
+        svc.delete(dels)
+        for x in dels:
+            del live[float(x)]
+        arr = np.array(sorted(live))
+        lo = float(arr[int(rng.integers(0, arr.size // 2))])
+        hi = float(arr[int(rng.integers(arr.size // 2, arr.size))])
+        for page_size in (97, 256):
+            _assert_scan_batch_matches_host(svc, lo, hi, page_size)
+    # empty, inverted, and out-of-domain ranges: fully masked pages
+    arr = np.array(sorted(live))
+    for lo, hi in ((arr[10], arr[10]), (arr[-5], arr[5]),
+                   (arr[-1] + 7.0, arr[-1] + 9.0)):
+        _, _, live_m = svc.scan_batch(float(lo), float(hi), 64)
+        assert not np.asarray(live_m).any()
+
+
+def test_sharded_scan_batch_survives_rebalance():
+    """scan_batch answers for call-time state across a rebalance: the
+    plane cache must rebuild (new shard services, new frame), not serve
+    stale slabs."""
+    base = np.arange(2, 9_002, dtype=np.float64) * 1024.0
+    vals = np.arange(base.size, dtype=np.int64) * 5
+    svc = ShardedIndexService(base, ServiceConfig(
+        num_shards=4, delta_capacity=4096, shard_balance_factor=1.5,
+    ), vals=vals)
+    lo, hi = float(base[100]), float(base[-100])
+    _assert_scan_batch_matches_host(svc, lo, hi, 128)
+    # hot-tail insert: routes everything to the last shard -> rebalance
+    # (tail sized so the re-built shared frame keeps the 1024-step
+    # lattice float32-injective — the device scan's endpoint caveat)
+    hot = base.max() + 1024.0 + np.arange(3_000, dtype=np.float64) * 1024.0
+    svc.insert(hot, np.full(hot.size, 7, np.int64))
+    assert svc.stats["rebalances"] >= 1
+    _assert_scan_batch_matches_host(svc, lo, float(hot[-1]) + 1.0, 128)
+
+
+def test_sharded_device_results_survive_incremental_rebuild():
+    """Results returned BEFORE a write must stay byte-stable after the
+    incremental plane rebuild: `jnp.asarray` can zero-copy ALIAS a
+    float32 NumPy buffer on the CPU backend, so the plane caches must
+    upload COPIES of the mutable host mirrors — an aliased upload
+    would rewrite earlier calls' device arrays in place."""
+    svc, live = _sharded_lattice(3, n=6_000)
+    base = np.array(sorted(live))
+    lo, hi = float(base[5]), float(base[-5])
+    k1, v1, m1 = svc.scan_batch(lo, hi, 128)
+    r1 = svc.lookup_batch(base[::7])
+    want = (np.asarray(k1).copy(), np.asarray(v1).copy(),
+            np.asarray(m1).copy(), np.asarray(r1).copy())
+    svc.insert(np.arange(3, 600, 11, dtype=np.float64) * 1024.0 + 512.0)
+    svc.scan_batch(lo, hi, 128)   # incremental rebuilds mutate mirrors
+    svc.lookup_batch(base[::7])
+    for got, exp in zip((k1, v1, m1, r1), want):
+        np.testing.assert_array_equal(np.asarray(got), exp)
+
+
+def test_sharded_scan_batch_kernel_matches_fallback():
+    """Grid kernel vs vmapped XLA fallback through the service: same
+    slabs, bit-identical page stream."""
+    svc_k, _ = _sharded_lattice(3, n=3_000, strategy="pallas_fused")
+    svc_x, _ = _sharded_lattice(3, n=3_000, strategy="binary")
+    ins = np.arange(5, 600, 11, dtype=np.float64) * 1024.0 + 512.0
+    for svc in (svc_k, svc_x):
+        svc.insert(ins, np.arange(ins.size, dtype=np.int64))
+        svc.delete(np.arange(2, 3002, 17, dtype=np.float64) * 1024.0)
+    lo, hi = 5.0 * 1024.0, 2_900.0 * 1024.0
+    a = svc_k.scan_batch(lo, hi, 64)
+    b = svc_x.scan_batch(lo, hi, 64)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
 # --------------------------------------------------------------------------
 # KV page table consumer
 # --------------------------------------------------------------------------
@@ -313,3 +424,33 @@ def test_paged_kv_scan_streams_table_in_merge_order():
             k for k in alloc._table if lo <= k < lo + MAX_PAGES_PER_REQ
         )
     ]
+
+
+def test_paged_kv_scan_batch_one_dispatch_matches_scan():
+    """The device page-table scan: one dispatch, rows identical to the
+    host `scan` stream (in the plane's float32 frame), cache reused
+    until alloc/free churn bumps a delta version."""
+    from repro.kernels import ops as kernels_ops
+    from repro.serve.kvcache import PagedKVAllocator
+
+    rng = np.random.default_rng(7)
+    alloc = PagedKVAllocator(num_pages=2048, page_size=16,
+                             delta_capacity=128, num_shards=4)
+    for uid in range(100):
+        alloc.alloc(uid, int(rng.integers(1, 6)) * 16)
+    alloc.rebuild_index()
+    for uid in rng.choice(100, 30, replace=False):
+        alloc.free(int(uid))
+    for uid in range(200, 240):
+        alloc.alloc(uid, 32)
+    lo, hi = 0.0, float(1 << 60)
+    alloc.scan_batch(lo, hi, 64)  # warm the plane
+    with kernels_ops.count_dispatches() as n:
+        keys, vals, live = alloc.scan_batch(lo, hi, 64)
+        assert n() == 1
+    m = np.asarray(live).ravel()
+    got_k = np.asarray(keys).ravel()[m]
+    got_v = np.asarray(vals).ravel()[m]
+    host_k, host_v = _concat(alloc.scan(lo, hi, 64))
+    np.testing.assert_array_equal(got_k, alloc.scan_normalize(host_k))
+    np.testing.assert_array_equal(got_v, host_v.astype(np.int32))

@@ -355,6 +355,46 @@ def test_draining_one_shards_whole_range_survives():
     np.testing.assert_array_equal(ranks, np.searchsorted(live, live[::17]))
 
 
+def test_rate_aware_compaction_hot_shard_compacts_first():
+    """Write-rate-aware scheduling: with ``compact_rate_gain`` set, a
+    shard absorbing heavy insert traffic must compact at a LOWER fill
+    than a cold shard trickling writes — hot shards pay small frequent
+    merges (fresh RMIs, bounded stalls), cold shards keep batching."""
+    base = np.arange(0, 20_000, dtype=np.float64)
+    svc = ShardedIndexService(base, ServiceConfig(
+        num_shards=2, delta_capacity=1000, compact_rate_gain=1.0,
+    ))
+    boundary = float(svc.router.boundaries[0])
+    hot = iter(np.arange(0.5, boundary, 1.0))       # routes to shard 0
+    cold = iter(np.arange(boundary + 0.5, 20_000, 1.0))
+    for _ in range(6):
+        svc.insert(np.array([next(hot) for _ in range(100)]))
+        svc.insert(np.array([next(cold) for _ in range(10)]))
+    s_hot, s_cold = svc.shards
+    # the hot shard's trigger dropped below the cold one's...
+    assert s_hot.write_rate_ewma > s_cold.write_rate_ewma
+    assert s_hot._compact_trigger() < s_cold._compact_trigger()
+    # ...and it compacted while the cold shard is still batching
+    assert s_hot.stats["compactions"] >= 1
+    assert s_cold.stats["compactions"] == 0
+    # both shards stay oracle-exact through the early compaction
+    live = np.concatenate([
+        base,
+        np.arange(0.5, boundary, 1.0)[:600],
+        np.arange(boundary + 0.5, 20_000, 1.0)[:60],
+    ])
+    live.sort()
+    sample = live[::37]
+    ranks, found = svc.get(sample)
+    assert found.all()
+    np.testing.assert_array_equal(ranks, np.searchsorted(live, sample))
+    # gain = 0 (default) keeps the rate-blind trigger
+    blind = IndexService(base, ServiceConfig(delta_capacity=1000))
+    blind.insert(np.arange(20_000.5, 20_600.5, 1.0))
+    assert blind._compact_trigger() == 0.75 * 1000
+    assert blind.stats["compactions"] == 0
+
+
 def test_noop_absent_deletes_never_rebalance():
     """Idempotent retries (deleting keys that are not live) must not
     trip the drain guard: the guard refines with exact per-shard
