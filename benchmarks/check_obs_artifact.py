@@ -1,0 +1,98 @@
+"""CI gate: the dynamic-index benchmark artifact must carry the
+observability sections PR 6 added — per-op latency percentiles and the
+dispatch-cost attribution ledger (with retrace counts) — and the
+Chrome trace dump must be loadable with real events.
+
+Run after the bench-smoke steps:
+
+    PYTHONPATH=src python benchmarks/check_obs_artifact.py
+
+Exits non-zero with a message naming the first missing piece, so a
+refactor that silently drops instrumentation fails the smoke job
+instead of shipping a hollow artifact.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+JSON_PATH = os.environ.get("LIX_BENCH_JSON", "BENCH_dynamic_index.json")
+
+
+def fail(msg: str) -> None:
+    print(f"check_obs_artifact: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def main() -> None:
+    if not os.path.exists(JSON_PATH):
+        fail(f"{JSON_PATH} not found (run benchmarks/dynamic_index.py first)")
+    with open(JSON_PATH) as f:
+        data = json.load(f)
+
+    obs = data.get("observability")
+    if not isinstance(obs, dict):
+        fail("no 'observability' section in artifact")
+
+    # ---- per-op latency percentiles --------------------------------------
+    lat = obs.get("op_latency") or {}
+    if not lat:
+        fail("observability.op_latency is empty")
+    n_ops = 0
+    for label, rows in lat.items():
+        if not rows:
+            fail(f"op_latency[{label!r}] has no ops")
+        for op, row in rows.items():
+            for field in ("count", "p50_us", "p90_us", "p99_us", "mean_us"):
+                if field not in row:
+                    fail(f"op_latency[{label!r}][{op!r}] missing {field!r}")
+            if row["count"] < 1:
+                fail(f"op_latency[{label!r}][{op!r}] recorded zero samples")
+            if row["p99_us"] < row["p50_us"]:
+                fail(f"op_latency[{label!r}][{op!r}] p99 < p50")
+            n_ops += 1
+
+    # ---- dispatch attribution with retraces ------------------------------
+    disp = obs.get("dispatch") or {}
+    if not disp:
+        fail("observability.dispatch is empty")
+    n_rows = 0
+    for label, summary in disp.items():
+        rows = summary.get("rows") or []
+        if not rows:
+            fail(f"dispatch[{label!r}] has no attribution rows")
+        if summary.get("total", 0) < 1:
+            fail(f"dispatch[{label!r}] counted zero dispatches")
+        for row in rows:
+            for field in ("op", "path", "count", "wall_s", "retraces"):
+                if field not in row:
+                    fail(f"dispatch[{label!r}] row missing {field!r}: {row}")
+        n_rows += len(rows)
+
+    # ---- Chrome trace dump ----------------------------------------------
+    trace_path = obs.get("trace_file") or ""
+    n_events = 0
+    if trace_path and os.path.exists(trace_path):
+        with open(trace_path) as f:
+            trace = json.load(f)
+        events = trace.get("traceEvents")
+        if not events:
+            fail(f"{trace_path} has no traceEvents")
+        for ev in events:
+            if "ph" not in ev or "name" not in ev:
+                fail(f"{trace_path} malformed event: {ev}")
+        n_events = len(events)
+    else:
+        fail(f"trace file {trace_path!r} missing")
+
+    print(
+        f"check_obs_artifact: OK — {n_ops} latency rows over "
+        f"{len(lat)} sweeps, {n_rows} dispatch rows over "
+        f"{len(disp)} runs, {n_events} trace events"
+    )
+
+
+if __name__ == "__main__":
+    main()

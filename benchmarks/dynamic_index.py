@@ -48,6 +48,8 @@ from repro.index_service import (
 )
 from repro.kernels import ops as kernels_ops
 from repro.kernels.rmi_lookup import default_interpret
+from repro.obs import TRACER, write_chrome_trace
+from repro.obs.export import op_latency_rows
 
 DELTA_CAPACITY = 4096
 # interpret-mode pallas is orders of magnitude slower than compiled
@@ -59,7 +61,19 @@ FUSED_BATCH = 4096
 # at exit (standalone LIX_*_ONLY runs merge into the same file, so the
 # CI bench-smoke steps accumulate one artifact)
 JSON_PATH = os.environ.get("LIX_BENCH_JSON", "BENCH_dynamic_index.json")
+TRACE_PATH = os.environ.get("LIX_TRACE_JSON", "BENCH_dynamic_index_trace.json")
 _JSON_ROWS: list = []
+# observability sections, merged into the artifact beside the rows:
+# per-service op-latency percentiles keyed by sweep label, and the
+# process dispatch/attribution ledger keyed by entrypoint
+_OBS_LATENCY: dict = {}
+_RUN_LABEL = "main"
+
+
+def record_latency(label: str, registry) -> None:
+    rows = op_latency_rows(registry)
+    if rows:
+        _OBS_LATENCY[label] = rows
 
 
 def record(name: str, us_per_item: float, derived: str = "", **extra):
@@ -80,6 +94,7 @@ def write_json() -> None:
         "lookups": BENCH_LOOKUPS,
         "interpret": default_interpret(),
         "rows": [],
+        "observability": {"op_latency": {}, "dispatch": {}},
     }
     if os.path.exists(JSON_PATH):
         try:
@@ -89,12 +104,29 @@ def write_json() -> None:
             data["rows"] = [
                 r for r in old.get("rows", []) if r["name"] not in fresh
             ]
+            old_obs = old.get("observability", {})
+            data["observability"]["op_latency"] = {
+                k: v for k, v in old_obs.get("op_latency", {}).items()
+                if k not in _OBS_LATENCY
+            }
+            data["observability"]["dispatch"] = {
+                k: v for k, v in old_obs.get("dispatch", {}).items()
+                if k != _RUN_LABEL
+            }
         except (OSError, ValueError, KeyError):
             pass
     data["rows"] += _JSON_ROWS
+    data["observability"]["op_latency"].update(_OBS_LATENCY)
+    data["observability"]["dispatch"][_RUN_LABEL] = (
+        kernels_ops.dispatch_summary()
+    )
+    data["observability"]["trace_file"] = TRACE_PATH
     with open(JSON_PATH, "w") as f:
         json.dump(data, f, indent=2)
     print(f"wrote {JSON_PATH} ({len(data['rows'])} rows)", flush=True)
+    if TRACER.enabled and len(TRACER):
+        write_chrome_trace(TRACE_PATH)
+        print(f"wrote {TRACE_PATH} ({len(TRACER)} spans)", flush=True)
 
 
 def dispatches(fn) -> int:
@@ -157,6 +189,7 @@ def sharded_sweep(raw=None, ks=None) -> None:
             f"page={page};dispatches={d_s};interpret={default_interpret()}",
             dispatches=d_s,
         )
+        record_latency(f"sharded_k{k}", svc.metrics)
 
 
 def scan_sweep(raw=None, ks=None) -> None:
@@ -271,6 +304,7 @@ def scan_sweep(raw=None, ks=None) -> None:
         pr4_dispatches=d_pr4,
         speedup_vs_pr4=round(t_pr4 / t_dev, 2),
     )
+    record_latency("scan_sweep", svc.metrics)
 
 
 def _scan_batch_pr4(svc: IndexService, lo, hi, page_size):
@@ -375,6 +409,7 @@ def main() -> None:
         t_mixed / 1e3,
         f"compactions={svc.stats['compactions']};vs_static={t_mixed / t_static:.2f}x",
     )
+    record_latency("mixed_90_10", svc.metrics)
 
     # ---- after compaction the merged path is the static path -------------
     svc.flush()
@@ -394,9 +429,12 @@ def main() -> None:
 
 
 if __name__ == "__main__":
+    TRACER.enable()  # spans land in the ring buffer; dumped at exit
     if os.environ.get("LIX_SHARDED_ONLY", "0") == "1":
+        _RUN_LABEL = "sharded_sweep"
         sharded_sweep()
     elif os.environ.get("LIX_SCAN_ONLY", "0") == "1":
+        _RUN_LABEL = "scan_sweep"
         scan_sweep()
     else:
         main()

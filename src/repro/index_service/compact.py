@@ -25,6 +25,7 @@ import numpy as np
 from repro.core.rmi import RMIConfig
 from repro.index_service.delta import DeltaBuffer
 from repro.index_service.snapshot import IndexSnapshot, build_snapshot
+from repro.obs import trace as obs_trace
 
 
 class CompactionStall(ValueError):
@@ -90,21 +91,28 @@ class Compactor:
         self, snap: IndexSnapshot, frozen: DeltaBuffer
     ) -> Tuple[IndexSnapshot, CompactionStats]:
         t0 = time.perf_counter()
-        merged, vals = merge_delta(snap, frozen)
+        with obs_trace.span(
+            "compactor.merge_delta", cat="compaction",
+            inserts=frozen.num_inserts, deletes=frozen.num_deletes,
+        ):
+            merged, vals = merge_delta(snap, frozen)
         if merged.size < self.min_keys:
             raise CompactionStall(
                 f"compaction would leave {merged.size} keys "
                 f"(< {self.min_keys}); retain the delta instead"
             )
-        new, refit = build_snapshot(
-            merged,
-            vals=vals,
-            config=self.config or snap.index.config,
-            version=snap.version + 1,
-            bloom_fpr=self.bloom_fpr,
-            warm_from=snap if self.warm else None,
-            verbose=self.verbose,
-        )
+        with obs_trace.span(
+            "compactor.build_snapshot", cat="compaction", n=int(merged.size),
+        ):
+            new, refit = build_snapshot(
+                merged,
+                vals=vals,
+                config=self.config or snap.index.config,
+                version=snap.version + 1,
+                bloom_fpr=self.bloom_fpr,
+                warm_from=snap if self.warm else None,
+                verbose=self.verbose,
+            )
         stats = CompactionStats(
             version=new.version,
             n_before=snap.n,

@@ -299,6 +299,16 @@ def collapse_levels(
     per merged row, with no cross-level run resolution left to do.
     Returns ``(eff_ins_keys, eff_ins_vals, eff_del_keys)``, all sorted.
     """
+    from repro.obs import trace as obs_trace  # local: delta stays leaf-light
+    with obs_trace.span("delta.collapse_levels", cat="plane"):
+        return _collapse_levels_inner(base_raw, frozen, active)
+
+
+def _collapse_levels_inner(
+    base_raw: np.ndarray,
+    frozen: Optional[DeltaBuffer],
+    active: Optional[DeltaBuffer],
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
     levels = [lv for lv in (frozen, active) if lv is not None and len(lv)]
     empty = np.empty(0, np.float64)
     if not levels:

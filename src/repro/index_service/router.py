@@ -32,6 +32,7 @@ from __future__ import annotations
 
 import dataclasses
 import os
+import time
 from typing import Optional
 
 import numpy as np
@@ -57,6 +58,9 @@ class LearnedRouter:
             raise ValueError("boundaries must be strictly increasing")
         self.boundaries = b
         self.stats = {"routed": 0, "model_hits": 0}
+        # set by the owning service so route latency lands in ITS
+        # registry (the router itself stays registry-agnostic)
+        self.metrics = None
 
     @property
     def num_shards(self) -> int:
@@ -111,11 +115,13 @@ class LearnedRouter:
     def route(self, keys) -> np.ndarray:
         """Exact shard id per key: model guess, boundary verification,
         searchsorted fallback for the misses."""
+        t0 = time.perf_counter()
         q = np.atleast_1d(np.asarray(keys, np.float64))
         k = self.num_shards
         self.stats["routed"] += q.size
         if k == 1:
             self.stats["model_hits"] += q.size
+            self._record(q.size, q.size, time.perf_counter() - t0)
             return np.zeros(q.shape, np.int32)
         b = self.boundaries
         guess = np.clip(
@@ -129,8 +135,18 @@ class LearnedRouter:
             miss = ~ok
             out = guess.copy()
             out[miss] = np.searchsorted(b, q[miss], side="right")
-        self.stats["model_hits"] += int(ok.sum())
+        hits = int(ok.sum())
+        self.stats["model_hits"] += hits
+        self._record(q.size, hits, time.perf_counter() - t0)
         return out.astype(np.int32)
+
+    def _record(self, routed: int, hits: int, seconds: float) -> None:
+        reg = self.metrics
+        if reg is None:
+            return
+        reg.counter("router.routed").add(routed)
+        reg.counter("router.model_hits").add(hits)
+        reg.histogram("op.route.latency_s").observe(seconds)
 
     def split_points(self, sorted_keys: np.ndarray) -> np.ndarray:
         """Cut positions of a sorted array at the shard boundaries:

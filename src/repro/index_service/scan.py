@@ -318,6 +318,14 @@ def device_scan_slab(
     Pads go to quarter-pow2 buckets (`_pad_bucket`), keying the jit
     cache per capacity bucket, never per write.
     """
+    from repro.obs import trace as obs_trace
+    with obs_trace.span(
+        "scan.pack_slab", cat="plane", staged=int(view.ins_keys.size)
+    ):
+        return _device_scan_slab_inner(view, base_norm, normalize, min_pad)
+
+
+def _device_scan_slab_inner(view, base_norm, normalize, min_pad):
     k = view.ins_keys.size
     pad_i = _pad_bucket(k + 1, min_pad=min_pad)
     ins = np.full(pad_i, np.inf, np.float32)

@@ -34,6 +34,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.rmi import RMIConfig
+from repro.obs import trace as obs_trace
+from repro.obs.metrics import MetricsRegistry, StatsView
 from repro.index_service.compact import (
     CompactionStall,
     CompactionStats,
@@ -93,6 +95,32 @@ def _default_rmi(n: int) -> RMIConfig:
     )
 
 
+# Every public service op with per-op latency instrumentation: each has
+# a counter group in ``stats`` and an ``op.<name>.latency_s`` histogram
+# in the service registry.  The tier-1 completeness test walks this
+# list; extend it when adding a public op.
+INSTRUMENTED_OPS: Tuple[str, ...] = (
+    "get", "contains", "range", "insert", "delete", "scan",
+    "lookup_batch", "scan_batch",
+)
+
+# legacy stats keys (kept verbatim as StatsView counters) + the batch
+# read ops PR 6 starts counting
+_STATS_KEYS: Tuple[str, ...] = (
+    "get", "get_s", "get_hits",
+    "contains", "contains_s", "contains_hits",
+    "range", "range_s",
+    "insert", "insert_s", "insert_applied",
+    "delete", "delete_s", "delete_applied",
+    "bloom_screened",
+    "scan", "scan_s", "scan_pages", "scan_rows",
+    "lookup_batch", "lookup_batch_s",
+    "scan_batch", "scan_batch_s",
+    "compactions", "compact_s", "compact_stalls",
+    "leaves_refit", "cold_builds",
+)
+
+
 def scan_plane_key(snap, frozen, active) -> tuple:
     """THE cache-coherence key for device scan planes: snapshot and
     delta-buffer identities plus delta mutation versions.  Both the
@@ -117,6 +145,7 @@ class IndexService:
         config: Optional[ServiceConfig] = None,
         *,
         vals: Optional[np.ndarray] = None,
+        metrics: Optional[MetricsRegistry] = None,
         _manager: Optional[VersionManager] = None,
     ):
         self.config = config or ServiceConfig()
@@ -157,18 +186,33 @@ class IndexService:
         self._device_cache = None
         self._scan_plane = None  # keyed (snap, frozen+ver, active+ver)
         self._write_ewma = 0.0   # staged entries per recent write call
-        self.stats: Dict[str, float] = {
-            "get": 0, "get_s": 0.0, "get_hits": 0,
-            "contains": 0, "contains_s": 0.0, "contains_hits": 0,
-            "range": 0, "range_s": 0.0,
-            "insert": 0, "insert_s": 0.0, "insert_applied": 0,
-            "delete": 0, "delete_s": 0.0, "delete_applied": 0,
-            "bloom_screened": 0,
-            "scan": 0, "scan_s": 0.0, "scan_pages": 0, "scan_rows": 0,
-            "compactions": 0, "compact_s": 0.0, "compact_stalls": 0,
-            "leaves_refit": 0, "cold_builds": 0,
+        # every service gets its OWN registry unless the caller shares
+        # one on purpose — K shard services must never alias counters
+        self.metrics = metrics if metrics is not None else MetricsRegistry(
+            "index_service"
+        )
+        # legacy dict surface, now a live view over registry counters
+        self.stats = StatsView(self.metrics, "svc", _STATS_KEYS)
+        self._op_hist = {
+            op: self.metrics.histogram(f"op.{op}.latency_s")
+            for op in INSTRUMENTED_OPS
         }
+        self._op_hist["scan_page"] = self.metrics.histogram(
+            "op.scan_page.latency_s"
+        )
+        self._op_hist["compact"] = self.metrics.histogram(
+            "op.compact.latency_s"
+        )
+        self._plane_ctr = {
+            k: self.metrics.counter(f"plane.{k}")
+            for k in ("lookup.hit", "lookup.miss", "scan.hit", "scan.miss")
+        }
+        self._freeze_ctr = self.metrics.counter("delta.freezes")
+        self._swap_ctr = self.metrics.counter("snapshot.swaps")
         self.compaction_log: List[CompactionStats] = []
+
+    def _observe_op(self, op: str, seconds: float) -> None:
+        self._op_hist[op].observe(seconds)
 
     @classmethod
     def load(
@@ -219,9 +263,12 @@ class IndexService:
             snap, frozen, active = self._mgr.current(), self._frozen, self._active
             cache = self._device_cache
             if cache is None or cache[0] is not snap:
+                self._plane_ctr["lookup.miss"].add(1)
                 dk, dp = combine_for_device(frozen, active, snap.keys.normalize)
                 cache = (snap, jnp.asarray(dk), jnp.asarray(dp))
                 self._device_cache = cache
+            else:
+                self._plane_ctr["lookup.hit"].add(1)
             return snap, frozen, active, cache[1], cache[2]
 
     # ---- reads -----------------------------------------------------------
@@ -231,44 +278,57 @@ class IndexService:
         For a present key the rank is its exact position in the live
         sorted key set; for an absent key it is the insertion point."""
         t0 = time.perf_counter()
-        q = np.atleast_1d(np.asarray(keys, np.float64))
-        rank, live = self._rank_exact(q)
+        with obs_trace.span("service.get", cat="service"):
+            q = np.atleast_1d(np.asarray(keys, np.float64))
+            rank, live = self._rank_exact(q)
+        dt = time.perf_counter() - t0
         self.stats["get"] += q.size
         self.stats["get_hits"] += int(live.sum())
-        self.stats["get_s"] += time.perf_counter() - t0
+        self.stats["get_s"] += dt
+        self._observe_op("get", dt)
         return rank, live
 
     def lookup_batch(self, keys) -> jnp.ndarray:
         """Device fast path: jitted RMI + fused-delta merged ranks, no
         host refinement (exact whenever float32 normalization is
         injective over base+delta keys — the benchmark hot path)."""
-        snap, _, _, dk, dp = self._capture()
-        qn = jnp.asarray(snap.keys.normalize(np.asarray(keys, np.float64)))
-        _, rank = snap.merged_lookup_fn(self.config.strategy)(qn, dk, dp)
+        t0 = time.perf_counter()
+        with obs_trace.span("service.lookup_batch", cat="service"):
+            snap, _, _, dk, dp = self._capture()
+            q = np.asarray(keys, np.float64)
+            qn = jnp.asarray(snap.keys.normalize(q))
+            _, rank = snap.merged_lookup_fn(self.config.strategy)(qn, dk, dp)
+        dt = time.perf_counter() - t0
+        self.stats["lookup_batch"] += q.size
+        self.stats["lookup_batch_s"] += dt
+        self._observe_op("lookup_batch", dt)
         return rank
 
     def contains(self, keys) -> np.ndarray:
         """Existence check: Bloom screen (base) + exact delta overlay."""
         t0 = time.perf_counter()
-        q = np.atleast_1d(np.asarray(keys, np.float64))
-        snap, frozen, active, _, _ = self._capture()
-        mentioned = np.zeros(q.shape, bool)
-        for level in (frozen, active):
-            if level is not None:
-                mentioned |= member(level.ins_keys, q)
-                mentioned |= member(level.del_keys, q)
-        if snap.bloom is not None:
-            maybe = snap.bloom.contains(q) | mentioned
-            self.stats["bloom_screened"] += int((~maybe).sum())
-        else:
-            maybe = np.ones(q.shape, bool)
-        out = np.zeros(q.shape, bool)
-        if maybe.any():
-            _, live = self._rank_exact(q[maybe])
-            out[maybe] = live
+        with obs_trace.span("service.contains", cat="service"):
+            q = np.atleast_1d(np.asarray(keys, np.float64))
+            snap, frozen, active, _, _ = self._capture()
+            mentioned = np.zeros(q.shape, bool)
+            for level in (frozen, active):
+                if level is not None:
+                    mentioned |= member(level.ins_keys, q)
+                    mentioned |= member(level.del_keys, q)
+            if snap.bloom is not None:
+                maybe = snap.bloom.contains(q) | mentioned
+                self.stats["bloom_screened"] += int((~maybe).sum())
+            else:
+                maybe = np.ones(q.shape, bool)
+            out = np.zeros(q.shape, bool)
+            if maybe.any():
+                _, live = self._rank_exact(q[maybe])
+                out[maybe] = live
+        dt = time.perf_counter() - t0
         self.stats["contains"] += q.size
         self.stats["contains_hits"] += int(out.sum())
-        self.stats["contains_s"] += time.perf_counter() - t0
+        self.stats["contains_s"] += dt
+        self._observe_op("contains", dt)
         return out
 
     def range_lookup(self, lo: float, hi: float) -> Tuple[int, int]:
@@ -278,11 +338,14 @@ class IndexService:
         ``(r, r)`` at lo's rank — never an inverted pair whose
         difference would go negative downstream."""
         t0 = time.perf_counter()
-        if hi < lo:
-            hi = lo
-        ranks, _ = self._rank_exact(np.array([lo, hi], np.float64))
+        with obs_trace.span("service.range", cat="service"):
+            if hi < lo:
+                hi = lo
+            ranks, _ = self._rank_exact(np.array([lo, hi], np.float64))
+        dt = time.perf_counter() - t0
         self.stats["range"] += 1
-        self.stats["range_s"] += time.perf_counter() - t0
+        self.stats["range_s"] += dt
+        self._observe_op("range", dt)
         return int(ranks[0]), int(ranks[1])
 
     # ---- scans -----------------------------------------------------------
@@ -304,16 +367,30 @@ class IndexService:
         answering for the key set as of the call).  Empty or inverted
         ranges yield no pages."""
         t0 = time.perf_counter()
-        view = self._pin()
+        with obs_trace.span("service.scan", cat="service"):
+            view = self._pin()
+        setup = time.perf_counter() - t0
         self.stats["scan"] += 1
-        self.stats["scan_s"] += time.perf_counter() - t0
+        self.stats["scan_s"] += setup
+        self._observe_op("scan", setup)
 
         def pages():
-            for page in scan_pages(view, lo, hi, page_size):
+            # time the generator STEP, not just the stat bookkeeping:
+            # t1 must be taken before next() so page production (rank,
+            # gather, mask work inside scan_pages) lands in scan_s and
+            # the per-page histogram
+            it = scan_pages(view, lo, hi, page_size)
+            while True:
                 t1 = time.perf_counter()
+                with obs_trace.span("service.scan_page", cat="service"):
+                    page = next(it, None)
+                if page is None:
+                    return
+                dt = time.perf_counter() - t1
                 self.stats["scan_pages"] += 1
                 self.stats["scan_rows"] += page.count
-                self.stats["scan_s"] += time.perf_counter() - t1
+                self.stats["scan_s"] += dt
+                self._observe_op("scan_page", dt)
                 yield page
 
         return pages()
@@ -333,7 +410,9 @@ class IndexService:
             key = scan_plane_key(snap, frozen, active)
             plane = self._scan_plane
             if plane is not None and scan_plane_key_eq(plane[0], key):
+                self._plane_ctr["scan.hit"].add(1)
                 return snap, plane[1], plane[2]
+            self._plane_ctr["scan.miss"].add(1)
             view = pin_view(snap, frozen, active)
         # the O(n) index build + upload run OUTSIDE the lock (the
         # pinned view is immutable), so writers and compaction commits
@@ -363,17 +442,24 @@ class IndexService:
         (now including the range endpoints), the same caveat as
         `lookup_batch`; `scan` is the guaranteed-exact float64
         surface."""
-        snap, (ins, ivals, ins_rank, lp), ins_n = self._scan_plane_cached()
-        # static output-shape bound (host metadata sizing the output,
-        # not a rank fed to the device; see scan.scan_page_bound)
-        pages = scan_page_bound(
-            [snap.keys.raw], ins_n, lo, hi, page_size
-        )
-        fn = snap.scan_range_fn(self.config.strategy, page_size, pages)
-        bounds = jnp.asarray(
-            snap.keys.normalize(np.array([lo, hi], np.float64))
-        )
-        return fn(bounds, ins, ivals, ins_rank, lp)
+        t0 = time.perf_counter()
+        with obs_trace.span("service.scan_batch", cat="service"):
+            snap, (ins, ivals, ins_rank, lp), ins_n = self._scan_plane_cached()
+            # static output-shape bound (host metadata sizing the output,
+            # not a rank fed to the device; see scan.scan_page_bound)
+            pages = scan_page_bound(
+                [snap.keys.raw], ins_n, lo, hi, page_size
+            )
+            fn = snap.scan_range_fn(self.config.strategy, page_size, pages)
+            bounds = jnp.asarray(
+                snap.keys.normalize(np.array([lo, hi], np.float64))
+            )
+            out = fn(bounds, ins, ivals, ins_rank, lp)
+        dt = time.perf_counter() - t0
+        self.stats["scan_batch"] += 1
+        self.stats["scan_batch_s"] += dt
+        self._observe_op("scan_batch", dt)
+        return out
 
     def _rank_exact(self, q: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
         snap, frozen, active, dk, dp = self._capture()
@@ -390,29 +476,35 @@ class IndexService:
         Batches stage in one merge per capacity chunk, compacting
         between chunks when the delta fills."""
         t0 = time.perf_counter()
-        q = np.atleast_1d(np.asarray(keys, np.float64))
-        v = (np.zeros(q.shape, np.int64) if vals is None
-             else np.atleast_1d(np.asarray(vals, np.int64)))
-        self._note_write_rate(q.size)
-        applied = self._staged(
-            q, lambda c, lb: self._active.stage_insert_many(q[c], lb, v[c])
-        )
+        with obs_trace.span("service.insert", cat="service"):
+            q = np.atleast_1d(np.asarray(keys, np.float64))
+            v = (np.zeros(q.shape, np.int64) if vals is None
+                 else np.atleast_1d(np.asarray(vals, np.int64)))
+            self._note_write_rate(q.size)
+            applied = self._staged(
+                q, lambda c, lb: self._active.stage_insert_many(q[c], lb, v[c])
+            )
+        dt = time.perf_counter() - t0
         self.stats["insert"] += q.size
         self.stats["insert_applied"] += applied
-        self.stats["insert_s"] += time.perf_counter() - t0
+        self.stats["insert_s"] += dt
+        self._observe_op("insert", dt)
         return applied
 
     def delete(self, keys) -> int:
         """Stage deletes; returns how many keys went from live to dead."""
         t0 = time.perf_counter()
-        q = np.atleast_1d(np.asarray(keys, np.float64))
-        self._note_write_rate(q.size)
-        applied = self._staged(
-            q, lambda c, lb: self._active.stage_delete_many(q[c], lb)
-        )
+        with obs_trace.span("service.delete", cat="service"):
+            q = np.atleast_1d(np.asarray(keys, np.float64))
+            self._note_write_rate(q.size)
+            applied = self._staged(
+                q, lambda c, lb: self._active.stage_delete_many(q[c], lb)
+            )
+        dt = time.perf_counter() - t0
         self.stats["delete"] += q.size
         self.stats["delete_applied"] += applied
-        self.stats["delete_s"] += time.perf_counter() - t0
+        self.stats["delete_s"] += dt
+        self._observe_op("delete", dt)
         return applied
 
     def _staged(self, q: np.ndarray, stage) -> int:
@@ -545,6 +637,8 @@ class IndexService:
             self._active = DeltaBuffer(self.config.delta_capacity)
             self._device_cache = None
             self._scan_plane = None  # release the retired delta's slab
+            self._freeze_ctr.add(1)
+        obs_trace.instant("delta.freeze", cat="compaction")
         if self.config.background and not wait:
             self._worker = threading.Thread(
                 target=self._run_compaction, daemon=True
@@ -565,6 +659,14 @@ class IndexService:
         self._raise_worker_error()
 
     def _run_compaction(self) -> None:
+        # runs inline or on the background worker thread: the span tags
+        # whichever thread executes it, and the histogram covers the
+        # whole attempt (including a stall's fold-back)
+        with obs_trace.span("service.compaction", cat="compaction"), \
+                self._op_hist["compact"].time():
+            self._run_compaction_inner()
+
+    def _run_compaction_inner(self) -> None:
         try:
             snap = self._mgr.current()
             compactor = self._compactor
@@ -590,6 +692,9 @@ class IndexService:
                 self._frozen = None
                 self._device_cache = None
                 self._scan_plane = None  # drop the retired snapshot's plane
+            self._swap_ctr.add(1)
+            obs_trace.instant("snapshot.swap", cat="compaction",
+                              version=new.version)
             self.stats["compactions"] += 1
             self.stats["compact_s"] += stats.seconds
             if stats.leaves_refit < 0:
@@ -623,6 +728,7 @@ class IndexService:
                 self._device_cache = None
                 self._scan_plane = None
             self.stats["compact_stalls"] += 1
+            obs_trace.instant("compaction.stall", cat="compaction")
         except BaseException as e:  # surfaced on the caller thread
             self._worker_error = e
 

@@ -78,6 +78,7 @@ from repro.index_service.scan import (
     scan_pages,
 )
 from repro.index_service.service import (
+    INSTRUMENTED_OPS,
     IndexService,
     ServiceConfig,
     scan_plane_key,
@@ -85,6 +86,8 @@ from repro.index_service.service import (
 )
 from repro.index_service.snapshot import validate_strategy
 from repro.kernels import ops as kernels_ops
+from repro.obs import trace as obs_trace
+from repro.obs.metrics import MetricsRegistry, StatsView
 
 _ROUTER_FILE = "router.npz"
 _SHARD_DIR = "shard-{:02d}"
@@ -228,13 +231,36 @@ class ShardedIndexService:
         validate_strategy(self.config.strategy)
         if self.config.num_shards < 1:
             raise ValueError("num_shards must be >= 1")
-        self.stats: Dict[str, float] = {
-            "rebalances": 0,
-            "get": 0, "get_s": 0.0, "get_hits": 0,
-            "contains": 0, "contains_s": 0.0, "contains_hits": 0,
-            "range": 0, "range_s": 0.0,
-            "scan": 0, "scan_s": 0.0, "scan_pages": 0, "scan_rows": 0,
+        # front-end registry: shard services carry their own registries
+        # (never aliased here), so front-end latencies and per-shard
+        # counters stay separable
+        self.metrics = MetricsRegistry("sharded_index_service")
+        self.stats = StatsView(self.metrics, "svc", (
+            "rebalances",
+            "get", "get_s", "get_hits",
+            "contains", "contains_s", "contains_hits",
+            "range", "range_s",
+            "scan", "scan_s", "scan_pages", "scan_rows",
+            "insert", "insert_s",
+            "delete", "delete_s",
+            "lookup_batch", "lookup_batch_s",
+            "scan_batch", "scan_batch_s",
+        ))
+        self._op_hist = {
+            op: self.metrics.histogram(f"op.{op}.latency_s")
+            for op in INSTRUMENTED_OPS
         }
+        self._op_hist["scan_page"] = self.metrics.histogram(
+            "op.scan_page.latency_s"
+        )
+        self._op_hist["rebalance"] = self.metrics.histogram(
+            "op.rebalance.latency_s"
+        )
+        self._plane_ctr = {
+            k: self.metrics.counter(f"plane.{k}")
+            for k in ("lookup.hit", "lookup.miss", "scan.hit", "scan.miss")
+        }
+        self._refit_ctr = self.metrics.counter("router.refits")
         # counters carried over from shards retired by rebalance(), so
         # aggregate stats and the version property stay monotone
         self._retired: Dict[str, int] = {"versions": 0}
@@ -242,6 +268,7 @@ class ShardedIndexService:
         self._scan_cache: Optional[_ScanPlane] = None
         if _router is not None and _shards is not None:
             self._router, self._shards = _router, _shards
+            self._router.metrics = self.metrics
             return
         raw = np.asarray(raw_keys, np.float64)
         if vals is None:
@@ -253,9 +280,13 @@ class ShardedIndexService:
             if raw.size and (np.diff(raw) == 0).any():
                 raise ValueError("duplicate keys with distinct values")
         self._router = LearnedRouter.from_keys(raw, self.config.num_shards)
+        self._router.metrics = self.metrics
         self._shards = self._build_shards(raw, vals)
         if self.config.snapshot_dir is not None:
             self._save_router()
+
+    def _observe_op(self, op: str, seconds: float) -> None:
+        self._op_hist[op].observe(seconds)
 
     # ---- construction ----------------------------------------------------
     def _shard_config(self, shard: int) -> ServiceConfig:
@@ -341,6 +372,7 @@ class ShardedIndexService:
             plan.base_off, plan.merged_off,
             hidden=plan.hidden, max_window=plan.max_window,
             use_kernel=self.config.strategy in _KERNEL_STRATEGIES,
+            strategy=self.config.strategy,
         )
         gbase = np.asarray(gbase).astype(np.int64)
         rank = np.zeros(q.shape, np.int64)
@@ -364,11 +396,14 @@ class ShardedIndexService:
         """Exact global lower-bound ranks + presence mask (the K-shard
         mirror of `IndexService.get`)."""
         t0 = time.perf_counter()
-        q = np.atleast_1d(np.asarray(keys, np.float64))
-        rank, live = self._ranks(q)
+        with obs_trace.span("service.get", cat="service", sharded=True):
+            q = np.atleast_1d(np.asarray(keys, np.float64))
+            rank, live = self._ranks(q)
+        dt = time.perf_counter() - t0
         self.stats["get"] += q.size
         self.stats["get_hits"] += int(live.sum())
-        self.stats["get_s"] += time.perf_counter() - t0
+        self.stats["get_s"] += dt
+        self._observe_op("get", dt)
         return rank, live
 
     def contains(self, keys) -> np.ndarray:
@@ -381,6 +416,17 @@ class ShardedIndexService:
         survives rebalances)."""
         t0 = time.perf_counter()
         q = np.atleast_1d(np.asarray(keys, np.float64))
+        with obs_trace.span("service.contains", cat="service",
+                            sharded=True):
+            out = self._contains_inner(q)
+        dt = time.perf_counter() - t0
+        self.stats["contains"] += q.size
+        self.stats["contains_hits"] += int(out.sum())
+        self.stats["contains_s"] += dt
+        self._observe_op("contains", dt)
+        return out
+
+    def _contains_inner(self, q: np.ndarray) -> np.ndarray:
         shard_of = self._router.route(q)
         plan = self._device_plan()
         maybe = np.zeros(q.shape, bool)
@@ -405,9 +451,6 @@ class ShardedIndexService:
         if maybe.any():
             _, lv = self._ranks(q[maybe])
             out[maybe] = lv
-        self.stats["contains"] += q.size
-        self.stats["contains_hits"] += int(out.sum())
-        self.stats["contains_s"] += time.perf_counter() - t0
         return out
 
     def range_lookup(self, lo: float, hi: float) -> Tuple[int, int]:
@@ -417,11 +460,14 @@ class ShardedIndexService:
         ``(r, r)`` at lo's rank, even when the raw endpoints would have
         routed to different shards."""
         t0 = time.perf_counter()
-        if hi < lo:
-            hi = lo
-        ranks, _ = self._ranks(np.array([lo, hi], np.float64))
+        with obs_trace.span("service.range", cat="service", sharded=True):
+            if hi < lo:
+                hi = lo
+            ranks, _ = self._ranks(np.array([lo, hi], np.float64))
+        dt = time.perf_counter() - t0
         self.stats["range"] += 1
-        self.stats["range_s"] += time.perf_counter() - t0
+        self.stats["range_s"] += dt
+        self._observe_op("range", dt)
         return int(ranks[0]), int(ranks[1])
 
     # ---- scans -----------------------------------------------------------
@@ -438,22 +484,35 @@ class ShardedIndexService:
         pages in router boundary order (shard ranges tile the key
         space, so concatenation IS global merge order)."""
         t0 = time.perf_counter()
-        q = np.array([lo, hi], np.float64)
-        if not (hi > lo):
-            views = []
-        else:
-            s0, s1 = (int(s) for s in self._router.route(q))
-            views = [self._shards[s]._pin() for s in range(s0, s1 + 1)]
+        with obs_trace.span("service.scan", cat="service", sharded=True):
+            q = np.array([lo, hi], np.float64)
+            if not (hi > lo):
+                views = []
+            else:
+                s0, s1 = (int(s) for s in self._router.route(q))
+                views = [self._shards[s]._pin() for s in range(s0, s1 + 1)]
+        setup = time.perf_counter() - t0
         self.stats["scan"] += 1
-        self.stats["scan_s"] += time.perf_counter() - t0
+        self.stats["scan_s"] += setup
+        self._observe_op("scan", setup)
 
         def pages():
+            # time the generator STEP (same fix as IndexService.scan):
+            # page production inside repack_pages lands in scan_s and
+            # the per-page histogram
             streams = (scan_pages(v, lo, hi, page_size) for v in views)
-            for page in repack_pages(streams, page_size):
+            it = repack_pages(streams, page_size)
+            while True:
                 t1 = time.perf_counter()
+                with obs_trace.span("service.scan_page", cat="service"):
+                    page = next(it, None)
+                if page is None:
+                    return
+                dt = time.perf_counter() - t1
                 self.stats["scan_pages"] += 1
                 self.stats["scan_rows"] += page.count
-                self.stats["scan_s"] += time.perf_counter() - t1
+                self.stats["scan_s"] += dt
+                self._observe_op("scan_page", dt)
                 yield page
 
         return pages()
@@ -467,18 +526,26 @@ class ShardedIndexService:
         the (S, B) local-rank matrices) for the reassembly.  Same
         exactness caveat as `IndexService.lookup_batch` (float32
         frame, no host refinement)."""
-        q = np.atleast_1d(np.asarray(keys, np.float64))
-        plan = self._device_plan()
-        shard_of = self._router.route(q)
-        qs = np.stack([norm(q) for norm in plan.q_normalizers])
-        _, merged = kernels_ops.rmi_sharded_routed_lookup_op(
-            qs, shard_of, plan.stage0, plan.leaf_w, plan.leaf_b,
-            plan.err_lo, plan.err_hi, plan.keys, plan.dkeys,
-            plan.dprefix, plan.shard_n, plan.shard_m, plan.shard_ratio,
-            plan.base_off, plan.merged_off,
-            hidden=plan.hidden, max_window=plan.max_window,
-            use_kernel=self.config.strategy in _KERNEL_STRATEGIES,
-        )
+        t0 = time.perf_counter()
+        with obs_trace.span("service.lookup_batch", cat="service",
+                            sharded=True):
+            q = np.atleast_1d(np.asarray(keys, np.float64))
+            plan = self._device_plan()
+            shard_of = self._router.route(q)
+            qs = np.stack([norm(q) for norm in plan.q_normalizers])
+            _, merged = kernels_ops.rmi_sharded_routed_lookup_op(
+                qs, shard_of, plan.stage0, plan.leaf_w, plan.leaf_b,
+                plan.err_lo, plan.err_hi, plan.keys, plan.dkeys,
+                plan.dprefix, plan.shard_n, plan.shard_m, plan.shard_ratio,
+                plan.base_off, plan.merged_off,
+                hidden=plan.hidden, max_window=plan.max_window,
+                use_kernel=self.config.strategy in _KERNEL_STRATEGIES,
+                strategy=self.config.strategy,
+            )
+        dt = time.perf_counter() - t0
+        self.stats["lookup_batch"] += q.size
+        self.stats["lookup_batch_s"] += dt
+        self._observe_op("lookup_batch", dt)
         return merged
 
     def scan_batch(self, lo: float, hi: float, page_size: int = 256):
@@ -497,19 +564,28 @@ class ShardedIndexService:
         keys into it); pages past the range come back fully masked.
         Exact under the usual float32-injectivity caveat; the host
         `scan` is the exact float64 surface."""
-        plane = self._scan_plane()
-        pages = scan_page_bound(
-            plane.raws, plane.ins_total, lo, hi, page_size
-        )
-        bounds = jnp.asarray(
-            plane.normalize(np.array([lo, hi], np.float64))
-        )
-        return kernels_ops.rmi_sharded_scan_page_op(
-            bounds, plane.base, plane.bvals, plane.live_prefix,
-            plane.ins, plane.ivals, plane.ins_rank,
-            page_size=page_size, max_pages=pages,
-            use_kernel=self.config.strategy in _KERNEL_STRATEGIES,
-        )
+        t0 = time.perf_counter()
+        with obs_trace.span("service.scan_batch", cat="service",
+                            sharded=True):
+            plane = self._scan_plane()
+            pages = scan_page_bound(
+                plane.raws, plane.ins_total, lo, hi, page_size
+            )
+            bounds = jnp.asarray(
+                plane.normalize(np.array([lo, hi], np.float64))
+            )
+            out = kernels_ops.rmi_sharded_scan_page_op(
+                bounds, plane.base, plane.bvals, plane.live_prefix,
+                plane.ins, plane.ivals, plane.ins_rank,
+                page_size=page_size, max_pages=pages,
+                use_kernel=self.config.strategy in _KERNEL_STRATEGIES,
+                strategy=self.config.strategy,
+            )
+        dt = time.perf_counter() - t0
+        self.stats["scan_batch"] += 1
+        self.stats["scan_batch_s"] += dt
+        self._observe_op("scan_batch", dt)
+        return out
 
     def scan_normalize(self, keys) -> np.ndarray:
         """Raw keys -> the shared float32 frame `scan_batch` rows use
@@ -547,7 +623,9 @@ class ShardedIndexService:
         if same_shards and all(
             scan_plane_key_eq(a, b) for a, b in zip(old.key, keys)
         ):
+            self._plane_ctr["scan.hit"].add(1)
             return old
+        self._plane_ctr["scan.miss"].add(1)
 
         changed = [
             s for s in range(len(svcs))
@@ -722,7 +800,9 @@ class ShardedIndexService:
         key = tuple((c[0], c[3]) for c in caps)
         plan = self._plan
         if plan is not None and _same_objects(plan.key, key):
+            self._plane_ctr["lookup.hit"].add(1)
             return plan
+        self._plane_ctr["lookup.miss"].add(1)
         snaps = [c[0] for c in caps]
         (_, stacked, hidden, max_window, normalizers,
          base_off_np) = self._static_stack(snaps)
@@ -789,21 +869,37 @@ class ShardedIndexService:
 
     # ---- writes ----------------------------------------------------------
     def insert(self, keys, vals=None) -> int:
+        t0 = time.perf_counter()
         q = np.atleast_1d(np.asarray(keys, np.float64))
         v = None if vals is None else np.atleast_1d(np.asarray(vals, np.int64))
-        shard_of = self._router.route(q)
-        applied = 0
-        for s, svc in enumerate(self._shards):
-            m = shard_of == s
-            if m.any():
-                applied += svc.insert(q[m], None if v is None else v[m])
-        # no plan invalidation: the device-plane caches diff per-shard
-        # (snapshot, delta version) keys and re-pack only touched rows
-        self._maybe_rebalance()
+        with obs_trace.span("service.insert", cat="service", sharded=True):
+            shard_of = self._router.route(q)
+            applied = 0
+            for s, svc in enumerate(self._shards):
+                m = shard_of == s
+                if m.any():
+                    applied += svc.insert(q[m], None if v is None else v[m])
+            # no plan invalidation: the device-plane caches diff per-shard
+            # (snapshot, delta version) keys and re-pack only touched rows
+            self._maybe_rebalance()
+        dt = time.perf_counter() - t0
+        self.stats["insert"] += int(q.size)
+        self.stats["insert_s"] += dt
+        self._observe_op("insert", dt)
         return applied
 
     def delete(self, keys) -> int:
+        t0 = time.perf_counter()
         q = np.atleast_1d(np.asarray(keys, np.float64))
+        with obs_trace.span("service.delete", cat="service", sharded=True):
+            applied = self._delete_inner(q)
+        dt = time.perf_counter() - t0
+        self.stats["delete"] += int(q.size)
+        self.stats["delete_s"] += dt
+        self._observe_op("delete", dt)
+        return applied
+
+    def _delete_inner(self, q: np.ndarray) -> int:
         # a shard's IndexService cannot compact below 2 keys, so a
         # batch that would drain one shard's whole range (routine at
         # K > 1) first merges shards via rebalance — halving K until
@@ -891,26 +987,35 @@ class ShardedIndexService:
         oracle tests churn straight through this).  K clamps to
         live/2 so every rebuilt shard keeps the >= 2 keys an
         IndexService needs."""
-        parts = [_live_arrays(s) for s in self._shards]
-        self._retired["versions"] += sum(s.version for s in self._shards)
-        for svc in self._shards:  # keep aggregate op counters monotone
-            for stat, v in svc.stats.items():
-                self._retired[stat] = self._retired.get(stat, 0) + v
-        keys = np.concatenate([p[0] for p in parts])
-        vals = None
-        if all(p[1] is not None for p in parts):
-            vals = np.concatenate([p[1] for p in parts])
-        k = max(1, min(num_shards or self.num_shards, keys.size // 2))
-        self._router = LearnedRouter.from_keys(keys, k)
-        self._shards = self._build_shards(keys, vals)
-        # new shard services: every device-plane cache starts over
-        self._plan = None
-        self._scan_cache = None
-        self._static_plan = None
-        self._static_rows = {}
-        self.stats["rebalances"] += 1
-        if self.config.snapshot_dir is not None:
-            self._save_router()
+        with obs_trace.span("service.rebalance", cat="rebalance"), \
+                self._op_hist["rebalance"].time():
+            parts = [_live_arrays(s) for s in self._shards]
+            self._retired["versions"] += sum(s.version for s in self._shards)
+            for svc in self._shards:  # keep aggregate op counters monotone
+                for stat, v in svc.stats.items():
+                    self._retired[stat] = self._retired.get(stat, 0) + v
+            # retiring the router would reset model hit-rate; fold its
+            # lifetime tallies in so stats_summary stays monotone too
+            for stat, v in self._router.stats.items():
+                key = f"router_{stat}"
+                self._retired[key] = self._retired.get(key, 0) + v
+            keys = np.concatenate([p[0] for p in parts])
+            vals = None
+            if all(p[1] is not None for p in parts):
+                vals = np.concatenate([p[1] for p in parts])
+            k = max(1, min(num_shards or self.num_shards, keys.size // 2))
+            self._router = LearnedRouter.from_keys(keys, k)
+            self._router.metrics = self.metrics
+            self._refit_ctr.add(1)
+            self._shards = self._build_shards(keys, vals)
+            # new shard services: every device-plane cache starts over
+            self._plan = None
+            self._scan_cache = None
+            self._static_plan = None
+            self._static_rows = {}
+            self.stats["rebalances"] += 1
+            if self.config.snapshot_dir is not None:
+                self._save_router()
 
     # ---- persistence -----------------------------------------------------
     def _save_router(self) -> str:
@@ -969,6 +1074,23 @@ class ShardedIndexService:
                 "ns_per_op": (s[f"{kind}_s"] / n * 1e9) if n else 0.0,
             }
         counts = self._live_counts()
+        # router health: hit-rate over the SERVICE lifetime (current
+        # router + every router retired by a rebalance re-fit), plus
+        # the live-count skew the next re-fit would be judged by
+        routed = self._retired.get("router_routed", 0) \
+            + self._router.stats["routed"]
+        model_hits = self._retired.get("router_model_hits", 0) \
+            + self._router.stats["model_hits"]
+        mean = counts.mean() if counts.size else 0.0
+        router_health = {
+            "model_hit_rate": (model_hits / routed) if routed else None,
+            "routed": int(routed),
+            "refits": int(self._refit_ctr.value),
+            "rebalances": int(s["rebalances"]),
+            "live_count_skew": (
+                float(counts.max() / mean) if mean > 0 else 0.0
+            ),
+        }
         return {
             "num_shards": self.num_shards,
             "live_keys": int(counts.sum()),
@@ -976,6 +1098,7 @@ class ShardedIndexService:
             "shard_versions": [sh.version for sh in self._shards],
             "rebalances": int(s["rebalances"]),
             "router_model_hit_rate": self._router.model_hit_rate,
+            "router": router_health,
             "get": {
                 **per_op("get"),
                 "hit_rate": s["get_hits"] / s["get"] if s["get"] else 0.0,

@@ -12,12 +12,16 @@ from __future__ import annotations
 
 import contextlib
 import functools
+import threading
+import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ref
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.kernels.bloom_probe import bloom_probe_pallas
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.hash_probe import hash_probe_pallas
@@ -34,55 +38,169 @@ from repro.kernels.rmi_lookup import (
 )
 
 # ---------------------------------------------------------------------------
-# dispatch accounting
+# dispatch accounting & cost attribution
 # ---------------------------------------------------------------------------
 # Every public RMI op below is one host->device program entry: a single
-# jitted XLA executable (which may embed a pallas_call).  Incrementing
+# jitted XLA executable (which may embed a pallas_call).  Recording
 # here — at the non-jitted op boundary, so compiled re-executions still
-# count — gives the dispatch-discipline regression tests an observable:
-# a read path that silently regresses into per-shard or per-page
-# dispatch loops shows up as DISPATCH_COUNT > 1 per logical call.
-DISPATCH_COUNT = 0
+# count — gives the dispatch-discipline regression tests an observable
+# (a read path that silently regresses into per-shard or per-page
+# dispatch loops shows up as >1 per logical call) AND the cost model
+# its raw material: per-op wall time tagged kernel-vs-fallback and
+# strategy, plus retrace detection.
+#
+# Counters are per-thread (`count_dispatches()` reads only the calling
+# thread's count, so the background compaction thread can never pollute
+# a test's window) with a thread-tagged global ledger alongside.
+#
+# Retrace proxy: jax recompiles a jitted program when the abstract
+# signature (shapes + static args) changes.  Each op hashes its
+# signature into a process-lifetime seen-set; a never-seen signature is
+# counted as a retrace.  The set deliberately survives
+# `reset_dispatch_stats()` — jax's compile caches do too, so clearing
+# it would report retraces that never happen.
+
+DISPATCH_COUNT = 0  # process-wide total, kept for back-compat reading
 
 
-def _count_dispatch() -> None:
+class _DispatchTls(threading.local):
+    def __init__(self):
+        self.count = 0
+
+
+_TLS = _DispatchTls()
+_DISPATCH_LOCK = threading.Lock()
+_THREAD_COUNTS = {}      # thread name -> dispatches recorded on it
+_ATTRIBUTION = {}        # (op, path, strategy) -> [count, wall_s, retraces]
+_SEEN_SIGNATURES = set()  # (op, signature) — never cleared (see above)
+
+
+@functools.lru_cache(maxsize=None)
+def _op_metrics(op: str, path: str):
+    reg = obs_metrics.default_registry()
+    return (
+        reg.counter(f"dispatch.{op}.{path}.count"),
+        reg.histogram(f"dispatch.{op}.wall_s"),
+        reg.counter(f"dispatch.{op}.retraces"),
+    )
+
+
+def _record_dispatch(op, path, strategy, seconds, sig) -> None:
     global DISPATCH_COUNT
-    DISPATCH_COUNT += 1
+    _TLS.count += 1
+    retrace = False
+    key = (op, path, strategy or "")
+    with _DISPATCH_LOCK:
+        DISPATCH_COUNT += 1
+        name = threading.current_thread().name
+        _THREAD_COUNTS[name] = _THREAD_COUNTS.get(name, 0) + 1
+        if sig is not None:
+            sk = (op, sig)
+            if sk not in _SEEN_SIGNATURES:
+                _SEEN_SIGNATURES.add(sk)
+                retrace = True
+        row = _ATTRIBUTION.get(key)
+        if row is None:
+            row = _ATTRIBUTION[key] = [0, 0.0, 0]
+        row[0] += 1
+        row[1] += seconds
+        row[2] += retrace
+    counter, hist, retraces = _op_metrics(op, path)
+    counter.add(1)
+    hist.observe(seconds)
+    if retrace:
+        retraces.add(1)
+
+
+@contextlib.contextmanager
+def dispatch_span(op: str, *, kernel: bool, strategy=None, sig=()):
+    """Wrap ONE device-program entry: counts it (per-thread + global),
+    attributes its wall time to (op, kernel|fallback, strategy), flags
+    first-seen signatures as retraces, and emits a trace span."""
+    path = "kernel" if kernel else "fallback"
+    t0 = time.perf_counter()
+    with obs_trace.span(f"dispatch.{op}", cat="dispatch", path=path,
+                        strategy=strategy or ""):
+        try:
+            yield
+        finally:
+            _record_dispatch(op, path, strategy,
+                             time.perf_counter() - t0, sig)
 
 
 @contextlib.contextmanager
 def count_dispatches():
     """Context manager yielding a zero-arg callable that reports how
-    many device-op entries ran since the context opened."""
-    start = DISPATCH_COUNT
-    yield lambda: DISPATCH_COUNT - start
+    many device-op entries ran since the context opened — on THIS
+    thread only, so concurrent background compaction can't pollute the
+    window.  (Back-compat shim over the per-thread counters.)"""
+    start = _TLS.count
+    yield lambda: _TLS.count - start
+
+
+def thread_dispatch_counts() -> dict:
+    """{thread name: dispatches recorded on it} since the last reset."""
+    with _DISPATCH_LOCK:
+        return dict(_THREAD_COUNTS)
+
+
+def dispatch_summary() -> dict:
+    """Cost-attribution snapshot: total, per-thread counts, and one row
+    per (op, path, strategy) with count / wall seconds / retraces."""
+    with _DISPATCH_LOCK:
+        total = DISPATCH_COUNT
+        by_thread = dict(_THREAD_COUNTS)
+        rows = [
+            {"op": op, "path": path, "strategy": strategy,
+             "count": c, "wall_s": s, "retraces": r}
+            for (op, path, strategy), (c, s, r) in sorted(
+                _ATTRIBUTION.items())
+        ]
+    return {"total": total, "by_thread": by_thread, "rows": rows}
+
+
+def reset_dispatch_stats() -> None:
+    """Zero the global ledger (per-thread deltas via `count_dispatches`
+    are unaffected; the retrace seen-set survives by design)."""
+    global DISPATCH_COUNT
+    with _DISPATCH_LOCK:
+        DISPATCH_COUNT = 0
+        _THREAD_COUNTS.clear()
+        _ATTRIBUTION.clear()
+
+
+def _shape(x):
+    return tuple(getattr(x, "shape", ()) or ())
 
 
 def rmi_lookup_op(index, sorted_keys_norm, q_norm, *, block_q=1024,
                   interpret=None):
     """Batched RMI lookup via the fused kernel.  `index` is an RMIndex.
     ``interpret=None`` auto-selects interpret mode off-TPU."""
-    _count_dispatch()
-    return rmi_lookup_pallas(
-        jnp.asarray(q_norm),
-        stage0_flat(index.stage0_params),
-        jnp.asarray(index.leaf_w),
-        jnp.asarray(index.leaf_b),
-        jnp.asarray(index.err_lo),
-        jnp.asarray(index.err_hi),
-        jnp.asarray(sorted_keys_norm),
-        hidden=tuple(index.config.stage0_hidden),
-        n=index.n,
-        num_leaves=index.num_leaves,
-        max_window=index.max_window,
-        block_q=block_q,
-        interpret=interpret,
-    )
+    with dispatch_span(
+        "rmi_lookup", kernel=True, strategy="pallas",
+        sig=(_shape(q_norm), index.n, index.num_leaves, block_q),
+    ):
+        return rmi_lookup_pallas(
+            jnp.asarray(q_norm),
+            stage0_flat(index.stage0_params),
+            jnp.asarray(index.leaf_w),
+            jnp.asarray(index.leaf_b),
+            jnp.asarray(index.err_lo),
+            jnp.asarray(index.err_hi),
+            jnp.asarray(sorted_keys_norm),
+            hidden=tuple(index.config.stage0_hidden),
+            n=index.n,
+            num_leaves=index.num_leaves,
+            max_window=index.max_window,
+            block_q=block_q,
+            interpret=interpret,
+        )
 
 
 def rmi_merged_lookup_op(index, sorted_keys_norm, q_norm, delta_keys,
                          delta_prefix, *, block_q=1024, interpret=None,
-                         use_kernel=True):
+                         use_kernel=True, strategy=None):
     """Fused base+delta merged lookup -> (base_lb, merged_rank).
 
     One kernel dispatch covering the RMI bounded search over the base
@@ -91,32 +209,38 @@ def rmi_merged_lookup_op(index, sorted_keys_norm, q_norm, delta_keys,
     instead (`strategy="xla_fused"`) — same arithmetic, same results,
     no pallas_call.
     """
-    _count_dispatch()
-    args = (
-        jnp.asarray(q_norm),
-        stage0_flat(index.stage0_params),
-        jnp.asarray(index.leaf_w),
-        jnp.asarray(index.leaf_b),
-        jnp.asarray(index.err_lo),
-        jnp.asarray(index.err_hi),
-        jnp.asarray(sorted_keys_norm),
-        jnp.asarray(delta_keys),
-        jnp.asarray(delta_prefix),
-    )
-    if not use_kernel:
-        return ref.rmi_merged_lookup_reference(
-            *args, n=index.n, num_leaves=index.num_leaves,
-            max_window=index.max_window,
+    with dispatch_span(
+        "rmi_merged_lookup", kernel=use_kernel,
+        strategy=strategy or ("pallas_fused" if use_kernel
+                              else "xla_fused"),
+        sig=(_shape(q_norm), _shape(delta_keys), index.n, block_q,
+             use_kernel),
+    ):
+        args = (
+            jnp.asarray(q_norm),
+            stage0_flat(index.stage0_params),
+            jnp.asarray(index.leaf_w),
+            jnp.asarray(index.leaf_b),
+            jnp.asarray(index.err_lo),
+            jnp.asarray(index.err_hi),
+            jnp.asarray(sorted_keys_norm),
+            jnp.asarray(delta_keys),
+            jnp.asarray(delta_prefix),
         )
-    return rmi_merged_lookup_pallas(
-        *args,
-        hidden=tuple(index.config.stage0_hidden),
-        n=index.n,
-        num_leaves=index.num_leaves,
-        max_window=index.max_window,
-        block_q=block_q,
-        interpret=interpret,
-    )
+        if not use_kernel:
+            return ref.rmi_merged_lookup_reference(
+                *args, n=index.n, num_leaves=index.num_leaves,
+                max_window=index.max_window,
+            )
+        return rmi_merged_lookup_pallas(
+            *args,
+            hidden=tuple(index.config.stage0_hidden),
+            n=index.n,
+            num_leaves=index.num_leaves,
+            max_window=index.max_window,
+            block_q=block_q,
+            interpret=interpret,
+        )
 
 
 def stack_shard_arrays(indexes, key_arrays):
@@ -215,6 +339,7 @@ def rmi_sharded_merged_lookup_op(
     q_stacked, stage0, leaf_w, leaf_b, err_lo, err_hi, sorted_keys,
     delta_keys, delta_prefix, shard_n, shard_m, shard_ratio, *,
     hidden=(), max_window, block_q=1024, interpret=None, use_kernel=True,
+    strategy=None,
 ):
     """Per-shard merged lookup over stacked (S, ...) shard arrays.
 
@@ -225,23 +350,28 @@ def rmi_sharded_merged_lookup_op(
     Returns the per-shard local ``(base_lb, delta_contrib)`` matrices;
     feed them to `sharded_reassemble` for global ranks.
     """
-    _count_dispatch()
-    args = (
-        jnp.asarray(q_stacked),
-        tuple(jnp.asarray(p) for p in stage0),
-        jnp.asarray(leaf_w), jnp.asarray(leaf_b),
-        jnp.asarray(err_lo), jnp.asarray(err_hi),
-        jnp.asarray(sorted_keys),
-        jnp.asarray(delta_keys), jnp.asarray(delta_prefix),
-        jnp.asarray(shard_n), jnp.asarray(shard_m),
-        jnp.asarray(shard_ratio),
-    )
-    if not use_kernel:
-        return _sharded_reference_jit(*args, max_window=max_window)
-    return rmi_sharded_merged_lookup_pallas(
-        *args, hidden=tuple(hidden), max_window=max_window,
-        block_q=block_q, interpret=interpret,
-    )
+    with dispatch_span(
+        "rmi_sharded_merged_lookup", kernel=use_kernel,
+        strategy=strategy or "sharded_fused",
+        sig=(_shape(q_stacked), _shape(sorted_keys), _shape(delta_keys),
+             block_q, use_kernel),
+    ):
+        args = (
+            jnp.asarray(q_stacked),
+            tuple(jnp.asarray(p) for p in stage0),
+            jnp.asarray(leaf_w), jnp.asarray(leaf_b),
+            jnp.asarray(err_lo), jnp.asarray(err_hi),
+            jnp.asarray(sorted_keys),
+            jnp.asarray(delta_keys), jnp.asarray(delta_prefix),
+            jnp.asarray(shard_n), jnp.asarray(shard_m),
+            jnp.asarray(shard_ratio),
+        )
+        if not use_kernel:
+            return _sharded_reference_jit(*args, max_window=max_window)
+        return rmi_sharded_merged_lookup_pallas(
+            *args, hidden=tuple(hidden), max_window=max_window,
+            block_q=block_q, interpret=interpret,
+        )
 
 
 @functools.partial(jax.jit, static_argnames=("max_window",))
@@ -284,7 +414,7 @@ def sharded_reassemble(local_base, delta_contrib, shard_of_q,
 
 def rmi_scan_page_op(
     starts, base_keys, base_vals, ins_keys, ins_vals, del_pos, end_rank,
-    *, page_size=256, use_kernel=True, interpret=None,
+    *, page_size=256, use_kernel=True, interpret=None, strategy=None,
 ):
     """Rank-addressed merged scan gather -> (keys, vals, live_mask).
 
@@ -299,25 +429,29 @@ def rmi_scan_page_op(
     surface; this op is its device data plane.  ``live_mask`` is True
     for rows below ``end_rank`` (partial last page, empty ranges).
     """
-    _count_dispatch()
-    args = (
-        jnp.asarray(starts, jnp.int32),
-        jnp.asarray(base_keys, jnp.float32),
-        jnp.asarray(base_vals, jnp.int32),
-        jnp.asarray(ins_keys, jnp.float32),
-        jnp.asarray(ins_vals, jnp.int32),
-        jnp.asarray(del_pos, jnp.int32),
-        jnp.asarray(end_rank, jnp.int32).reshape(1),
-    )
-    if not use_kernel:
-        keys, vals, live = _scan_page_reference_jit(
-            *args, page_size=page_size
+    with dispatch_span(
+        "rmi_scan_page", kernel=use_kernel, strategy=strategy,
+        sig=(_shape(starts), _shape(base_keys), _shape(ins_keys),
+             page_size, use_kernel),
+    ):
+        args = (
+            jnp.asarray(starts, jnp.int32),
+            jnp.asarray(base_keys, jnp.float32),
+            jnp.asarray(base_vals, jnp.int32),
+            jnp.asarray(ins_keys, jnp.float32),
+            jnp.asarray(ins_vals, jnp.int32),
+            jnp.asarray(del_pos, jnp.int32),
+            jnp.asarray(end_rank, jnp.int32).reshape(1),
         )
-    else:
-        keys, vals, live = rmi_scan_page_pallas(
-            *args, page_size=page_size, interpret=interpret
-        )
-    return keys, vals, live.astype(bool)
+        if not use_kernel:
+            keys, vals, live = _scan_page_reference_jit(
+                *args, page_size=page_size
+            )
+        else:
+            keys, vals, live = rmi_scan_page_pallas(
+                *args, page_size=page_size, interpret=interpret
+            )
+        return keys, vals, live.astype(bool)
 
 
 @functools.partial(jax.jit, static_argnames=("page_size",))
@@ -337,7 +471,7 @@ def _scan_page_reference_jit(
 def rmi_scan_range_op(
     bounds, base_keys, base_vals, live_prefix, ins_keys, ins_vals,
     ins_rank, *, page_size=256, max_pages=1, use_kernel=True,
-    interpret=None,
+    interpret=None, strategy=None,
 ):
     """Fused endpoint-ranking + paged merged-scan gather: ONE device
     dispatch computes the merged ranks of ``bounds = [lo, hi)`` and
@@ -352,26 +486,32 @@ def rmi_scan_range_op(
     pages past the true range come back fully masked.  Kernel and XLA
     fallback share the same body — bit-identical for every input.
     """
-    _count_dispatch()
-    args = (
-        jnp.asarray(bounds, jnp.float32),
-        jnp.asarray(base_keys, jnp.float32),
-        jnp.asarray(base_vals, jnp.int32),
-        jnp.asarray(live_prefix, jnp.int32),
-        jnp.asarray(ins_keys, jnp.float32),
-        jnp.asarray(ins_vals, jnp.int32),
-        jnp.asarray(ins_rank, jnp.int32),
-    )
-    if not use_kernel:
-        keys, vals, live = _scan_range_reference_jit(
-            *args, page_size=page_size, max_pages=max_pages
+    with dispatch_span(
+        "rmi_scan_range", kernel=use_kernel, strategy=strategy,
+        # pad-bucket resizes land here as fresh (shape, max_pages)
+        # signatures, i.e. retraces
+        sig=(_shape(base_keys), _shape(ins_keys), page_size, max_pages,
+             use_kernel),
+    ):
+        args = (
+            jnp.asarray(bounds, jnp.float32),
+            jnp.asarray(base_keys, jnp.float32),
+            jnp.asarray(base_vals, jnp.int32),
+            jnp.asarray(live_prefix, jnp.int32),
+            jnp.asarray(ins_keys, jnp.float32),
+            jnp.asarray(ins_vals, jnp.int32),
+            jnp.asarray(ins_rank, jnp.int32),
         )
-    else:
-        keys, vals, live = rmi_scan_range_pallas(
-            *args, page_size=page_size, max_pages=max_pages,
-            interpret=interpret,
-        )
-    return keys, vals, live.astype(bool)
+        if not use_kernel:
+            keys, vals, live = _scan_range_reference_jit(
+                *args, page_size=page_size, max_pages=max_pages
+            )
+        else:
+            keys, vals, live = rmi_scan_range_pallas(
+                *args, page_size=page_size, max_pages=max_pages,
+                interpret=interpret,
+            )
+        return keys, vals, live.astype(bool)
 
 
 @functools.partial(jax.jit, static_argnames=("page_size", "max_pages"))
@@ -388,7 +528,7 @@ def _scan_range_reference_jit(
 def rmi_sharded_scan_page_op(
     bounds, base_keys, base_vals, live_prefix, ins_keys, ins_vals,
     ins_rank, *, page_size=256, max_pages=1, use_kernel=True,
-    interpret=None,
+    interpret=None, strategy=None,
 ):
     """Sharded fused scan: ONE device dispatch ranks ``bounds`` on
     every shard, prefix-sums the per-shard spans into stream ownership,
@@ -401,18 +541,22 @@ def rmi_sharded_scan_page_op(
     come back in that frame.  Returns ``(keys (G,P) f32, vals i32,
     live_mask bool)``; pages past the range are fully masked.
     """
-    _count_dispatch()
-    return _sharded_scan_jit(
-        jnp.asarray(bounds, jnp.float32),
-        jnp.asarray(base_keys, jnp.float32),
-        jnp.asarray(base_vals, jnp.int32),
-        jnp.asarray(live_prefix, jnp.int32),
-        jnp.asarray(ins_keys, jnp.float32),
-        jnp.asarray(ins_vals, jnp.int32),
-        jnp.asarray(ins_rank, jnp.int32),
-        page_size=page_size, max_pages=max_pages,
-        use_kernel=use_kernel, interpret=interpret,
-    )
+    with dispatch_span(
+        "rmi_sharded_scan_page", kernel=use_kernel, strategy=strategy,
+        sig=(_shape(base_keys), _shape(ins_keys), page_size, max_pages,
+             use_kernel),
+    ):
+        return _sharded_scan_jit(
+            jnp.asarray(bounds, jnp.float32),
+            jnp.asarray(base_keys, jnp.float32),
+            jnp.asarray(base_vals, jnp.int32),
+            jnp.asarray(live_prefix, jnp.int32),
+            jnp.asarray(ins_keys, jnp.float32),
+            jnp.asarray(ins_vals, jnp.int32),
+            jnp.asarray(ins_rank, jnp.int32),
+            page_size=page_size, max_pages=max_pages,
+            use_kernel=use_kernel, interpret=interpret,
+        )
 
 
 @functools.partial(
@@ -465,7 +609,7 @@ def rmi_sharded_routed_lookup_op(
     q_stacked, shard_of, stage0, leaf_w, leaf_b, err_lo, err_hi,
     sorted_keys, delta_keys, delta_prefix, shard_n, shard_m, shard_ratio,
     base_off, merged_off, *, hidden=(), max_window, block_q=1024,
-    interpret=None, use_kernel=True,
+    interpret=None, use_kernel=True, strategy=None,
 ):
     """Sharded merged lookup + routed reassembly in ONE device
     dispatch: the grid kernel (or vmapped fallback) and
@@ -473,21 +617,26 @@ def rmi_sharded_routed_lookup_op(
     previous two-call path paid a second dispatch (and an HBM
     round-trip of the full (S, B) local-rank matrices) just to gather
     the routed rows.  Returns global ``(base_rank, merged_rank)``."""
-    _count_dispatch()
-    return _sharded_routed_jit(
-        jnp.asarray(q_stacked),
-        jnp.asarray(shard_of, jnp.int32),
-        tuple(jnp.asarray(p) for p in stage0),
-        jnp.asarray(leaf_w), jnp.asarray(leaf_b),
-        jnp.asarray(err_lo), jnp.asarray(err_hi),
-        jnp.asarray(sorted_keys),
-        jnp.asarray(delta_keys), jnp.asarray(delta_prefix),
-        jnp.asarray(shard_n), jnp.asarray(shard_m),
-        jnp.asarray(shard_ratio),
-        jnp.asarray(base_off), jnp.asarray(merged_off),
-        hidden=tuple(hidden), max_window=max_window, block_q=block_q,
-        interpret=interpret, use_kernel=use_kernel,
-    )
+    with dispatch_span(
+        "rmi_sharded_routed_lookup", kernel=use_kernel,
+        strategy=strategy or "sharded_fused",
+        sig=(_shape(q_stacked), _shape(sorted_keys), _shape(delta_keys),
+             block_q, use_kernel),
+    ):
+        return _sharded_routed_jit(
+            jnp.asarray(q_stacked),
+            jnp.asarray(shard_of, jnp.int32),
+            tuple(jnp.asarray(p) for p in stage0),
+            jnp.asarray(leaf_w), jnp.asarray(leaf_b),
+            jnp.asarray(err_lo), jnp.asarray(err_hi),
+            jnp.asarray(sorted_keys),
+            jnp.asarray(delta_keys), jnp.asarray(delta_prefix),
+            jnp.asarray(shard_n), jnp.asarray(shard_m),
+            jnp.asarray(shard_ratio),
+            jnp.asarray(base_off), jnp.asarray(merged_off),
+            hidden=tuple(hidden), max_window=max_window, block_q=block_q,
+            interpret=interpret, use_kernel=use_kernel,
+        )
 
 
 @functools.partial(

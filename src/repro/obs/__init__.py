@@ -1,0 +1,47 @@
+"""Unified observability plane: metrics, tracing, export.
+
+One process-wide plane with three legs, shared by every layer of the
+stack (index services, router, compactor, kernel dispatch, serving
+engine, benchmarks):
+
+  * ``obs.metrics`` — thread-safe `MetricsRegistry` of counters,
+    gauges, and fixed log-bucket latency `Histogram`s cheap enough to
+    record per op; percentile (p50/p90/p99) reads come straight off
+    the bucket counts, no sample retention.
+  * ``obs.trace``   — a low-overhead span API (context manager over a
+    ring buffer) emitting Chrome trace-event JSON, so a mixed-op churn
+    run opens in ``chrome://tracing`` with service-op spans nesting
+    over router / kernel-dispatch / compactor-thread activity.
+  * ``obs.export``  — JSON snapshots and Prometheus text exposition
+    over any registry, plus the Chrome-trace writer.
+
+Service-level metrics live in per-service registries (so K shard
+services never alias each other's counters); cross-cutting dispatch
+attribution records into ``metrics.default_registry()``.
+"""
+
+from repro.obs.metrics import (
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    StatsView,
+    default_registry,
+)
+from repro.obs.trace import Tracer, TRACER, span, instant
+from repro.obs.export import (
+    chrome_trace,
+    prometheus_text,
+    registry_json,
+    write_chrome_trace,
+    write_json,
+    write_prometheus,
+)
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "MetricsRegistry", "StatsView",
+    "default_registry",
+    "Tracer", "TRACER", "span", "instant",
+    "chrome_trace", "prometheus_text", "registry_json",
+    "write_chrome_trace", "write_json", "write_prometheus",
+]

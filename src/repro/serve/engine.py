@@ -24,6 +24,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import trace as obs_trace
+from repro.obs.metrics import MetricsRegistry, default_registry
 from repro.serve.kvcache import PagedKVAllocator
 
 
@@ -49,6 +51,7 @@ class ServeEngine:
         max_len: int = 256,
         page_size: int = 16,
         prefix_bloom=None,
+        metrics: Optional[MetricsRegistry] = None,
     ):
         self.api = api
         self.params = params
@@ -64,6 +67,10 @@ class ServeEngine:
         self._tokens = np.zeros((batch_slots,), np.int32)
         self._decode = jax.jit(api.decode, donate_argnums=(1,))
         self.prefix_cache_hits = 0
+        self.metrics = metrics if metrics is not None else default_registry()
+        self._admit_ctr = self.metrics.counter("engine.admitted")
+        self._prefix_hit_ctr = self.metrics.counter("engine.prefix_cache_hits")
+        self._tick_hist = self.metrics.histogram("op.tick.latency_s")
 
     # ---- admission -------------------------------------------------------
     def admit(self, req: Request) -> bool:
@@ -73,6 +80,8 @@ class ServeEngine:
             key = hashlib.sha1(bytes(str(req.prompt[:16]), "utf8")).hexdigest()[:16]
             if bool(self.prefix_bloom.contains([key])[0]):
                 self.prefix_cache_hits += 1
+                self._prefix_hit_ctr.add(1)
+        self._admit_ctr.add(1)
         req.slot = self._free_slots.pop()
         self.kv.alloc(req.uid, len(req.prompt))
         self._active[req.uid] = req
@@ -86,6 +95,12 @@ class ServeEngine:
     def tick(self) -> List[Request]:
         if not self._active:
             return []
+        with obs_trace.span(
+            "engine.tick", cat="serve", active=len(self._active)
+        ), self._tick_hist.time():
+            return self._tick_inner()
+
+    def _tick_inner(self) -> List[Request]:
         logits, self.cache = self._decode(
             self.params, self.cache, jnp.asarray(self._tokens)
         )

@@ -93,3 +93,92 @@ def test_sharded_plan_reuse_across_reads():
     with ops.count_dispatches() as n:
         svc.get(sample)
         assert n() == 1
+
+
+def test_count_dispatches_is_thread_local():
+    """A background thread churning its own service must not leak
+    dispatches into another thread's counting window — the old
+    module-global counter did exactly that, poisoning every windowed
+    assertion above whenever background compaction fired."""
+    import threading
+
+    base = _lattice()
+    mine = IndexService(base, ServiceConfig(delta_capacity=512))
+    other = IndexService(base + 512.0, ServiceConfig(delta_capacity=512))
+    mine.scan_batch(float(base[10]), float(base[-10]), 128)  # warm
+    stop = threading.Event()
+    started = threading.Event()
+
+    def churn():
+        q = base + 512.0
+        while not stop.is_set():
+            other.lookup_batch(q[:256])
+            started.set()
+
+    t = threading.Thread(target=churn)
+    t.start()
+    try:
+        assert started.wait(timeout=30)
+        with ops.count_dispatches() as n:
+            mine.scan_batch(float(base[10]), float(base[-10]), 128)
+            assert n() == 1  # the noisy neighbour is invisible
+    finally:
+        stop.set()
+        t.join()
+    # ...but the process-level ledger saw both threads
+    per_thread = ops.thread_dispatch_counts()
+    assert len(per_thread) >= 2
+    assert sum(per_thread.values()) == ops.DISPATCH_COUNT
+
+
+def test_dispatch_attribution_rows_and_retraces():
+    """The attribution ledger tags every op boundary with
+    (op, kernel-vs-fallback, strategy), accumulates wall time, and
+    counts first-seen signatures as retraces: a fresh shape is a
+    retrace, a repeat is not."""
+    base = _lattice()
+    svc = IndexService(
+        base, ServiceConfig(delta_capacity=512, strategy="binary"),
+        vals=np.arange(base.size, dtype=np.int64),
+    )
+    lo, hi = float(base[10]), float(base[-10])
+    page = 96  # unusual page size: a fresh jit signature regardless of
+    # which tests ran before this one in the process
+
+    def row():
+        for r in ops.dispatch_summary()["rows"]:
+            if r["op"] == "rmi_scan_range" and r["strategy"] == "binary":
+                return r
+        return None
+
+    before = row() or {"count": 0, "wall_s": 0.0, "retraces": 0}
+    svc.scan_batch(lo, hi, page)
+    after = row()
+    assert after is not None
+    assert after["path"] == "fallback"  # binary = XLA, not the kernel
+    assert after["count"] == before["count"] + 1
+    assert after["wall_s"] > before["wall_s"]
+    assert after["retraces"] == before["retraces"] + 1  # fresh signature
+
+    svc.scan_batch(lo, hi, page)  # identical call: cached program
+    again = row()
+    assert again["count"] == after["count"] + 1
+    assert again["retraces"] == after["retraces"]  # no new trace
+
+    svc.scan_batch(lo, hi, page // 2)  # new page size: new signature
+    assert row()["retraces"] == after["retraces"] + 1
+
+
+def test_reset_dispatch_stats_clears_ledger_not_signatures():
+    base = _lattice()
+    svc = IndexService(base, ServiceConfig(delta_capacity=512))
+    svc.scan_batch(float(base[10]), float(base[-10]), 160)
+    assert ops.dispatch_summary()["total"] >= 1
+    ops.reset_dispatch_stats()
+    s = ops.dispatch_summary()
+    assert s["total"] == 0 and s["rows"] == []
+    # the signature set survives: jax's compile cache did too, so a
+    # replayed call must NOT be re-reported as a retrace
+    svc.scan_batch(float(base[10]), float(base[-10]), 160)
+    r = ops.dispatch_summary()["rows"][0]
+    assert r["count"] == 1 and r["retraces"] == 0
