@@ -1,7 +1,9 @@
 """CI gate: the dynamic-index benchmark artifact must carry the
 observability sections PR 6 added — per-op latency percentiles and the
-dispatch-cost attribution ledger (with retrace counts) — and the
-Chrome trace dump must be loadable with real events.
+dispatch-cost attribution ledger (with retrace counts) — plus the
+serving-tier section (per-tenant percentiles, QPS per client count,
+the one-dispatch coalescing proof, and the latency-SLO verdict, which
+gates), and the Chrome trace dump must be loadable with real events.
 
 Run after the bench-smoke steps:
 
@@ -71,6 +73,44 @@ def main() -> None:
                     fail(f"dispatch[{label!r}] row missing {field!r}: {row}")
         n_rows += len(rows)
 
+    # ---- serving tier: per-tenant percentiles + SLO verdict --------------
+    serving = obs.get("serving") or {}
+    if not serving:
+        fail("observability.serving is empty (run the serve sweep: "
+             "LIX_SERVE_ONLY=1 python -m benchmarks.dynamic_index)")
+    n_tenants = 0
+    for label, sweep in serving.items():
+        for field in ("clients", "qps", "slo_p99_ms", "slo_pass",
+                      "worst_read_p99_ms", "requests",
+                      "coalesced_get_dispatches"):
+            if field not in sweep:
+                fail(f"serving[{label!r}] missing {field!r}")
+        if not sweep["slo_pass"]:
+            fail(f"serving[{label!r}] read p99 "
+                 f"{sweep['worst_read_p99_ms']}ms blew the "
+                 f"{sweep['slo_p99_ms']}ms SLO")
+        if sweep["coalesced_get_dispatches"] != 1:
+            fail(f"serving[{label!r}]: coalesced point reads cost "
+                 f"{sweep['coalesced_get_dispatches']} dispatches, not 1 "
+                 "— the one-dispatch discipline broke in the frontend")
+        if sweep["qps"] <= 0 or sweep["requests"] < sweep["clients"]:
+            fail(f"serving[{label!r}] served no meaningful traffic")
+        tenants = sweep.get("tenants") or {}
+        if len(tenants) < sweep["clients"]:
+            fail(f"serving[{label!r}] has {len(tenants)} tenant rows "
+                 f"for {sweep['clients']} clients")
+        for tname, trow in tenants.items():
+            ops = trow.get("ops") or {}
+            if trow.get("requests", 0) > 0 and not ops:
+                fail(f"serving[{label!r}] tenant {tname!r} served "
+                     "requests but has no per-op latency rows")
+            for op, row in ops.items():
+                for field in ("count", "p50_us", "p99_us"):
+                    if field not in row:
+                        fail(f"serving[{label!r}] tenant {tname!r} "
+                             f"op {op!r} missing {field!r}")
+            n_tenants += 1
+
     # ---- Chrome trace dump ----------------------------------------------
     trace_path = obs.get("trace_file") or ""
     n_events = 0
@@ -90,7 +130,8 @@ def main() -> None:
     print(
         f"check_obs_artifact: OK — {n_ops} latency rows over "
         f"{len(lat)} sweeps, {n_rows} dispatch rows over "
-        f"{len(disp)} runs, {n_events} trace events"
+        f"{len(disp)} runs, {n_tenants} tenant rows over "
+        f"{len(serving)} serve sweeps (SLO pass), {n_events} trace events"
     )
 
 

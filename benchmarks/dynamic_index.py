@@ -28,6 +28,14 @@ Four questions, all ns/lookup CSV rows:
      delta fill fractions and races materializing the whole merged
      array per query — also runnable alone via LIX_SCAN_ONLY=1 (the
      CI benchmark-smoke job does).
+  7. What does the multi-tenant serving tier sustain?  `serve_sweep`
+     drives C concurrent client threads of mixed gets/contains/scans/
+     inserts through the coalescing `IndexFrontend`, records QPS and
+     end-to-end p50/p99 per client count against a p99 SLO
+     (LIX_SERVE_SLO_MS), spot-checks read-your-writes after every
+     acknowledged insert, and pins the coalesced-read dispatch count —
+     also runnable alone via LIX_SERVE_ONLY=1 (the CI benchmark-smoke
+     job does).
 """
 
 from __future__ import annotations
@@ -64,9 +72,11 @@ JSON_PATH = os.environ.get("LIX_BENCH_JSON", "BENCH_dynamic_index.json")
 TRACE_PATH = os.environ.get("LIX_TRACE_JSON", "BENCH_dynamic_index_trace.json")
 _JSON_ROWS: list = []
 # observability sections, merged into the artifact beside the rows:
-# per-service op-latency percentiles keyed by sweep label, and the
-# process dispatch/attribution ledger keyed by entrypoint
+# per-service op-latency percentiles keyed by sweep label, the process
+# dispatch/attribution ledger keyed by entrypoint, and the serving-tier
+# QPS/SLO summaries keyed by client count
 _OBS_LATENCY: dict = {}
+_SERVING: dict = {}
 _RUN_LABEL = "main"
 
 
@@ -113,10 +123,16 @@ def write_json() -> None:
                 k: v for k, v in old_obs.get("dispatch", {}).items()
                 if k != _RUN_LABEL
             }
+            data["observability"]["serving"] = {
+                k: v for k, v in old_obs.get("serving", {}).items()
+                if k not in _SERVING
+            }
         except (OSError, ValueError, KeyError):
             pass
     data["rows"] += _JSON_ROWS
     data["observability"]["op_latency"].update(_OBS_LATENCY)
+    if _SERVING:
+        data["observability"].setdefault("serving", {}).update(_SERVING)
     data["observability"]["dispatch"][_RUN_LABEL] = (
         kernels_ops.dispatch_summary()
     )
@@ -329,6 +345,117 @@ def _scan_batch_pr4(svc: IndexService, lo, hi, page_size):
     )
 
 
+def serve_sweep(raw=None, ks=None) -> None:
+    """Question 7: sustained mixed multi-client throughput through the
+    coalescing serving tier (`repro.serve.IndexFrontend`).  C client
+    threads each drive a ~80/10/5/5 get/contains/scan/insert stream
+    (inserts from disjoint per-client fresh-key pools, read-your-writes
+    spot-checked after every acknowledged insert); the frontend
+    coalesces each round into the one-dispatch batched service ops.
+    Records QPS + end-to-end p50/p99 per client count and a p99 SLO
+    verdict (LIX_SERVE_SLO_MS, generous by default — the gate is
+    against pathological serialization, not CPU absolute numbers),
+    plus a pump-mode dispatch window proving N coalesced point reads
+    still cost ONE device dispatch."""
+    import threading
+    import time
+
+    from repro.serve import FrontendConfig, IndexFrontend
+
+    rng = np.random.default_rng(7)
+    if raw is None:  # standalone (LIX_SERVE_ONLY) path
+        raw = gen_weblogs(BENCH_N)
+        ks = make_keyset(raw)
+    n = ks.n
+    slo_ms = float(os.environ.get("LIX_SERVE_SLO_MS", "2000"))
+    iters = int(os.environ.get("LIX_SERVE_ITERS", "30"))
+    # small delta: the sweep's insert volume crosses at least one
+    # freeze/snapshot-swap boundary at CI sizes
+    svc = IndexService(ks.raw, ServiceConfig(delta_capacity=64))
+
+    # dispatch discipline through the frontend: 8 clients' coalesced
+    # point reads in a pump-mode window == ONE device program entry
+    fe0 = IndexFrontend(svc, FrontendConfig())
+    sample8 = [raw[rng.integers(0, n, 8)] for _ in range(8)]
+    for keys in sample8:
+        fe0.submit("warm", "get", keys)
+    fe0.pump()  # warmup: compile + fill the device plane
+    for c, keys in enumerate(sample8):
+        fe0.submit(f"t{c}", "get", keys)
+    with kernels_ops.count_dispatches() as nd:
+        fe0.pump()
+        coalesced_dispatches = nd()
+
+    for clients in (2, 8, 16):
+        fe = IndexFrontend(svc, FrontendConfig(slo_p99_ms=slo_ms))
+        pools = np.setdiff1d(
+            rng.integers(0, 1 << 52, 2 * clients * iters * 4)
+            .astype(np.float64), ks.raw,
+        )[: clients * iters * 4].reshape(clients, -1)
+        ryw_failures: list = []
+
+        def client(idx, fe=fe, pools=pools, ryw_failures=ryw_failures):
+            crng = np.random.default_rng(1000 + idx)
+            tenant = f"c{idx}"
+            pool, pi = pools[idx], 0
+            for _ in range(iters):
+                u = crng.random()
+                if u < 0.80:
+                    fe.get(tenant, raw[crng.integers(0, n, 8)])
+                elif u < 0.90:
+                    fe.contains(tenant, raw[crng.integers(0, n, 8)])
+                elif u < 0.95:
+                    i = int(crng.integers(0, n - 256))
+                    fe.scan(tenant, float(ks.raw[i]),
+                            float(ks.raw[i + 200]), page_size=128)
+                else:
+                    fresh = pool[pi: pi + 4]
+                    pi += 4
+                    fe.insert(tenant, fresh, np.arange(fresh.size))
+                    if not fe.contains(tenant, fresh).all():
+                        ryw_failures.append(tenant)
+
+        threads = [
+            threading.Thread(target=client, args=(i,))
+            for i in range(clients)
+        ]
+        t0 = time.perf_counter()
+        with fe:
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+        wall = time.perf_counter() - t0
+        if ryw_failures:
+            raise RuntimeError(
+                f"read-your-writes violated for {sorted(set(ryw_failures))}"
+            )
+        summary = fe.serving_summary(slo_ms)
+        requests = summary["requests"]
+        qps = requests / wall
+        label = f"serve_c{clients}"
+        record(
+            f"dynamic_index/{label}",
+            wall / max(1, requests) * 1e6,
+            f"clients={clients};qps={qps:.0f};"
+            f"p99_ms={summary['worst_read_p99_ms']};"
+            f"slo={'pass' if summary['slo_pass'] else 'FAIL'};"
+            f"freezes={int(svc.metrics.counter('delta.freezes').value)}",
+            clients=clients,
+            qps=round(qps, 1),
+        )
+        _SERVING[label] = {
+            "clients": clients,
+            "requests": requests,
+            "qps": round(qps, 1),
+            "wall_s": round(wall, 4),
+            "coalesced_get_dispatches": coalesced_dispatches,
+            **summary,
+        }
+        record_latency(label, fe.metrics)
+    record_latency("serve_service", svc.metrics)
+
+
 def main() -> None:
     rng = np.random.default_rng(0)
     raw = gen_weblogs(BENCH_N)
@@ -426,6 +553,7 @@ def main() -> None:
 
     sharded_sweep(raw, ks)
     scan_sweep(raw, ks)
+    serve_sweep(raw, ks)
 
 
 if __name__ == "__main__":
@@ -436,6 +564,9 @@ if __name__ == "__main__":
     elif os.environ.get("LIX_SCAN_ONLY", "0") == "1":
         _RUN_LABEL = "scan_sweep"
         scan_sweep()
+    elif os.environ.get("LIX_SERVE_ONLY", "0") == "1":
+        _RUN_LABEL = "serve_sweep"
+        serve_sweep()
     else:
         main()
     write_json()

@@ -58,9 +58,41 @@ class BloomFilter:
             out &= (self.words[word] & mask) != 0
         return out
 
+    def add(self, keys: np.ndarray) -> None:
+        """Insert keys after construction (the filter is incremental —
+        §5's existence index must absorb new keys as a cold store
+        grows, e.g. the serving engine learning served prompt
+        prefixes).  Same double-hash probe positions as `contains`,
+        so an added key is immediately a definite maybe."""
+        k64 = _key_u64(keys)
+        if k64.size == 0:
+            return
+        h1 = _mix64(k64, 1)
+        h2 = _mix64(k64, 2) | np.uint64(1)
+        nb = np.uint64(self.num_bits)
+        for i in range(self.num_hashes):
+            bit = (h1 + np.uint64(i) * h2) % nb
+            word = (bit >> np.uint64(5)).astype(np.int64)
+            mask = (np.uint32(1) << (bit & np.uint64(31)).astype(np.uint32))
+            np.bitwise_or.at(self.words, word, mask)
+
+
+def string_hash_u64(strings) -> np.ndarray:
+    """FNV-1a over utf-8 bytes: the shared string→u64 fold used by the
+    learned Bloom's overflow filter and by `BloomFilter` string keys."""
+    out = np.empty(len(strings), np.uint64)
+    for i, s in enumerate(strings):
+        h = np.uint64(14695981039346656037)
+        for b in str(s).encode("utf-8", errors="replace"):
+            h = np.uint64((int(h) ^ b) * 1099511628211 & 0xFFFFFFFFFFFFFFFF)
+        out[i] = h
+    return out
+
 
 def _key_u64(keys: np.ndarray) -> np.ndarray:
     keys = np.asarray(keys)
+    if keys.dtype.kind in "US" or keys.dtype == object:
+        return string_hash_u64(keys.tolist())
     if keys.dtype.kind == "f":
         return keys.astype(np.float64).view(np.uint64)
     if keys.dtype == np.uint64:

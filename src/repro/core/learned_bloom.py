@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.bloom import BloomFilter, build_bloom
+from repro.core.bloom import BloomFilter, build_bloom, string_hash_u64
 from repro.core.strings import tokenize
 
 
@@ -164,15 +164,20 @@ class LearnedBloom:
         keys_u64 = _string_hash_u64(strings)
         return above | self.overflow.contains(keys_u64)
 
+    def add(self, strings: Sequence[str]) -> None:
+        """Absorb new keys after training: the classifier stays fixed
+        (re-training online would break the zero-false-negative
+        contract mid-serve), so late arrivals go into the overflow
+        Bloom filter — they are all "classifier false negatives" until
+        the next rebuild.  Keeps `contains` exact-for-members while the
+        key set grows, at standard-Bloom bits for the additions."""
+        if strings:
+            self.overflow.add(_string_hash_u64(strings))
 
-def _string_hash_u64(strings: Sequence[str]) -> np.ndarray:
-    out = np.empty(len(strings), np.uint64)
-    for i, s in enumerate(strings):
-        h = np.uint64(14695981039346656037)
-        for b in s.encode("utf-8", errors="replace"):
-            h = np.uint64((int(h) ^ b) * 1099511628211 & 0xFFFFFFFFFFFFFFFF)
-        out[i] = h
-    return out
+
+# shared with bloom.py (moved there so BloomFilter can take string keys
+# directly); the old private name stays importable
+_string_hash_u64 = string_hash_u64
 
 
 def build_learned_bloom(

@@ -28,6 +28,11 @@ from repro.index_service.delta import (
     live_mask,
     member,
 )
+from repro.index_service.plane import (
+    DevicePlane,
+    scan_plane_key,
+    scan_plane_key_eq,
+)
 from repro.index_service.router import LearnedRouter
 from repro.index_service.scan import (
     PinnedView,
@@ -50,6 +55,7 @@ __all__ = [
     "DeltaBuffer", "collapse_levels", "combine_for_device", "count_less",
     "live_mask", "member",
     "IndexService", "ServiceConfig",
+    "DevicePlane", "scan_plane_key", "scan_plane_key_eq",
     "LearnedRouter", "ShardedIndexService",
     "PinnedView", "ScanPage", "pin_view", "repack_pages", "scan_pages",
     "IndexSnapshot", "MERGED_STRATEGIES", "VersionManager", "build_snapshot",

@@ -1,0 +1,127 @@
+"""Device plane: the device-resident mirrors behind the hot read path.
+
+`IndexService` used to own two ad-hoc cache slots — the merged-lookup
+delta slab and the fused-scan plane — inline with its orchestration
+(locking, compaction, staging).  The serving tier makes that split
+load-bearing: the front-end service loop (`serve.frontend`) must never
+touch NumPy mirrors or re-pack logic, only *ask the plane* for the
+device arrays matching a consistent (snapshot, frozen, active) capture.
+This module is that boundary:
+
+  * orchestration (service.py) decides WHAT state is current — it holds
+    the lock, captures the (snapshot, frozen, active) triple, and tells
+    the plane when writes or swaps retire state (`drop_*`);
+  * the plane decides WHETHER device arrays need re-packing/re-upload
+    and owns every jnp buffer — cache checks are identity/version
+    comparisons, never data reads, so a hit costs two counter bumps.
+
+Cache coherence keys live here too (`scan_plane_key`): snapshot and
+delta-buffer identities plus delta mutation versions, shared by the
+unsharded plane and the sharded per-shard slab diff so a new delta
+level invalidates every plane consistently.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.index_service.delta import combine_for_device
+from repro.index_service.scan import device_scan_slab
+
+
+def scan_plane_key(snap, frozen, active) -> tuple:
+    """THE cache-coherence key for device scan planes: snapshot and
+    delta-buffer identities plus delta mutation versions.  Both the
+    unsharded plane cache and the sharded per-shard slab diff use this
+    one definition — a new delta level added here invalidates every
+    plane consistently."""
+    return (
+        snap, frozen, -1 if frozen is None else frozen.version,
+        active, active.version,
+    )
+
+
+def scan_plane_key_eq(a: tuple, b: tuple) -> bool:
+    return (a[0] is b[0] and a[1] is b[1] and a[2] == b[2]
+            and a[3] is b[3] and a[4] == b[4])
+
+
+class DevicePlane:
+    """Device-resident read-path state for ONE IndexService.
+
+    Two cached surfaces, each with hit/miss counters in the owning
+    service's registry (``plane.lookup.*`` / ``plane.scan.*``):
+
+      * the *lookup slab* — the fused delta arrays `combine_for_device`
+        packs for the merged-lookup kernel, keyed on snapshot identity
+        (writes drop it explicitly via `drop_lookup`, so the key never
+        needs to read delta state);
+      * the *scan slab* — staged-insert arrays + the prefix-sum page
+        index `device_scan_slab` builds for the one-dispatch scan,
+        keyed on `scan_plane_key` (identity + delta versions, so an
+        unchanged delta re-uses the upload outright).
+
+    Locking contract: `lookup_slab` and `cached_scan_slab` are called
+    under the service lock (they read/publish one reference); the O(n)
+    `build_scan_slab` runs OUTSIDE the lock on an immutable pinned
+    view, so writers and compaction commits never stall behind a
+    re-pack — a plane made stale by a concurrent write just misses its
+    key check on the next read."""
+
+    def __init__(self, metrics):
+        self._lookup = None  # (snap, dk, dp)
+        self._scan = None    # (key, slab, ins_n)
+        self._ctr = {
+            k: metrics.counter(f"plane.{k}")
+            for k in ("lookup.hit", "lookup.miss", "scan.hit", "scan.miss")
+        }
+
+    # ---- merged-lookup slab ---------------------------------------------
+    def lookup_slab(self, snap, frozen, active) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Device (keys, prefix) delta slab for the merged lookup over
+        ``snap``; re-packed only when the snapshot changed since the
+        last capture (writes invalidate via `drop_lookup`)."""
+        cache = self._lookup
+        if cache is None or cache[0] is not snap:
+            self._ctr["lookup.miss"].add(1)
+            dk, dp = combine_for_device(frozen, active, snap.keys.normalize)
+            cache = (snap, jnp.asarray(dk), jnp.asarray(dp))
+            self._lookup = cache
+        else:
+            self._ctr["lookup.hit"].add(1)
+        return cache[1], cache[2]
+
+    # ---- fused-scan slab -------------------------------------------------
+    def cached_scan_slab(self, key: tuple) -> Optional[Tuple[tuple, int]]:
+        """(slab, ins_n) when the cached plane matches ``key``, else
+        None (the caller then pins a view and calls `build_scan_slab`
+        outside the lock)."""
+        plane = self._scan
+        if plane is not None and scan_plane_key_eq(plane[0], key):
+            self._ctr["scan.hit"].add(1)
+            return plane[1], plane[2]
+        self._ctr["scan.miss"].add(1)
+        return None
+
+    def build_scan_slab(self, key: tuple, view, norm, normalize):
+        """Pack + upload the scan plane for an immutable pinned view
+        and publish it under ``key``.  Publishing is one reference
+        write; concurrent builders at worst race to publish equivalent
+        slabs."""
+        ins, ivals, ins_rank, lp = device_scan_slab(view, norm, normalize)
+        slab = tuple(jnp.asarray(a) for a in (ins, ivals, ins_rank, lp))
+        self._scan = (key, slab, view.ins_keys.size)
+        return slab, view.ins_keys.size
+
+    # ---- invalidation ----------------------------------------------------
+    def drop_lookup(self) -> None:
+        """A write changed the delta: the lookup slab is stale."""
+        self._lookup = None
+
+    def drop(self) -> None:
+        """A freeze/swap retired snapshot or delta state: drop both
+        surfaces (also releases the retired arrays' device buffers)."""
+        self._lookup = None
+        self._scan = None

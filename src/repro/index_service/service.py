@@ -44,14 +44,17 @@ from repro.index_service.compact import (
 from repro.index_service.delta import (
     DeltaBuffer,
     collapse_levels,
-    combine_for_device,
     count_less,
     live_mask,
     member,
 )
+from repro.index_service.plane import (
+    DevicePlane,
+    scan_plane_key,
+    scan_plane_key_eq,
+)
 from repro.index_service.scan import (
     PinnedView,
-    device_scan_slab,
     pin_view,
     scan_page_bound,
     scan_pages,
@@ -121,21 +124,8 @@ _STATS_KEYS: Tuple[str, ...] = (
 )
 
 
-def scan_plane_key(snap, frozen, active) -> tuple:
-    """THE cache-coherence key for device scan planes: snapshot and
-    delta-buffer identities plus delta mutation versions.  Both the
-    unsharded plane cache and the sharded per-shard slab diff use this
-    one definition — a new delta level added here invalidates every
-    plane consistently."""
-    return (
-        snap, frozen, -1 if frozen is None else frozen.version,
-        active, active.version,
-    )
-
-
-def scan_plane_key_eq(a: tuple, b: tuple) -> bool:
-    return (a[0] is b[0] and a[1] is b[1] and a[2] == b[2]
-            and a[3] is b[3] and a[4] == b[4])
+# scan_plane_key / scan_plane_key_eq moved to plane.py with the rest of
+# the device-plane machinery; re-exported here for existing importers.
 
 
 class IndexService:
@@ -183,14 +173,16 @@ class IndexService:
         self._lock = threading.RLock()
         self._worker: Optional[threading.Thread] = None
         self._worker_error: Optional[BaseException] = None
-        self._device_cache = None
-        self._scan_plane = None  # keyed (snap, frozen+ver, active+ver)
         self._write_ewma = 0.0   # staged entries per recent write call
         # every service gets its OWN registry unless the caller shares
         # one on purpose — K shard services must never alias counters
         self.metrics = metrics if metrics is not None else MetricsRegistry(
             "index_service"
         )
+        # every device-resident mirror (lookup slab + scan plane) lives
+        # behind this boundary; orchestration only captures state and
+        # signals invalidation (see plane.DevicePlane)
+        self._plane = DevicePlane(self.metrics)
         # legacy dict surface, now a live view over registry counters
         self.stats = StatsView(self.metrics, "svc", _STATS_KEYS)
         self._op_hist = {
@@ -203,10 +195,6 @@ class IndexService:
         self._op_hist["compact"] = self.metrics.histogram(
             "op.compact.latency_s"
         )
-        self._plane_ctr = {
-            k: self.metrics.counter(f"plane.{k}")
-            for k in ("lookup.hit", "lookup.miss", "scan.hit", "scan.miss")
-        }
         self._freeze_ctr = self.metrics.counter("delta.freezes")
         self._swap_ctr = self.metrics.counter("snapshot.swaps")
         self.compaction_log: List[CompactionStats] = []
@@ -261,15 +249,8 @@ class IndexService:
         snapshot's arrays alive through the swap)."""
         with self._lock:
             snap, frozen, active = self._mgr.current(), self._frozen, self._active
-            cache = self._device_cache
-            if cache is None or cache[0] is not snap:
-                self._plane_ctr["lookup.miss"].add(1)
-                dk, dp = combine_for_device(frozen, active, snap.keys.normalize)
-                cache = (snap, jnp.asarray(dk), jnp.asarray(dp))
-                self._device_cache = cache
-            else:
-                self._plane_ctr["lookup.hit"].add(1)
-            return snap, frozen, active, cache[1], cache[2]
+            dk, dp = self._plane.lookup_slab(snap, frozen, active)
+            return snap, frozen, active, dk, dp
 
     # ---- reads -----------------------------------------------------------
     def get(self, keys) -> Tuple[np.ndarray, np.ndarray]:
@@ -408,23 +389,17 @@ class IndexService:
                 self._mgr.current(), self._frozen, self._active
             )
             key = scan_plane_key(snap, frozen, active)
-            plane = self._scan_plane
-            if plane is not None and scan_plane_key_eq(plane[0], key):
-                self._plane_ctr["scan.hit"].add(1)
-                return snap, plane[1], plane[2]
-            self._plane_ctr["scan.miss"].add(1)
+            hit = self._plane.cached_scan_slab(key)
+            if hit is not None:
+                return snap, hit[0], hit[1]
             view = pin_view(snap, frozen, active)
         # the O(n) index build + upload run OUTSIDE the lock (the
         # pinned view is immutable), so writers and compaction commits
-        # don't stall behind it; publishing is one reference write, and
-        # a plane made stale by a concurrent write just misses its key
-        # check on the next read
-        ins, ivals, ins_rank, lp = device_scan_slab(
-            view, snap.keys.norm, snap.keys.normalize
+        # don't stall behind it
+        slab, ins_n = self._plane.build_scan_slab(
+            key, view, snap.keys.norm, snap.keys.normalize
         )
-        slab = tuple(jnp.asarray(a) for a in (ins, ivals, ins_rank, lp))
-        self._scan_plane = (key, slab, view.ins_keys.size)
-        return snap, slab, view.ins_keys.size
+        return snap, slab, ins_n
 
     def scan_batch(self, lo: float, hi: float, page_size: int = 256):
         """Device fast path for scans: ONE dispatch — endpoint ranking,
@@ -542,7 +517,7 @@ class IndexService:
             chunk = slice(pos, pos + room)
             with self._lock:
                 applied += stage(chunk, self._live_below_many(q[chunk]))
-                self._device_cache = None
+                self._plane.drop_lookup()
             pos += room
         return applied
 
@@ -635,8 +610,7 @@ class IndexService:
                 return False
             self._frozen = self._active
             self._active = DeltaBuffer(self.config.delta_capacity)
-            self._device_cache = None
-            self._scan_plane = None  # release the retired delta's slab
+            self._plane.drop()  # release the retired delta's slab
             self._freeze_ctr.add(1)
         obs_trace.instant("delta.freeze", cat="compaction")
         if self.config.background and not wait:
@@ -690,8 +664,7 @@ class IndexService:
             with self._lock:
                 self._mgr.swap(new)
                 self._frozen = None
-                self._device_cache = None
-                self._scan_plane = None  # drop the retired snapshot's plane
+                self._plane.drop()  # drop the retired snapshot's plane
             self._swap_ctr.add(1)
             obs_trace.instant("snapshot.swap", cat="compaction",
                               version=new.version)
@@ -725,8 +698,7 @@ class IndexService:
                     ),
                 )
                 self._frozen = None
-                self._device_cache = None
-                self._scan_plane = None
+                self._plane.drop()
             self.stats["compact_stalls"] += 1
             obs_trace.instant("compaction.stall", cat="compaction")
         except BaseException as e:  # surfaced on the caller thread

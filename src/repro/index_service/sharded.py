@@ -77,12 +77,11 @@ from repro.index_service.scan import (
     scan_page_bound,
     scan_pages,
 )
+from repro.index_service.plane import scan_plane_key, scan_plane_key_eq
 from repro.index_service.service import (
     INSTRUMENTED_OPS,
     IndexService,
     ServiceConfig,
-    scan_plane_key,
-    scan_plane_key_eq,
 )
 from repro.index_service.snapshot import validate_strategy
 from repro.kernels import ops as kernels_ops

@@ -31,6 +31,7 @@ from repro.obs.metrics import (
 from repro.obs.trace import Tracer, TRACER, span, instant
 from repro.obs.export import (
     chrome_trace,
+    op_latency_rows,
     prometheus_text,
     registry_json,
     write_chrome_trace,
@@ -42,6 +43,6 @@ __all__ = [
     "Counter", "Gauge", "Histogram", "MetricsRegistry", "StatsView",
     "default_registry",
     "Tracer", "TRACER", "span", "instant",
-    "chrome_trace", "prometheus_text", "registry_json",
+    "chrome_trace", "op_latency_rows", "prometheus_text", "registry_json",
     "write_chrome_trace", "write_json", "write_prometheus",
 ]

@@ -1,2 +1,14 @@
 from repro.serve.kvcache import PagedKVAllocator
-from repro.serve.engine import ServeEngine
+from repro.serve.engine import Request, ServeEngine, prefix_key
+from repro.serve.frontend import (
+    Backpressure,
+    FrontendConfig,
+    IndexFrontend,
+    WriteShed,
+)
+
+__all__ = [
+    "PagedKVAllocator",
+    "Request", "ServeEngine", "prefix_key",
+    "Backpressure", "FrontendConfig", "IndexFrontend", "WriteShed",
+]

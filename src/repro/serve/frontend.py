@@ -1,0 +1,427 @@
+"""Concurrent multi-tenant serving front end over the writable index.
+
+Promotes the index from a single-tenant library into a service shape
+that could face many concurrent clients: client threads submit
+``get`` / ``contains`` / ``insert`` / ``delete`` / ``scan`` /
+``range`` requests into a BOUNDED admission queue; one dispatcher loop
+drains the queue a round at a time and **coalesces** same-kind
+requests from many tenants into the services' existing one-dispatch
+batched ops (`IndexService` / `ShardedIndexService.get`, `contains`,
+`scan_batch`, vectorized `insert`/`delete`).  N clients' point reads
+cost ONE device dispatch per round, not N.
+
+Contracts:
+
+  * **Admission control / backpressure** — `submit` blocks while the
+    queue is full and raises `Backpressure` after a timeout instead of
+    letting a raw ``MemoryError``/unbounded queue growth reach the
+    caller.  Queue depth and rejections are metered.
+  * **Read-your-writes** — a round applies its writes (in arrival
+    order, adjacent same-kind runs coalesced) BEFORE its reads, and a
+    blocking client's next read enters a later round than its
+    acknowledged write; both orders land on the service's locked
+    capture, so reads observe every acknowledged write across delta
+    freezes, snapshot swaps, and compaction stalls.
+  * **Graceful degradation** — when the write path degrades (delta
+    full with compaction stalled below ``min_keys``, or allocation
+    failure), the affected write requests fail with `WriteShed` and
+    are counted, while reads keep serving from the pinned merged view;
+    the dispatcher never dies with the stall.
+  * **Per-tenant observability** — every tenant gets its own
+    `MetricsRegistry` with end-to-end (enqueue→result) latency
+    histograms per op kind plus request/error/shed counters; the
+    frontend aggregates the same per-kind histograms for SLO checks
+    (`serving_summary` reports per-tenant p50/p99 rows and a p99-vs-SLO
+    pass/fail the benchmark artifact records).
+
+The dispatcher pads coalesced read batches to quarter-pow2 buckets
+(`scan._pad_bucket`) before hitting the device path, so varying
+coalesced sizes land on a handful of jit signatures instead of
+retracing per round.
+
+Threading: the service loop is ONE thread (`start`), so service calls
+never race each other; the underlying services stay free to run their
+own background compactions.  For deterministic tests the loop can be
+driven synchronously instead via `pump()` (one round on the calling
+thread — dispatch-count windows wrap it directly, since dispatch
+counters are thread-local).
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import threading
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.index_service.scan import _pad_bucket
+from repro.obs import trace as obs_trace
+from repro.obs.export import op_latency_rows
+from repro.obs.metrics import MetricsRegistry
+
+
+class Backpressure(RuntimeError):
+    """Admission queue full: the client should back off and retry."""
+
+
+class WriteShed(RuntimeError):
+    """Write shed under degraded conditions (compaction stall /
+    allocation failure); reads keep serving.  Retryable."""
+
+
+READ_KINDS = ("get", "contains", "range", "scan")
+WRITE_KINDS = ("insert", "delete")
+KINDS = WRITE_KINDS + READ_KINDS
+
+
+@dataclasses.dataclass
+class FrontendConfig:
+    max_queue: int = 1024          # bounded admission queue (requests)
+    max_round: int = 256           # requests coalesced per round
+    submit_timeout_s: float = 5.0  # block this long for queue room
+    scan_page_size: int = 256
+    slo_p99_ms: float = 50.0       # read-path p99 target for summaries
+    pad_reads: bool = True         # bucket-pad coalesced read batches
+
+
+@dataclasses.dataclass
+class ServeRequest:
+    tenant: str
+    kind: str
+    args: tuple
+    enqueued_at: float
+    event: threading.Event = dataclasses.field(
+        default_factory=threading.Event
+    )
+    result: object = None
+    error: Optional[BaseException] = None
+
+    def wait(self, timeout: Optional[float] = None):
+        if not self.event.wait(timeout):
+            raise TimeoutError(
+                f"{self.kind} request for tenant {self.tenant!r} still "
+                f"queued after {timeout}s"
+            )
+        if self.error is not None:
+            raise self.error
+        return self.result
+
+
+class _Tenant:
+    """Per-tenant observability: own registry, per-kind end-to-end
+    latency histograms, request/error/shed counters."""
+
+    __slots__ = ("name", "registry", "hist", "requests", "errors", "shed")
+
+    def __init__(self, name: str):
+        self.name = name
+        self.registry = MetricsRegistry(f"tenant.{name}")
+        self.hist = {
+            k: self.registry.histogram(f"op.{k}.latency_s") for k in KINDS
+        }
+        self.requests = self.registry.counter("requests")
+        self.errors = self.registry.counter("errors")
+        self.shed = self.registry.counter("shed_writes")
+
+
+class IndexFrontend:
+    """Coalescing multi-tenant front end over one `IndexService` or
+    `ShardedIndexService` (anything with the batched op surface)."""
+
+    def __init__(
+        self,
+        service,
+        config: Optional[FrontendConfig] = None,
+        *,
+        metrics: Optional[MetricsRegistry] = None,
+    ):
+        self.service = service
+        self.config = config or FrontendConfig()
+        self.metrics = metrics if metrics is not None else MetricsRegistry(
+            "frontend"
+        )
+        self._queue: collections.deque = collections.deque()
+        self._cond = threading.Condition()
+        self._tenants: Dict[str, _Tenant] = {}
+        self._tenants_lock = threading.Lock()
+        self._worker: Optional[threading.Thread] = None
+        self._stopping = False
+        self._rounds_ctr = self.metrics.counter("frontend.rounds")
+        self._enq_ctr = self.metrics.counter("frontend.enqueued")
+        self._rej_ctr = self.metrics.counter("frontend.rejected")
+        self._shed_ctr = self.metrics.counter("frontend.shed_writes")
+        self._applied_ctr = self.metrics.counter("frontend.writes_applied")
+        self._depth_gauge = self.metrics.gauge("frontend.queue_depth")
+        self._round_hist = self.metrics.histogram("op.round.latency_s")
+        self._coalesce_hist = self.metrics.histogram(
+            "frontend.requests_per_round", edges=[1, 2, 4, 8, 16, 32, 64,
+                                                  128, 256, 512, 1024]
+        )
+        # frontend-level end-to-end latency per kind (across tenants):
+        # the SLO check and the benchmark artifact read these
+        self._hist = {
+            k: self.metrics.histogram(f"op.{k}.latency_s") for k in KINDS
+        }
+
+    # ---- lifecycle -------------------------------------------------------
+    def start(self) -> "IndexFrontend":
+        if self._worker is not None:
+            raise RuntimeError("frontend already started")
+        self._stopping = False
+        self._worker = threading.Thread(target=self._loop, daemon=True)
+        self._worker.start()
+        return self
+
+    def stop(self) -> None:
+        """Drain the queue, then stop the dispatcher."""
+        w = self._worker
+        if w is None:
+            return
+        with self._cond:
+            self._stopping = True
+            self._cond.notify_all()
+        w.join()
+        self._worker = None
+
+    def __enter__(self) -> "IndexFrontend":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # ---- client surface --------------------------------------------------
+    def tenant(self, name: str) -> _Tenant:
+        with self._tenants_lock:
+            t = self._tenants.get(name)
+            if t is None:
+                t = self._tenants[name] = _Tenant(name)
+            return t
+
+    def submit(self, tenant: str, kind: str, *args,
+               timeout: Optional[float] = None) -> ServeRequest:
+        """Enqueue one request (admission-controlled); returns the
+        pending `ServeRequest` — call ``.wait()`` for the result."""
+        if kind not in KINDS:
+            raise ValueError(f"unknown op kind {kind!r}")
+        self.tenant(tenant)  # registries exist from first contact
+        req = ServeRequest(tenant, kind, args, time.perf_counter())
+        deadline = time.perf_counter() + (
+            self.config.submit_timeout_s if timeout is None else timeout
+        )
+        with self._cond:
+            while len(self._queue) >= self.config.max_queue:
+                remaining = deadline - time.perf_counter()
+                if remaining <= 0 or self._stopping:
+                    self._rej_ctr.add(1)
+                    raise Backpressure(
+                        f"admission queue full ({self.config.max_queue} "
+                        "requests) — back off and retry"
+                    )
+                self._cond.wait(remaining)
+            self._queue.append(req)
+            self._enq_ctr.add(1)
+            self._depth_gauge.set(len(self._queue))
+            self._cond.notify_all()
+        return req
+
+    def _call(self, tenant, kind, *args, timeout: Optional[float] = 60.0):
+        return self.submit(tenant, kind, *args).wait(timeout)
+
+    def get(self, tenant: str, keys, **kw) -> Tuple[np.ndarray, np.ndarray]:
+        return self._call(tenant, "get",
+                          np.atleast_1d(np.asarray(keys, np.float64)), **kw)
+
+    def contains(self, tenant: str, keys, **kw) -> np.ndarray:
+        return self._call(tenant, "contains",
+                          np.atleast_1d(np.asarray(keys, np.float64)), **kw)
+
+    def range_lookup(self, tenant: str, lo: float, hi: float, **kw):
+        return self._call(tenant, "range", float(lo), float(hi), **kw)
+
+    def scan(self, tenant: str, lo: float, hi: float,
+             page_size: Optional[int] = None, **kw):
+        return self._call(
+            tenant, "scan", float(lo), float(hi),
+            int(page_size or self.config.scan_page_size), **kw)
+
+    def insert(self, tenant: str, keys, vals=None, **kw) -> int:
+        q = np.atleast_1d(np.asarray(keys, np.float64))
+        v = (np.zeros(q.shape, np.int64) if vals is None
+             else np.atleast_1d(np.asarray(vals, np.int64)))
+        return self._call(tenant, "insert", q, v, **kw)
+
+    def delete(self, tenant: str, keys, **kw) -> int:
+        return self._call(tenant, "delete",
+                          np.atleast_1d(np.asarray(keys, np.float64)), **kw)
+
+    # ---- dispatcher ------------------------------------------------------
+    def _loop(self) -> None:
+        while True:
+            with self._cond:
+                while not self._queue and not self._stopping:
+                    self._cond.wait(0.1)
+                if not self._queue and self._stopping:
+                    return
+            self.pump()
+
+    def pump(self, max_requests: Optional[int] = None) -> int:
+        """Process ONE round synchronously on the calling thread:
+        drain up to ``max_round`` queued requests, coalesce, serve.
+        The dispatcher thread calls this in a loop; tests call it
+        directly so dispatch-count windows wrap the device work."""
+        batch: List[ServeRequest] = []
+        limit = max_requests or self.config.max_round
+        with self._cond:
+            while self._queue and len(batch) < limit:
+                batch.append(self._queue.popleft())
+            self._depth_gauge.set(len(self._queue))
+            self._cond.notify_all()  # wake submitters blocked on room
+        if not batch:
+            return 0
+        self._rounds_ctr.add(1)
+        self._coalesce_hist.observe(len(batch))
+        with obs_trace.span("frontend.round", cat="serve",
+                            requests=len(batch)), self._round_hist.time():
+            self._round(batch)
+        now = time.perf_counter()
+        for r in batch:
+            t = self.tenant(r.tenant)
+            dt = now - r.enqueued_at
+            t.requests.add(1)
+            t.hist[r.kind].observe(dt)
+            self._hist[r.kind].observe(dt)
+            if r.error is not None:
+                (t.shed if isinstance(r.error, WriteShed) else t.errors).add(1)
+            r.event.set()
+        return len(batch)
+
+    # ---- one coalesced round ---------------------------------------------
+    def _round(self, batch: List[ServeRequest]) -> None:
+        # writes FIRST (read-your-writes for same-round pipelining),
+        # in arrival order with adjacent same-kind runs coalesced so
+        # insert→delete→insert interleavings keep their semantics
+        writes = [r for r in batch if r.kind in WRITE_KINDS]
+        reads = [r for r in batch if r.kind in READ_KINDS]
+        i = 0
+        while i < len(writes):
+            j = i
+            while j < len(writes) and writes[j].kind == writes[i].kind:
+                j += 1
+            self._apply_writes(writes[i].kind, writes[i:j])
+            i = j
+        by_kind: Dict[str, List[ServeRequest]] = {}
+        for r in reads:
+            by_kind.setdefault(r.kind, []).append(r)
+        if "get" in by_kind:
+            self._apply_keyed(by_kind["get"], self.service.get,
+                              split=lambda out, sl: (out[0][sl], out[1][sl]))
+        if "contains" in by_kind:
+            self._apply_keyed(by_kind["contains"], self.service.contains,
+                              split=lambda out, sl: out[sl])
+        for r in by_kind.get("range", ()):
+            try:
+                r.result = self.service.range_lookup(*r.args)
+            except BaseException as e:  # noqa: BLE001 — per-request fault wall
+                r.error = e
+        for r in by_kind.get("scan", ()):
+            try:
+                lo, hi, page = r.args
+                r.result = self.service.scan_batch(lo, hi, page)
+            except BaseException as e:  # noqa: BLE001
+                r.error = e
+
+    def _apply_writes(self, kind: str, run: List[ServeRequest]) -> None:
+        """One coalesced service call for a run of same-kind writes.
+        `stage_insert_many` is last-write-wins over in-batch duplicate
+        keys, so cross-tenant concatenation preserves arrival order."""
+        keys = np.concatenate([r.args[0] for r in run])
+        try:
+            if kind == "insert":
+                vals = np.concatenate([r.args[1] for r in run])
+                applied = self.service.insert(keys, vals)
+            else:
+                applied = self.service.delete(keys)
+            self._applied_ctr.add(int(applied))
+            for r in run:
+                # per-request ack: its keys are staged; batch-level
+                # applied count lands in frontend.writes_applied
+                r.result = int(r.args[0].size)
+        except (OverflowError, MemoryError) as e:
+            # degraded mode (compaction stalled below min_keys with a
+            # full delta, or allocation failure): shed THESE writes,
+            # keep the dispatcher alive — reads continue from the
+            # pinned merged view
+            self._shed_ctr.add(len(run))
+            shed = WriteShed(f"write shed: {e}")
+            shed.__cause__ = e
+            for r in run:
+                r.error = shed
+        except BaseException as e:  # noqa: BLE001
+            for r in run:
+                r.error = e
+
+    def _apply_keyed(self, run: List[ServeRequest], op, split) -> None:
+        """Coalesce keyed point reads into ONE batched service call,
+        padding to a quarter-pow2 bucket so round-to-round size jitter
+        reuses jit signatures instead of retracing."""
+        sizes = [r.args[0].size for r in run]
+        q = np.concatenate([r.args[0] for r in run])
+        n = q.size
+        if self.config.pad_reads and n:
+            padded = _pad_bucket(n)
+            if padded > n:
+                q = np.concatenate([q, np.full(padded - n, q[-1])])
+        try:
+            out = op(q)
+        except BaseException as e:  # noqa: BLE001
+            for r in run:
+                r.error = e
+            return
+        pos = 0
+        for r, size in zip(run, sizes):
+            r.result = split(out, slice(pos, pos + size))
+            pos += size
+
+    # ---- reporting -------------------------------------------------------
+    def tenant_latency_rows(self) -> Dict[str, Dict[str, Dict[str, float]]]:
+        with self._tenants_lock:
+            tenants = dict(self._tenants)
+        return {
+            name: op_latency_rows(t.registry) for name, t in tenants.items()
+        }
+
+    def serving_summary(
+        self, slo_p99_ms: Optional[float] = None
+    ) -> Dict[str, object]:
+        """Per-tenant p50/p99 rows + the read-path SLO verdict: pass
+        iff every read kind's frontend-level p99 is within the SLO."""
+        slo = self.config.slo_p99_ms if slo_p99_ms is None else slo_p99_ms
+        read_p99 = {
+            k: self._hist[k].percentile(99) * 1e3
+            for k in READ_KINDS if self._hist[k].count
+        }
+        worst = max(read_p99.values(), default=0.0)
+        with self._tenants_lock:
+            tenants = dict(self._tenants)
+        return {
+            "slo_p99_ms": slo,
+            "slo_pass": bool(worst <= slo),
+            "worst_read_p99_ms": round(worst, 3),
+            "read_p99_ms": {k: round(v, 3) for k, v in read_p99.items()},
+            "rounds": int(self._rounds_ctr.value),
+            "requests": int(self._enq_ctr.value),
+            "rejected": int(self._rej_ctr.value),
+            "shed_writes": int(self._shed_ctr.value),
+            "tenants": {
+                name: {
+                    "requests": int(t.requests.value),
+                    "errors": int(t.errors.value),
+                    "shed_writes": int(t.shed.value),
+                    "ops": op_latency_rows(t.registry),
+                }
+                for name, t in tenants.items()
+            },
+        }

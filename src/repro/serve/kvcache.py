@@ -162,6 +162,16 @@ class PagedKVAllocator:
     def num_allocated(self) -> int:
         return self.num_pages - len(self._free)
 
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    def request_capacity(self, request_id: int) -> int:
+        """Tokens the request's currently-allocated pages can hold —
+        the engine grows an allocation (one `alloc` per crossed page
+        boundary) whenever generation is about to exceed this."""
+        return len(self._per_req.get(request_id, ())) * self.page_size
+
     # ---- data plane ------------------------------------------------------
     def rebuild_index(self, *, num_leaves: Optional[int] = None):
         """Publish snapshots of the current table: cold-build (and

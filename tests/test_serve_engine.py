@@ -1,0 +1,153 @@
+"""Serving-engine regression tests: admission, paged-KV accounting,
+and the learning prefix screen.
+
+Pinned bugs (each had a failing shape in the old engine):
+
+  * admit popped the slot BEFORE ``kv.alloc`` and let the
+    ``MemoryError`` escape — the slot leaked and ``run()`` crashed
+    instead of applying backpressure;
+  * admit allocated pages for the whole ``prompt + max_new_tokens``
+    worth of nothing — it reserved only ``len(prompt)`` tokens and then
+    never grew the allocation, so generated tokens silently overran the
+    page table's accounting;
+  * the prefix Bloom was only ever *queried* — no served prefix was
+    ever added, so the "have we served this before?" screen answered
+    miss forever.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bloom import build_bloom
+from repro.obs.metrics import MetricsRegistry
+from repro.serve.engine import Request, ServeEngine, prefix_key
+
+
+class _StubAPI:
+    """Minimal lockstep ModelAPI: next token = (token + 1) % vocab."""
+
+    vocab = 32
+
+    def init_cache(self, slots, max_len):
+        return jnp.zeros((slots, 4), jnp.float32)
+
+    def decode(self, params, cache, tokens):
+        logits = jax.nn.one_hot((tokens + 1) % self.vocab, self.vocab)
+        return logits, cache
+
+
+def _engine(**kw):
+    kw.setdefault("metrics", MetricsRegistry("test.engine"))
+    return ServeEngine(_StubAPI(), params={"w": jnp.zeros(1)}, **kw)
+
+
+def _req(uid, prompt_len=4, max_new=8):
+    return Request(
+        uid=uid, prompt=[(uid + i) % 16 for i in range(prompt_len)],
+        max_new_tokens=max_new,
+    )
+
+
+# ---- admission / slot-leak regression -------------------------------------
+
+def test_admit_out_of_pages_returns_slot_and_defers():
+    # 1 page of 4 tokens total: an 8-token prompt can never admit
+    eng = _engine(batch_slots=2, max_len=32, page_size=4, kv_pages=1)
+    assert eng.admit(_req(0, prompt_len=8)) is False
+    # the slot came BACK (the old engine leaked it and raised)
+    assert sorted(eng._free_slots) == [0, 1]
+    assert eng.kv.num_allocated == 0
+    assert not eng._active
+    assert eng.metrics.counter("engine.deferred").value == 1
+    # a prompt that fits still admits afterwards
+    assert eng.admit(_req(1, prompt_len=3)) is True
+
+
+def test_run_applies_backpressure_instead_of_crashing():
+    # scarce pages: the old path died with MemoryError inside admit
+    eng = _engine(batch_slots=4, max_len=64, page_size=4, kv_pages=6)
+    reqs = [_req(i, prompt_len=6, max_new=6) for i in range(10)]
+    done = eng.run(reqs)
+    assert len(done) == 10
+    assert eng.metrics.counter("engine.deferred").value > 0
+
+
+# ---- KV growth accounting --------------------------------------------------
+
+def test_admit_reserves_prompt_only():
+    eng = _engine(batch_slots=2, max_len=64, page_size=4)
+    req = _req(0, prompt_len=6, max_new=40)
+    assert eng.admit(req)
+    # 6 prompt tokens -> 2 pages of 4; NOT ceil((6+40)/4)
+    assert eng.kv.request_capacity(req.uid) == 8
+    assert eng.kv.num_allocated == 2
+
+
+def test_generation_grows_kv_page_by_page():
+    eng = _engine(batch_slots=1, max_len=128, page_size=4)
+    req = _req(0, prompt_len=2, max_new=17)
+    assert eng.admit(req)
+    while not req.done:
+        eng.tick()
+        if not req.done:
+            written = len(req.prompt) + len(req.generated)
+            cap = eng.kv.request_capacity(req.uid)
+            # every written token is page-table-accounted, and growth
+            # is lazy: never more than one page of slack
+            assert written <= cap <= (
+                math.ceil(written / eng.kv.page_size) + 1
+            ) * eng.kv.page_size
+    assert len(req.generated) == 17
+    assert eng.metrics.counter("engine.kv_grow_pages").value >= 3
+    assert eng.kv.num_allocated == 0  # freed on finish
+
+
+def test_churn_under_page_exhaustion_leaks_nothing():
+    eng = _engine(batch_slots=4, max_len=64, page_size=4, kv_pages=6)
+    reqs = [_req(i, prompt_len=3 + (i % 4), max_new=10) for i in range(12)]
+    done = eng.run(reqs)
+    assert len(done) == 12
+    for r in done:
+        assert r.done
+        assert r.truncated or len(r.generated) == r.max_new_tokens
+    # nothing leaked: every slot and every page back home
+    assert sorted(eng._free_slots) == list(range(4))
+    assert eng.kv.num_allocated == 0
+    assert len(eng.kv._free) == eng.kv.num_pages
+    assert not eng.kv._table
+    assert not eng.kv._per_req
+    assert not eng._active
+    # the scarcity actually bit (otherwise this test pins nothing)
+    stalls = eng.metrics.counter("engine.kv_stalls").value
+    defers = eng.metrics.counter("engine.deferred").value
+    assert stalls + defers > 0
+
+
+# ---- prefix screen learns --------------------------------------------------
+
+def test_prefix_bloom_learns_served_prefixes():
+    # seed the filter with unrelated keys; serve two identical passes
+    bloom = build_bloom(
+        np.array([f"seed-{i:03d}" for i in range(64)]), fpr=1e-4
+    )
+    prompts = [[(7 * i + j) % 16 for j in range(6)] for i in range(4)]
+    keys = [prefix_key(p) for p in prompts]
+    assert not bloom.contains(np.array(keys)).any()
+
+    eng = _engine(batch_slots=4, max_len=64, page_size=8,
+                  prefix_bloom=bloom)
+    eng.run([Request(uid=i, prompt=list(p), max_new_tokens=4)
+             for i, p in enumerate(prompts)])
+    assert eng.prefix_cache_hits == 0  # first pass: all cold
+
+    eng.run([Request(uid=100 + i, prompt=list(p), max_new_tokens=4)
+             for i, p in enumerate(prompts)])
+    # the screen learned every served prefix: second pass all hits
+    assert eng.prefix_cache_hits == len(prompts)
+    assert (
+        eng.metrics.counter("engine.prefix_cache_hits").value
+        == len(prompts)
+    )
