@@ -3,7 +3,10 @@ observability sections PR 6 added — per-op latency percentiles and the
 dispatch-cost attribution ledger (with retrace counts) — plus the
 serving-tier section (per-tenant percentiles, QPS per client count,
 the one-dispatch coalescing proof, and the latency-SLO verdict, which
-gates), and the Chrome trace dump must be loadable with real events.
+gates), the chaos section (bit-exact crash recovery per shard count
+and the leveled-vs-single-level write-stall rows, where a leveled run
+merging as often as single-level fails the gate), and the Chrome trace
+dump must be loadable with real events.
 
 Run after the bench-smoke steps:
 
@@ -111,6 +114,37 @@ def main() -> None:
                              f"op {op!r} missing {field!r}")
             n_tenants += 1
 
+    # ---- chaos: recovery was bit-exact, the merge schedule is leveled ----
+    chaos = obs.get("chaos") or {}
+    if not chaos:
+        fail("observability.chaos is empty (run the chaos sweep: "
+             "LIX_CHAOS_ONLY=1 python -m benchmarks.dynamic_index)")
+    rec = {k: v for k, v in chaos.items() if k.startswith("chaos_recovery")}
+    if not rec:
+        fail("observability.chaos has no recovery rows")
+    for label, row in rec.items():
+        for field in ("shards", "save_ms", "recovery_ms", "bit_exact"):
+            if field not in row:
+                fail(f"chaos[{label!r}] missing {field!r}")
+        if not row["bit_exact"]:
+            fail(f"chaos[{label!r}]: restored service was NOT bit-exact "
+                 "against pre-crash answers")
+        if row["recovery_ms"] <= 0:
+            fail(f"chaos[{label!r}] recorded no recovery time")
+    l1 = chaos.get("chaos_stall_L1")
+    l4 = chaos.get("chaos_stall_L4")
+    if not (l1 and l4):
+        fail("observability.chaos missing stall rows (L1/L4)")
+    for label, row in (("chaos_stall_L1", l1), ("chaos_stall_L4", l4)):
+        for field in ("worst_insert_ms", "median_insert_ms", "compactions",
+                      "write_stalls", "write_stall_s"):
+            if field not in row:
+                fail(f"chaos[{label!r}] missing {field!r}")
+    if l4["compactions"] >= l1["compactions"]:
+        fail(f"chaos: leveled compactor merged {l4['compactions']}x vs "
+             f"{l1['compactions']}x single-level — the deferred merge "
+             "schedule (the bounded-write-stall mechanism) is broken")
+
     # ---- Chrome trace dump ----------------------------------------------
     trace_path = obs.get("trace_file") or ""
     n_events = 0
@@ -131,7 +165,8 @@ def main() -> None:
         f"check_obs_artifact: OK — {n_ops} latency rows over "
         f"{len(lat)} sweeps, {n_rows} dispatch rows over "
         f"{len(disp)} runs, {n_tenants} tenant rows over "
-        f"{len(serving)} serve sweeps (SLO pass), {n_events} trace events"
+        f"{len(serving)} serve sweeps (SLO pass), {len(rec)} bit-exact "
+        f"recoveries + leveled stall rows, {n_events} trace events"
     )
 
 

@@ -36,6 +36,14 @@ Four questions, all ns/lookup CSV rows:
      acknowledged insert, and pins the coalesced-read dispatch count —
      also runnable alone via LIX_SERVE_ONLY=1 (the CI benchmark-smoke
      job does).
+  8. What does a crash cost, and how bad is the worst write stall?
+     `chaos_sweep` checkpoints a churned K-shard service, drops every
+     in-memory structure, restores from disk and times recovery to the
+     first bit-exact read; then it measures worst-case single-insert
+     latency under the leveled compactor (max_delta_levels 1 vs 4) so
+     the bounded-write-stall claim is a recorded number, not a test
+     assertion only — also runnable alone via LIX_CHAOS_ONLY=1 (the CI
+     benchmark-smoke job does).
 """
 
 from __future__ import annotations
@@ -77,6 +85,7 @@ _JSON_ROWS: list = []
 # QPS/SLO summaries keyed by client count
 _OBS_LATENCY: dict = {}
 _SERVING: dict = {}
+_CHAOS: dict = {}
 _RUN_LABEL = "main"
 
 
@@ -127,12 +136,18 @@ def write_json() -> None:
                 k: v for k, v in old_obs.get("serving", {}).items()
                 if k not in _SERVING
             }
+            data["observability"]["chaos"] = {
+                k: v for k, v in old_obs.get("chaos", {}).items()
+                if k not in _CHAOS
+            }
         except (OSError, ValueError, KeyError):
             pass
     data["rows"] += _JSON_ROWS
     data["observability"]["op_latency"].update(_OBS_LATENCY)
     if _SERVING:
         data["observability"].setdefault("serving", {}).update(_SERVING)
+    if _CHAOS:
+        data["observability"].setdefault("chaos", {}).update(_CHAOS)
     data["observability"]["dispatch"][_RUN_LABEL] = (
         kernels_ops.dispatch_summary()
     )
@@ -456,6 +471,118 @@ def serve_sweep(raw=None, ks=None) -> None:
     record_latency("serve_service", svc.metrics)
 
 
+def chaos_sweep(raw=None, ks=None) -> None:
+    """Question 8: availability numbers.
+
+    Recovery: churn a K-shard service (staged inserts + tombstones so
+    the checkpoint must cover delta WAL slices, not just snapshots),
+    `IndexCheckpointer.save`, drop ALL in-memory state, restore, and
+    time to the first read — which must be bit-exact against the
+    pre-crash answers or the row is refused.
+
+    Write stall: identical insert bursts through max_delta_levels=1
+    (historical freeze-then-merge every fill) and =4 (merge deferred
+    until four levels); the worst single-burst latency is the stall the
+    leveled compactor bounds, and the compaction counts prove the merge
+    schedule."""
+    import shutil
+    import tempfile
+    import time
+
+    from repro.distributed.fault_tolerance import IndexCheckpointer
+
+    rng = np.random.default_rng(3)
+    if raw is None:  # standalone (LIX_CHAOS_ONLY) path
+        raw = gen_weblogs(BENCH_N)
+        ks = make_keyset(raw)
+
+    # ---- crash recovery: checkpoint -> kill -> restore -> first read -----
+    fresh = np.setdiff1d(
+        rng.integers(0, 1 << 52, 3 * DELTA_CAPACITY).astype(np.float64),
+        ks.raw,
+    )
+    for k in (1, 4, 8):
+        cfg = ServiceConfig(delta_capacity=DELTA_CAPACITY, num_shards=k)
+        svc = ShardedIndexService(ks.raw, cfg)
+        svc.insert(fresh[: 2 * DELTA_CAPACITY])  # crosses a compaction
+        svc.delete(rng.choice(ks.raw, DELTA_CAPACITY // 2, replace=False))
+        svc.insert(fresh[2 * DELTA_CAPACITY :])  # leaves staged deltas
+        probe = np.concatenate([
+            raw[rng.integers(0, ks.n, 384)], fresh[rng.integers(0, fresh.size, 128)],
+        ])
+        want = svc.contains(probe)
+        root = tempfile.mkdtemp(prefix="lix_chaos_")
+        try:
+            ckpt = IndexCheckpointer(root, keep_last=1)
+            t0 = time.perf_counter()
+            ckpt.save(1, svc)
+            t_save = time.perf_counter() - t0
+            del svc  # SIGKILL simulation
+            t0 = time.perf_counter()
+            back, _ = ckpt.restore(cfg)
+            got = back.contains(probe)  # recovery ends at the first read
+            t_rec = time.perf_counter() - t0
+            bit_exact = bool(np.array_equal(got, want))
+            if not bit_exact:
+                raise RuntimeError(
+                    f"chaos k={k}: restored service diverged from "
+                    "pre-crash answers"
+                )
+            label = f"chaos_recovery_k{k}"
+            record(
+                f"dynamic_index/{label}",
+                t_rec * 1e6,
+                f"shards={back.num_shards};save_ms={t_save * 1e3:.1f};"
+                f"recovery_ms={t_rec * 1e3:.1f};bit_exact={bit_exact}",
+                recovery_ms=round(t_rec * 1e3, 2),
+            )
+            _CHAOS[label] = {
+                "shards": int(back.num_shards),
+                "save_ms": round(t_save * 1e3, 2),
+                "recovery_ms": round(t_rec * 1e3, 2),
+                "bit_exact": bit_exact,
+            }
+            record_latency(label, back.metrics)
+        finally:
+            shutil.rmtree(root, ignore_errors=True)
+
+    # ---- bounded write stall: leveled vs single-level compaction ---------
+    cap = 512
+    burst = int(cap * 0.8)
+    pool = np.setdiff1d(
+        rng.integers(0, 1 << 52, 40 * burst).astype(np.float64), ks.raw
+    )
+    for levels in (1, 4):
+        svc = IndexService(ks.raw, ServiceConfig(
+            delta_capacity=cap, max_delta_levels=levels))
+        lat = []
+        for r in range(16):
+            chunk = pool[r * burst : (r + 1) * burst]
+            t0 = time.perf_counter()
+            svc.insert(chunk)
+            lat.append(time.perf_counter() - t0)
+        worst, med = float(np.max(lat)), float(np.median(lat))
+        label = f"chaos_stall_L{levels}"
+        record(
+            f"dynamic_index/{label}",
+            worst * 1e6,
+            f"median_us={med * 1e6:.1f};stall_ratio={worst / max(med, 1e-9):.1f}x;"
+            f"compactions={svc.stats['compactions']};"
+            f"freezes={int(svc.metrics.counter('delta.freezes').value)};"
+            f"write_stalls={svc.stats['write_stalls']}",
+            max_delta_levels=levels,
+        )
+        _CHAOS[label] = {
+            "max_delta_levels": levels,
+            "worst_insert_ms": round(worst * 1e3, 3),
+            "median_insert_ms": round(med * 1e3, 3),
+            "compactions": int(svc.stats["compactions"]),
+            "write_stalls": int(svc.stats["write_stalls"]),
+            "write_stall_s": round(float(svc.stats["write_stall_s"]), 4),
+        }
+        record_latency(label, svc.metrics)
+
+
 def main() -> None:
     rng = np.random.default_rng(0)
     raw = gen_weblogs(BENCH_N)
@@ -554,6 +681,7 @@ def main() -> None:
     sharded_sweep(raw, ks)
     scan_sweep(raw, ks)
     serve_sweep(raw, ks)
+    chaos_sweep(raw, ks)
 
 
 if __name__ == "__main__":
@@ -567,6 +695,9 @@ if __name__ == "__main__":
     elif os.environ.get("LIX_SERVE_ONLY", "0") == "1":
         _RUN_LABEL = "serve_sweep"
         serve_sweep()
+    elif os.environ.get("LIX_CHAOS_ONLY", "0") == "1":
+        _RUN_LABEL = "chaos_sweep"
+        chaos_sweep()
     else:
         main()
     write_json()

@@ -106,16 +106,31 @@ def save_checkpoint(
     return final
 
 
-def _gc(root: str, keep_last: int) -> None:
+_TMP_TTL_S = 15 * 60.0  # a healthy writer publishes well within this
+
+
+def _gc(root: str, keep_last: int, tmp_ttl_s: float = _TMP_TTL_S) -> None:
     steps = sorted(
         d for d in os.listdir(root)
         if d.startswith("step_") and not d.endswith(".tmp")
     )
     for d in steps[:-keep_last]:
         shutil.rmtree(os.path.join(root, d), ignore_errors=True)
+    # age-gated tmp sweep: another writer's IN-PROGRESS step also looks
+    # like `step_*.tmp` (replicated savers share the root), so only tmp
+    # dirs old enough to be certainly-abandoned crashes are collected —
+    # unconditionally rm -rf'ing here used to destroy concurrent saves
+    now = time.time()
     for d in os.listdir(root):
-        if d.endswith(".tmp"):
-            shutil.rmtree(os.path.join(root, d), ignore_errors=True)
+        if not d.endswith(".tmp"):
+            continue
+        p = os.path.join(root, d)
+        try:
+            age = now - os.path.getmtime(p)
+        except OSError:
+            continue  # racing writer published or cleaned it already
+        if age >= tmp_ttl_s:
+            shutil.rmtree(p, ignore_errors=True)
 
 
 def latest_step(root: str) -> Optional[int]:
@@ -131,7 +146,19 @@ def latest_step(root: str) -> Optional[int]:
         int(d[5:]) for d in os.listdir(root)
         if d.startswith("step_") and not d.endswith(".tmp")
     )
-    return steps[-1] if steps else None
+    if not steps:
+        return None
+    # heal the pointer atomically so every later reader takes the fast
+    # path instead of re-walking the directory; best-effort (a reader
+    # may lack write permission on the checkpoint root)
+    try:
+        heal = os.path.join(root, "LATEST.tmp")
+        with open(heal, "w") as f:
+            f.write(str(steps[-1]))
+        os.replace(heal, p)
+    except OSError:
+        pass
+    return steps[-1]
 
 
 def restore_checkpoint(
@@ -181,7 +208,13 @@ def restore_checkpoint(
 
 @dataclasses.dataclass
 class StragglerPolicy:
-    """EWMA step-time tracker; flags steps slower than factor×baseline."""
+    """EWMA step-time tracker; flags steps slower than factor×baseline.
+
+    Warm-up is median-seeded: the first ``min_samples`` observations are
+    collected raw and the baseline is their median, so a straggler that
+    happens to land during warm-up (compilation, cold caches make that
+    the COMMON case) cannot inflate the EWMA and mask every later slow
+    step behind a bloated factor×baseline threshold."""
 
     factor: float = 3.0
     alpha: float = 0.1
@@ -189,14 +222,13 @@ class StragglerPolicy:
     _ewma: float = 0.0
     _n: int = 0
     events: int = 0
+    _warm: List[float] = dataclasses.field(default_factory=list)
 
     def observe(self, step_time: float) -> bool:
         self._n += 1
         if self._n <= self.min_samples:
-            self._ewma = (
-                step_time if self._n == 1
-                else (1 - self.alpha) * self._ewma + self.alpha * step_time
-            )
+            self._warm.append(step_time)
+            self._ewma = float(np.median(self._warm))
             return False
         slow = step_time > self.factor * self._ewma
         if slow:
@@ -204,6 +236,147 @@ class StragglerPolicy:
         else:
             self._ewma = (1 - self.alpha) * self._ewma + self.alpha * step_time
         return slow
+
+
+class IndexCheckpointer:
+    """Crash-safe checkpoints of a `ShardedIndexService` (the always-on
+    writability restart path).
+
+    Each step directory is self-contained and covers the FULL service
+    state mid-churn, without flushing or compacting anything:
+
+        <root>/step_NNNNNNNNNN/
+            manifest.json        — shard count, per-shard snapshot
+                                   version + live count, written_at
+            router.npz           — LearnedRouter (boundaries + model)
+            shard-XX/
+                snapshot-vvvvvv.npz  — the shard's current snapshot in
+                                       the VersionManager wire format
+                delta.npz            — the shard's delta WAL slice: the
+                                       level stack (frozen + active)
+                                       collapsed by `collapse_levels`
+
+    Publication reuses the training-checkpoint protocol above (tmp dir
+    -> fsync'd files -> os.replace -> LATEST last -> age-gated GC), so
+    a kill at ANY point leaves either a complete checkpoint or an
+    ignorable tmp.  Restore rebuilds each shard through
+    `VersionManager.load_latest` on its `shard-XX/` dir — the same
+    snapshot GC/versioning machinery the live service uses — then
+    re-stages the WAL slice as the shard's active delta, so the
+    restored service answers bit-exactly like the killed one."""
+
+    def __init__(self, root: str, *, every: int = 1, keep_last: int = 3):
+        self.root = root
+        self.every = every
+        self.keep_last = keep_last
+
+    def should_save(self, step: int) -> bool:
+        return step > 0 and step % self.every == 0
+
+    def save(self, step: int, svc) -> str:
+        from repro.index_service.delta import collapse_levels
+        from repro.index_service.sharded import _ROUTER_FILE, _SHARD_DIR
+
+        os.makedirs(self.root, exist_ok=True)
+        name = f"step_{step:010d}"
+        tmp = os.path.join(self.root, name + ".tmp")
+        final = os.path.join(self.root, name)
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        manifest: Dict[str, Any] = {
+            "step": step,
+            "written_at": time.time(),
+            "num_shards": svc.num_shards,
+            "shards": [],
+        }
+        for s, shard in enumerate(svc.shards):
+            # one consistent capture per shard: the snapshot and the
+            # collapsed delta slice come from the SAME (snap, frozen,
+            # active) triple, so the checkpoint is a point-in-time view
+            # even while writers keep staging
+            snap, frozen, active = shard._state()
+            sub = os.path.join(tmp, _SHARD_DIR.format(s))
+            snap_path = snap.save(sub)
+            ins, vals, dels = collapse_levels(snap.keys.raw, frozen, active)
+            wal = {"ins": ins, "dels": dels}
+            if vals is not None:
+                wal["vals"] = vals
+            with open(os.path.join(sub, "delta.npz"), "wb") as f:
+                np.savez(f, **wal)
+            manifest["shards"].append({
+                "dir": _SHARD_DIR.format(s),
+                "snapshot": os.path.basename(snap_path),
+                "snapshot_version": int(snap.version),
+                "wal_inserts": int(ins.size),
+                "wal_deletes": int(dels.size),
+            })
+        svc.router.save(os.path.join(tmp, _ROUTER_FILE))
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+        with open(os.path.join(self.root, "LATEST.tmp"), "w") as f:
+            f.write(str(step))
+        os.replace(
+            os.path.join(self.root, "LATEST.tmp"),
+            os.path.join(self.root, "LATEST"),
+        )
+        _gc(self.root, self.keep_last)
+        return final
+
+    def restore(self, config=None):
+        """(service, step) from the newest complete checkpoint; raises
+        FileNotFoundError when none exists."""
+        import dataclasses as dc
+
+        from repro.index_service.delta import DeltaBuffer
+        from repro.index_service.router import LearnedRouter
+        from repro.index_service.service import IndexService, ServiceConfig
+        from repro.index_service.sharded import (
+            _ROUTER_FILE,
+            _SHARD_DIR,
+            ShardedIndexService,
+        )
+        from repro.index_service.snapshot import VersionManager
+
+        step = latest_step(self.root)
+        if step is None:
+            raise FileNotFoundError(f"no index checkpoint under {self.root}")
+        d = os.path.join(self.root, f"step_{step:010d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        router = LearnedRouter.load(os.path.join(d, _ROUTER_FILE))
+        config = config or ServiceConfig()
+        config = dc.replace(
+            config, num_shards=router.num_shards, snapshot_dir=None
+        )
+        svc = ShardedIndexService(
+            np.empty(0), config, _router=router, _shards=[]
+        )
+        shards = []
+        for entry in manifest["shards"]:
+            sub = os.path.join(d, entry["dir"])
+            mgr = VersionManager.load_latest(sub, keep=config.keep_snapshots)
+            # the checkpoint dir is immutable history: detach it so a
+            # later compaction's save/GC cycle can never mutate it
+            mgr.directory = None
+            cfg = dc.replace(config, num_shards=1, snapshot_dir=None)
+            shard = IndexService(np.empty(0), cfg, _manager=mgr)
+            with np.load(os.path.join(sub, "delta.npz")) as z:
+                ins, dels = z["ins"], z["dels"]
+                vals = z["vals"] if "vals" in z.files else np.zeros(
+                    ins.shape, np.int64
+                )
+            if ins.size or dels.size:
+                shard._active = DeltaBuffer.from_arrays(
+                    ins, vals, dels, capacity=cfg.delta_capacity
+                )
+                shard._plane.drop()
+            shards.append(shard)
+        svc._shards = shards
+        return svc, step
 
 
 class CheckpointManager:

@@ -65,6 +65,17 @@ def merge_delta(
     vals = None
     if snap.vals is not None:
         vals = np.concatenate([snap.vals[keep], delta.ins_vals])[order]
+    if merged.size:
+        # a staged insert can update a key still live in the base (no
+        # tombstone); the stable sort placed the base row first, so
+        # keeping the LAST of each equal-key run is last-write-wins
+        uniq = np.empty(merged.size, bool)
+        uniq[:-1] = merged[1:] != merged[:-1]
+        uniq[-1] = True
+        if not uniq.all():
+            merged = merged[uniq]
+            if vals is not None:
+                vals = vals[uniq]
     return merged, vals
 
 

@@ -34,9 +34,14 @@ of two so jit retraces only per capacity bucket, never per write.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Optional, Sequence, Tuple, Union
 
 import numpy as np
+
+# helper signatures accept a single frozen buffer (the historical
+# two-level shape), an oldest-first sequence of frozen levels (the
+# leveled compactor's stack), or None
+Levels = Union[None, "DeltaBuffer", Sequence["DeltaBuffer"]]
 
 
 def _next_pow2(x: int) -> int:
@@ -233,9 +238,26 @@ class DeltaBuffer:
         self._version = v + 1
 
 
+def iter_levels(
+    frozen: Levels, active: Optional[DeltaBuffer] = None
+) -> Tuple[DeltaBuffer, ...]:
+    """Flatten a ``frozen`` argument — None, one buffer, or an
+    oldest-first stack of frozen buffers — plus the optional active
+    buffer into the oldest-first tuple the layered-override rule walks."""
+    if frozen is None:
+        levels: Tuple[DeltaBuffer, ...] = ()
+    elif isinstance(frozen, DeltaBuffer):
+        levels = (frozen,)
+    else:
+        levels = tuple(frozen)
+    if active is not None:
+        levels += (active,)
+    return levels
+
+
 def live_mask(
     in_base: np.ndarray,
-    frozen: Optional[DeltaBuffer],
+    frozen: Levels,
     active: Optional[DeltaBuffer],
     keys: np.ndarray,
 ) -> np.ndarray:
@@ -245,9 +267,7 @@ def live_mask(
     tombstone alone marks dead; an unmentioned key inherits."""
     q = np.asarray(keys, np.float64)
     live = np.asarray(in_base, bool).copy()
-    for level in (frozen, active):
-        if level is None:
-            continue
+    for level in iter_levels(frozen, active):
         ins = member(level.ins_keys, q)
         dead = member(level.del_keys, q)
         live = np.where(ins, True, np.where(dead, False, live))
@@ -263,15 +283,13 @@ def member(sorted_arr: np.ndarray, q: np.ndarray) -> np.ndarray:
 
 
 def count_less(
-    frozen: Optional[DeltaBuffer], active: Optional[DeltaBuffer], q: np.ndarray
+    frozen: Levels, active: Optional[DeltaBuffer], q: np.ndarray
 ) -> np.ndarray:
     """Exact host-side Σ(+1/-1) over all staged entries < q (float64 —
     immune to the float32 collisions the device path tolerates)."""
     q = np.asarray(q, np.float64)
     net = np.zeros(q.shape, np.int64)
-    for level in (frozen, active):
-        if level is None:
-            continue
+    for level in iter_levels(frozen, active):
         net += np.searchsorted(level.ins_keys, q, side="left")
         net -= np.searchsorted(level.del_keys, q, side="left")
     return net
@@ -279,7 +297,7 @@ def count_less(
 
 def collapse_levels(
     base_raw: np.ndarray,
-    frozen: Optional[DeltaBuffer],
+    frozen: Levels,
     active: Optional[DeltaBuffer],
 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
     """Collapse the (frozen, active) level stack against base liveness
@@ -306,10 +324,10 @@ def collapse_levels(
 
 def _collapse_levels_inner(
     base_raw: np.ndarray,
-    frozen: Optional[DeltaBuffer],
+    frozen: Levels,
     active: Optional[DeltaBuffer],
 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
-    levels = [lv for lv in (frozen, active) if lv is not None and len(lv)]
+    levels = [lv for lv in iter_levels(frozen, active) if len(lv)]
     empty = np.empty(0, np.float64)
     if not levels:
         return empty, np.empty(0, np.int64), empty
@@ -332,7 +350,7 @@ def _collapse_levels_inner(
 
 
 def combine_for_device(
-    frozen: Optional[DeltaBuffer],
+    frozen: Levels,
     active: Optional[DeltaBuffer],
     normalize,
     *,
@@ -351,9 +369,7 @@ def combine_for_device(
     duplicate groups.
     """
     parts, signs = [], []
-    for level in (frozen, active):
-        if level is None:
-            continue
+    for level in iter_levels(frozen, active):
         parts += [level.ins_keys, level.del_keys]
         signs += [
             np.ones(level.ins_keys.size, np.int32),

@@ -27,25 +27,28 @@ from typing import Optional, Tuple
 
 import jax.numpy as jnp
 
-from repro.index_service.delta import combine_for_device
+from repro.index_service.delta import combine_for_device, iter_levels
 from repro.index_service.scan import device_scan_slab
 
 
 def scan_plane_key(snap, frozen, active) -> tuple:
-    """THE cache-coherence key for device scan planes: snapshot and
-    delta-buffer identities plus delta mutation versions.  Both the
-    unsharded plane cache and the sharded per-shard slab diff use this
-    one definition — a new delta level added here invalidates every
-    plane consistently."""
-    return (
-        snap, frozen, -1 if frozen is None else frozen.version,
-        active, active.version,
+    """THE cache-coherence key for device scan planes: snapshot
+    identity plus (identity, mutation version) per delta level —
+    ``frozen`` may be None, one buffer, or the leveled compactor's
+    oldest-first stack.  Both the unsharded plane cache and the sharded
+    per-shard slab diff use this one definition — a new delta level
+    added here invalidates every plane consistently."""
+    return (snap,) + tuple(
+        (lv, lv.version) for lv in iter_levels(frozen, active)
     )
 
 
 def scan_plane_key_eq(a: tuple, b: tuple) -> bool:
-    return (a[0] is b[0] and a[1] is b[1] and a[2] == b[2]
-            and a[3] is b[3] and a[4] == b[4])
+    if len(a) != len(b) or a[0] is not b[0]:
+        return False
+    return all(
+        x[0] is y[0] and x[1] == y[1] for x, y in zip(a[1:], b[1:])
+    )
 
 
 class DevicePlane:

@@ -45,6 +45,7 @@ from repro.index_service.delta import (
     DeltaBuffer,
     collapse_levels,
     count_less,
+    iter_levels,
     live_mask,
     member,
 )
@@ -90,6 +91,12 @@ class ServiceConfig:
     # behaviour.
     compact_rate_gain: float = 0.0
     compact_rate_floor: float = 0.2
+    # leveled compaction: how many frozen delta levels may pile up
+    # before a merge into the base is forced.  1 (the default) keeps
+    # the historical freeze-then-compact-immediately behaviour; larger
+    # values turn most capacity fills into an O(1) freeze (bounded
+    # write stall) and amortize the O(n) merge over L fills.
+    max_delta_levels: int = 1
 
 
 def _default_rmi(n: int) -> RMIConfig:
@@ -115,11 +122,12 @@ _STATS_KEYS: Tuple[str, ...] = (
     "range", "range_s",
     "insert", "insert_s", "insert_applied",
     "delete", "delete_s", "delete_applied",
-    "bloom_screened",
+    "bloom_screened", "bloom_fp",
     "scan", "scan_s", "scan_pages", "scan_rows",
     "lookup_batch", "lookup_batch_s",
     "scan_batch", "scan_batch_s",
     "compactions", "compact_s", "compact_stalls",
+    "write_stalls", "write_stall_s",
     "leaves_refit", "cold_builds",
 )
 
@@ -169,7 +177,11 @@ class IndexService:
             config=cfg.rmi, bloom_fpr=cfg.bloom_fpr, warm=True
         )
         self._active = DeltaBuffer(cfg.delta_capacity)
-        self._frozen: Optional[DeltaBuffer] = None
+        # oldest-first stack of frozen (immutable) delta levels waiting
+        # to merge into the base; the historical `_frozen` single slot
+        # survives as a read-only property over this list
+        self._levels: List[DeltaBuffer] = []
+        self._compacting = False  # a merge of the stack is in flight
         self._lock = threading.RLock()
         self._worker: Optional[threading.Thread] = None
         self._worker_error: Optional[BaseException] = None
@@ -197,6 +209,10 @@ class IndexService:
         )
         self._freeze_ctr = self.metrics.counter("delta.freezes")
         self._swap_ctr = self.metrics.counter("snapshot.swaps")
+        self._level_gauge = self.metrics.gauge("delta.levels")
+        self._op_hist["write_stall"] = self.metrics.histogram(
+            "op.write_stall.latency_s"
+        )
         self.compaction_log: List[CompactionStats] = []
 
     def _observe_op(self, op: str, seconds: float) -> None:
@@ -224,14 +240,27 @@ class IndexService:
         """Live key count: base minus tombstones plus staged inserts."""
         snap, frozen, active = self._state()
         n = snap.n
-        for level in (frozen, active):
-            if level is not None:
-                n += level.num_inserts - level.num_deletes
+        for level in iter_levels(frozen, active):
+            n += level.num_inserts - level.num_deletes
         return n
 
     @property
     def delta_fill(self) -> float:
         return self._active.fill
+
+    @property
+    def _frozen(self):
+        """Legacy single-frozen view of the level stack: None when
+        empty, the lone buffer, or the oldest-first tuple — every delta
+        helper (`iter_levels`) accepts any of the three shapes."""
+        lv = self._levels
+        if not lv:
+            return None
+        return lv[0] if len(lv) == 1 else tuple(lv)
+
+    @property
+    def num_delta_levels(self) -> int:
+        return len(self._levels)
 
     def _state(self):
         with self._lock:
@@ -286,25 +315,41 @@ class IndexService:
         return rank
 
     def contains(self, keys) -> np.ndarray:
-        """Existence check: Bloom screen (base) + exact delta overlay."""
+        """Existence check: delta-absorbing Bloom screen.
+
+        Keys mentioned by any delta level resolve exactly from the
+        levels (youngest decides) — the base Bloom is never consulted
+        for them, so tombstoned keys cannot surface as stale-filter
+        positives between compactions.  Unmentioned keys are base-only
+        and go through the snapshot's Bloom (rebuilt over the merged
+        key set at every compaction boundary); ``bloom_fp`` counts the
+        filter's true false positives against that refreshed state."""
         t0 = time.perf_counter()
         with obs_trace.span("service.contains", cat="service"):
             q = np.atleast_1d(np.asarray(keys, np.float64))
             snap, frozen, active, _, _ = self._capture()
             mentioned = np.zeros(q.shape, bool)
-            for level in (frozen, active):
-                if level is not None:
-                    mentioned |= member(level.ins_keys, q)
-                    mentioned |= member(level.del_keys, q)
-            if snap.bloom is not None:
-                maybe = snap.bloom.contains(q) | mentioned
-                self.stats["bloom_screened"] += int((~maybe).sum())
-            else:
-                maybe = np.ones(q.shape, bool)
+            for level in iter_levels(frozen, active):
+                mentioned |= member(level.ins_keys, q)
+                mentioned |= member(level.del_keys, q)
             out = np.zeros(q.shape, bool)
-            if maybe.any():
-                _, live = self._rank_exact(q[maybe])
-                out[maybe] = live
+            if mentioned.any():
+                qm = q[mentioned]
+                out[mentioned] = live_mask(
+                    member(snap.keys.raw, qm), frozen, active, qm
+                )
+            rest = np.flatnonzero(~mentioned)
+            if snap.bloom is not None and rest.size:
+                maybe = snap.bloom.contains(q[rest])
+                self.stats["bloom_screened"] += int((~maybe).sum())
+                rest = rest[maybe]
+            if rest.size:
+                _, live = self._rank_exact(q[rest])
+                out[rest] = live
+                if snap.bloom is not None:
+                    # passed the filter but not in the base: a genuine
+                    # false positive of the *current* (refreshed) Bloom
+                    self.stats["bloom_fp"] += int((~live).sum())
         dt = time.perf_counter() - t0
         self.stats["contains"] += q.size
         self.stats["contains_hits"] += int(out.sum())
@@ -498,7 +543,15 @@ class IndexService:
                 room = self._active.capacity - len(self._active)
             if room <= 0:
                 stalls = self.stats["compact_stalls"]
+                # the write is genuinely blocked until the freeze (O(1)
+                # with level headroom) or merge completes — this is THE
+                # write-stall window the leveled compactor bounds
+                t_stall = time.perf_counter()
                 self.maybe_compact(wait=True)
+                dt_stall = time.perf_counter() - t_stall
+                self.stats["write_stalls"] += 1
+                self.stats["write_stall_s"] += dt_stall
+                self._observe_op("write_stall", dt_stall)
                 if self.stats["compact_stalls"] > stalls:
                     with self._lock:
                         if len(self._active) >= 4 * self.config.delta_capacity:
@@ -522,17 +575,14 @@ class IndexService:
         return applied
 
     def _live_below_many(self, q: np.ndarray) -> np.ndarray:
-        """Liveness in base + frozen (the levels under the active delta).
-        Callers hold the lock, so (snapshot, frozen) are coherent."""
+        """Liveness in base + every frozen level (the levels under the
+        active delta).  Callers hold the lock, so (snapshot, levels)
+        are coherent."""
         snap = self._mgr.current()
         raw = snap.keys.raw
         i = np.clip(np.searchsorted(raw, q), 0, raw.size - 1)
-        live = raw[i] == q
-        if self._frozen is not None:
-            ins = member(self._frozen.ins_keys, q)
-            dead = member(self._frozen.del_keys, q)
-            live = np.where(ins, True, np.where(dead, False, live))
-        return live
+        in_base = raw[i] == q
+        return live_mask(in_base, tuple(self._levels), None, q)
 
     # ---- mixed batched front end ----------------------------------------
     def execute(self, ops: Sequence[Tuple]) -> List:
@@ -590,30 +640,42 @@ class IndexService:
             # block only when staging could otherwise overflow
             self.maybe_compact(wait=len(self._active) >= self.config.delta_capacity - 2)
 
-    def maybe_compact(self, wait: bool = False) -> bool:
-        """Freeze the active delta and compact it into a new snapshot
-        version.  Returns True if a compaction was started (or ran)."""
-        if self._frozen is not None:  # one compaction in flight at a time
-            if not wait:
+    def maybe_compact(self, wait: bool = False, drain: bool = False) -> bool:
+        """Freeze the active delta onto the frozen-level stack, and
+        merge the stack into a new snapshot version when it reaches
+        ``max_delta_levels`` (or when ``drain`` forces the merge).
+        With the default of one level this is the historical
+        freeze-then-compact; with more levels most capacity fills cost
+        only the O(1) freeze and the O(n) merge happens once per L
+        fills.  ``wait`` blocks on an in-flight merge instead of
+        returning False.  Returns True if a freeze or merge happened."""
+        if self._compacting:  # one merge of the stack in flight at a time
+            if not wait and not drain:
                 return False
             self._join_worker()
-            if self._frozen is not None:  # inline compaction pending commit
+            if self._compacting:  # worker died before commit: retry inline
                 self._run_compaction()
-            if self._frozen is not None:
-                # the retry failed too: keep the frozen delta (its
-                # tombstones/inserts must NOT be dropped by the freeze
-                # below) and surface the recorded error
-                self._raise_worker_error()
-                return False
+        froze = False
         with self._lock:
-            if len(self._active) == 0:
-                return False
-            self._frozen = self._active
-            self._active = DeltaBuffer(self.config.delta_capacity)
-            self._plane.drop()  # release the retired delta's slab
-            self._freeze_ctr.add(1)
-        obs_trace.instant("delta.freeze", cat="compaction")
-        if self.config.background and not wait:
+            if len(self._active):
+                self._levels.append(self._active)
+                self._active = DeltaBuffer(self.config.delta_capacity)
+                self._plane.drop()  # release the retired delta's slab
+                self._freeze_ctr.add(1)
+                self._level_gauge.set(len(self._levels))
+                froze = True
+            merge = bool(self._levels) and (
+                drain
+                or len(self._levels) >= max(1, self.config.max_delta_levels)
+            )
+            if merge:
+                self._compacting = True
+        if froze:
+            obs_trace.instant("delta.freeze", cat="compaction",
+                              levels=len(self._levels))
+        if not merge:
+            return froze
+        if self.config.background and not (wait or drain):
             self._worker = threading.Thread(
                 target=self._run_compaction, daemon=True
             )
@@ -623,13 +685,13 @@ class IndexService:
         return True
 
     def flush(self) -> None:
-        """Drain: wait for in-flight compaction, then compact any
-        remaining staged writes synchronously.  A min_keys stall
-        (nearly all keys deleted) is not an error: the staged entries
-        stay in the delta (reads remain exact) and ``stats``
-        records the stall; `save` refuses until it clears."""
+        """Drain: wait for in-flight compaction, then merge every
+        frozen level plus any remaining staged writes synchronously.
+        A min_keys stall (nearly all keys deleted) is not an error: the
+        staged entries stay in the delta (reads remain exact) and
+        ``stats`` records the stall; `save` refuses until it clears."""
         self._join_worker()
-        self.maybe_compact(wait=True)
+        self.maybe_compact(wait=True, drain=True)
         self._raise_worker_error()
 
     def _run_compaction(self) -> None:
@@ -643,13 +705,22 @@ class IndexService:
     def _run_compaction_inner(self) -> None:
         try:
             snap = self._mgr.current()
+            with self._lock:
+                # the merge covers exactly this oldest-first prefix of
+                # the stack (frozen levels are immutable, so the refs
+                # stay valid outside the lock); the commit removes the
+                # prefix so any level frozen mid-merge survives
+                work = tuple(self._levels)
+            if not work:
+                return
+            net = sum(lv.num_inserts - lv.num_deletes for lv in work)
             compactor = self._compactor
             if self.config.rmi is None:
                 # auto-sized leaves: re-size (cold build) when the live
                 # key count drifts past the warm-start regime, else
                 # keys-per-leaf — and with it every search window —
                 # grows without bound
-                est = snap.n + self._frozen.num_inserts - self._frozen.num_deletes
+                est = snap.n + net
                 target = max(16, est // 64)
                 cur = snap.index.config.num_leaves
                 if not (cur // 2 <= target <= cur * 2):
@@ -660,11 +731,20 @@ class IndexService:
                         bloom_fpr=self.config.bloom_fpr,
                         warm=False,
                     )
-            new, stats = compactor.compact(snap, self._frozen)
+            # collapse the whole frozen stack against the base into ONE
+            # effective level — the single-level merge then handles any
+            # stack depth, and cross-level shadowing (reinserts over
+            # older tombstones, value overwrites) resolves here
+            eff = (work[0] if len(work) == 1 else DeltaBuffer.from_arrays(
+                *collapse_levels(snap.keys.raw, work, None),
+                capacity=sum(lv.capacity for lv in work),
+            ))
+            new, stats = compactor.compact(snap, eff)
             with self._lock:
                 self._mgr.swap(new)
-                self._frozen = None
+                del self._levels[: len(work)]
                 self._plane.drop()  # drop the retired snapshot's plane
+                self._level_gauge.set(len(self._levels))
             self._swap_ctr.add(1)
             obs_trace.instant("snapshot.swap", cat="compaction",
                               version=new.version)
@@ -677,7 +757,7 @@ class IndexService:
             self.compaction_log.append(stats)
         except CompactionStall:
             # nearly all keys deleted: expected, not fatal.  Fold the
-            # frozen delta back into the active level
+            # whole frozen stack back into the active level
             # (collapsed, so layering stays exact), record the stall,
             # and keep serving — the next insert makes the merge
             # viable again; a write that can't find room raises in
@@ -685,24 +765,26 @@ class IndexService:
             with self._lock:
                 self._active = DeltaBuffer.from_arrays(
                     *collapse_levels(
-                        snap.keys.raw, self._frozen, self._active
+                        snap.keys.raw, tuple(self._levels), self._active
                     ),
                     # preserve any stall headroom `_staged` granted
-                    # (it may sit on either level after the freeze) —
+                    # (it may sit on any level after the freeze) —
                     # resetting it would starve the very writes that
                     # make the merge viable again
                     capacity=max(
-                        self.config.delta_capacity,
-                        self._active.capacity,
-                        self._frozen.capacity,
+                        [self.config.delta_capacity, self._active.capacity]
+                        + [lv.capacity for lv in self._levels]
                     ),
                 )
-                self._frozen = None
+                self._levels.clear()
                 self._plane.drop()
+                self._level_gauge.set(0)
             self.stats["compact_stalls"] += 1
             obs_trace.instant("compaction.stall", cat="compaction")
         except BaseException as e:  # surfaced on the caller thread
             self._worker_error = e
+        finally:
+            self._compacting = False
 
     def _join_worker(self) -> None:
         w = self._worker
@@ -754,6 +836,7 @@ class IndexService:
                 "hit_rate": (s["contains_hits"] / s["contains"]
                              if s["contains"] else 0.0),
                 "bloom_screened": int(s["bloom_screened"]),
+                "bloom_fp": int(s["bloom_fp"]),
             },
             "range": per_op("range"),
             "scan": {
@@ -770,5 +853,8 @@ class IndexService:
                 "stalls": int(s["compact_stalls"]),
                 "leaves_refit": int(s["leaves_refit"]),
                 "cold_builds": int(s["cold_builds"]),
+                "delta_levels": len(self._levels),
+                "write_stalls": int(s["write_stalls"]),
+                "write_stall_s": round(s["write_stall_s"], 4),
             },
         }

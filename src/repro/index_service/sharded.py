@@ -26,9 +26,12 @@ oracle through 100k+ interleaved ops — with K=1 *bit-identical* to the
 unsharded service.
 
 Boundary re-fit: when compactions leave a shard holding more than
-``shard_balance_factor`` x the mean live count, `rebalance()` drains
-every shard, re-cuts quantile boundaries over the merged live key set,
-and rebuilds the shards — keys change owners, never global ranks.
+``shard_balance_factor`` x the mean live count, `rebalance()` walks the
+ring with LOCAL steps — merge one adjacent pair, split one shard, or
+shift one boundary to its global live quantile — each step shipping
+only the two touched shards' `collapse_levels`-collapsed live slices
+while every other shard (and any pinned scan view) keeps serving.  Keys
+change owners, never global ranks; there is no global drain.
 
 Device path — every hot read is ONE dispatch over an INCREMENTAL
 device-plane cache:
@@ -67,7 +70,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.distributed.sharding import index_shard_mesh, place_index_shards
-from repro.index_service.delta import count_less, live_mask, member
+from repro.index_service.delta import (
+    count_less,
+    iter_levels,
+    live_mask,
+    member,
+)
 from repro.index_service.router import LearnedRouter
 from repro.index_service.scan import (
     _pad_bucket,
@@ -108,9 +116,22 @@ def _merge_level(keys, vals, level):
         keep = level.del_keys[i] != keys
     merged = np.concatenate([keys[keep], level.ins_keys])
     order = np.argsort(merged, kind="stable")
+    merged = merged[order]
     if vals is not None:
         vals = np.concatenate([vals[keep], level.ins_vals])[order]
-    return merged[order], vals
+    if merged.size:
+        # a staged insert can update a key still live in the base (no
+        # tombstone); the stable sort put the base row first, so keeping
+        # the LAST of each equal-key run is last-write-wins (same dedupe
+        # as compact.merge_delta)
+        uniq = np.empty(merged.size, bool)
+        uniq[:-1] = merged[1:] != merged[:-1]
+        uniq[-1] = True
+        if not uniq.all():
+            merged = merged[uniq]
+            if vals is not None:
+                vals = vals[uniq]
+    return merged, vals
 
 
 def _live_arrays(svc: "IndexService"):
@@ -118,7 +139,7 @@ def _live_arrays(svc: "IndexService"):
     (snapshot, frozen, active) capture — no compaction, no flush."""
     snap, frozen, active = svc._state()
     keys, vals = snap.keys.raw, snap.vals
-    for level in (frozen, active):
+    for level in iter_levels(frozen, active):
         keys, vals = _merge_level(keys, vals, level)
     return keys, vals
 
@@ -260,6 +281,10 @@ class ShardedIndexService:
             for k in ("lookup.hit", "lookup.miss", "scan.hit", "scan.miss")
         }
         self._refit_ctr = self.metrics.counter("router.refits")
+        self._reshape_ctr = {
+            k: self.metrics.counter(f"rebalance.{k}")
+            for k in ("splits", "merges", "shifts")
+        }
         # counters carried over from shards retired by rebalance(), so
         # aggregate stats and the version property stay monotone
         self._retired: Dict[str, int] = {"versions": 0}
@@ -406,13 +431,15 @@ class ShardedIndexService:
         return rank, live
 
     def contains(self, keys) -> np.ndarray:
-        """Existence check: per-shard Bloom + delta-mention screen on
-        the host (definite misses never touch the index), then the
-        surviving queries resolve through ONE `_ranks` device dispatch
-        — where the old path dispatched per shard.  Accounting matches
-        the unsharded service (count/hits/latency here; Bloom screens
-        credited to the owning shard, so aggregate screening telemetry
-        survives rebalances)."""
+        """Existence check, delta-absorbing like the unsharded service:
+        keys MENTIONED by a shard's delta levels resolve exactly on the
+        host (the stale-on-delete snapshot Bloom is never consulted for
+        them), unmentioned keys screen through the per-shard snapshot
+        Bloom — rebuilt over the live set at every compaction — and the
+        survivors resolve through ONE `_ranks` device dispatch.
+        Accounting matches the unsharded service (count/hits/latency
+        here; Bloom screens and genuine false positives credited to the
+        owning shard, so aggregate telemetry survives rebalances)."""
         t0 = time.perf_counter()
         q = np.atleast_1d(np.asarray(keys, np.float64))
         with obs_trace.span("service.contains", cat="service",
@@ -427,29 +454,51 @@ class ShardedIndexService:
 
     def _contains_inner(self, q: np.ndarray) -> np.ndarray:
         shard_of = self._router.route(q)
-        plan = self._device_plan()
+        caps = [s._state() for s in self._shards]
+        out = np.zeros(q.shape, bool)
         maybe = np.zeros(q.shape, bool)
-        for s, c in enumerate(plan.caps):
+        for s, (snap, frozen, active) in enumerate(caps):
             m = shard_of == s
             if not m.any():
                 continue
-            snap, frozen, active = c[0], c[1], c[2]
-            qm = q[m]
+            idx = np.flatnonzero(m)
+            qm = q[idx]
             mentioned = np.zeros(qm.shape, bool)
-            for level in (frozen, active):
-                if level is not None:
-                    mentioned |= member(level.ins_keys, qm)
-                    mentioned |= member(level.del_keys, qm)
+            for level in iter_levels(frozen, active):
+                mentioned |= member(level.ins_keys, qm)
+                mentioned |= member(level.del_keys, qm)
+            if mentioned.any():
+                # delta-absorbed: a mentioned key's liveness is decided
+                # by the youngest level that knows it (plus exact base
+                # membership) — no device dispatch, no Bloom
+                qmm = qm[mentioned]
+                out[idx[mentioned]] = live_mask(
+                    member(snap.keys.raw, qmm), frozen, active, qmm
+                )
+            rest = ~mentioned
             if snap.bloom is not None:
-                mb = snap.bloom.contains(qm) | mentioned
-                self._shards[s].stats["bloom_screened"] += int((~mb).sum())
+                mb = np.zeros(qm.shape, bool)
+                mb[rest] = snap.bloom.contains(qm[rest])
+                self._shards[s].stats["bloom_screened"] += int(
+                    (rest & ~mb).sum()
+                )
+                maybe[idx[mb]] = True
             else:
-                mb = np.ones(qm.shape, bool)
-            maybe[m] = mb
-        out = np.zeros(q.shape, bool)
+                maybe[idx[rest]] = True
         if maybe.any():
             _, lv = self._ranks(q[maybe])
             out[maybe] = lv
+            if not lv.all():
+                # survivors the filter passed that turned out dead are
+                # its GENUINE false positives (deleted keys no longer
+                # inflate this: they are delta-absorbed until the
+                # compaction boundary rebuilds the filter)
+                fp = np.flatnonzero(maybe)[~lv]
+                for s in np.unique(shard_of[fp]):
+                    if caps[int(s)][0].bloom is not None:
+                        self._shards[int(s)].stats["bloom_fp"] += int(
+                            (shard_of[fp] == s).sum()
+                        )
         return out
 
     def range_lookup(self, lo: float, hi: float) -> Tuple[int, int]:
@@ -901,15 +950,22 @@ class ShardedIndexService:
     def _delete_inner(self, q: np.ndarray) -> int:
         # a shard's IndexService cannot compact below 2 keys, so a
         # batch that would drain one shard's whole range (routine at
-        # K > 1) first merges shards via rebalance — halving K until
-        # every shard keeps headroom, down to the K=1 (global-drain)
-        # semantics of the unsharded service.  The cheap guard counts
-        # requested keys; only when it trips do we pay for an exact
-        # per-shard liveness check, so no-op deletes of absent keys
-        # (idempotent retries) never cascade rebalances.
+        # K > 1) first rebalances.  Equalization repopulates the
+        # at-risk shards from their neighbors WITHOUT dropping K while
+        # the live set has headroom; only when it does not, K steps
+        # down ONE shard at a time (local pair merges — not the old
+        # stop-the-world halving), bottoming out at the K=1
+        # (global-drain) semantics of the unsharded service.  The
+        # cheap guard counts requested keys; only when it trips do we
+        # pay for an exact per-shard liveness check, so no-op deletes
+        # of absent keys (idempotent retries) never cascade
+        # rebalances.
         u = np.unique(q)
         while self.num_shards > 1 and self._delete_would_drain(u):
-            self.rebalance(max(1, self.num_shards // 2))
+            k = self.num_shards
+            self.rebalance(k)
+            if self.num_shards >= k and self._delete_would_drain(u):
+                self.rebalance(k - 1)
         shard_of = self._router.route(q)
         applied = 0
         for s, svc in enumerate(self._shards):
@@ -951,8 +1007,10 @@ class ShardedIndexService:
     # ---- compaction / rebalancing ---------------------------------------
     def flush(self) -> None:
         if self.num_shards > 1 and (self._live_counts() < 2).any():
-            # a drained shard cannot compact; merge it away first
-            self.rebalance(max(1, self.num_shards // 2))
+            # a drained shard cannot compact; equalization repopulates
+            # it from its neighbors (K only shrinks when the whole live
+            # set is too small to sustain it)
+            self.rebalance(self.num_shards)
         for s in self._shards:
             s.flush()
 
@@ -968,7 +1026,9 @@ class ShardedIndexService:
         if k == 1:
             return False
         if counts.min() < 2:
-            self.rebalance(max(1, k // 2))
+            # repopulate the drained shard from its neighbors; the
+            # rebalance clamp shrinks K only if the live set demands it
+            self.rebalance(k)
             return True
         if total < 4 * k:
             return False
@@ -977,41 +1037,158 @@ class ShardedIndexService:
         self.rebalance()
         return True
 
+    # ---- online rebalance primitives ------------------------------------
+    def _retire_stats(self, old: Sequence[IndexService]) -> None:
+        """Fold retiring shards' lifetime tallies into ``_retired`` so
+        aggregate stats and the `version` property stay monotone across
+        reshapes."""
+        self._retired["versions"] += sum(s.version for s in old)
+        for svc in old:
+            for stat, v in svc.stats.items():
+                self._retired[stat] = self._retired.get(stat, 0) + v
+
+    def _install_router(self, boundaries, sample=None) -> None:
+        """Retire the current router (folding its lifetime tallies so
+        stats_summary stays monotone) and install a freshly fitted one
+        over ``boundaries``."""
+        for stat, v in self._router.stats.items():
+            key = f"router_{stat}"
+            self._retired[key] = self._retired.get(key, 0) + v
+        router = LearnedRouter.fit(
+            np.asarray(boundaries, np.float64), sample_keys=sample
+        )
+        router.metrics = self.metrics
+        self._router = router
+        self._refit_ctr.add(1)
+
+    def _reshape(self, s0: int, s1: int, cut_counts: Sequence[int]) -> None:
+        """The one LOCAL rebalance step: rebuild shards [s0, s1) into
+        ``len(cut_counts)`` new shards holding exactly those live-key
+        counts, shipping the retiring shards' collapsed live slices
+        (levels folded by `_live_arrays`) into the new owners.  Shards
+        outside [s0, s1) are untouched — their services, snapshots, and
+        device-plane rows keep serving, and any pinned scan view stays
+        valid because the retired services' arrays are immutable behind
+        it.  The spliced router and shard list publish together at the
+        end, so reads between steps always see a consistent tiling."""
+        old = self._shards[s0:s1]
+        parts = [_live_arrays(svc) for svc in old]
+        keys = np.concatenate([p[0] for p in parts])
+        vals = None
+        if all(p[1] is not None for p in parts):
+            vals = np.concatenate([p[1] for p in parts])
+        pos = np.concatenate([[0], np.cumsum(cut_counts)]).astype(np.int64)
+        assert int(pos[-1]) == keys.size, "cut_counts must cover the slice"
+        pieces = []
+        for i in range(len(cut_counts)):
+            a, b = int(pos[i]), int(pos[i + 1])
+            if b - a < 2:
+                raise ValueError(
+                    f"reshape piece {i} would hold {b - a} keys (< 2)"
+                )
+            # reshaped shards are built dir-less: durability is owned
+            # by save()/IndexCheckpointer, never by a transient reshape
+            cfg = dataclasses.replace(
+                self.config, num_shards=1, snapshot_dir=None
+            )
+            pieces.append(IndexService(
+                keys[a:b], cfg, vals=None if vals is None else vals[a:b],
+            ))
+        bounds = self._router.boundaries
+        bounds = np.concatenate(
+            [bounds[:s0], keys[pos[1:-1]], bounds[s1 - 1:]]
+        )
+        shards = list(self._shards)
+        shards[s0:s1] = pieces
+        self._retire_stats(old)
+        self._install_router(bounds)
+        self._shards = shards
+
+    def _merge_pair(self, s: int) -> None:
+        """Merge shards s and s+1 into one (a local 2 -> 1 reshape)."""
+        c = self._live_counts()
+        self._reshape(s, s + 2, [int(c[s] + c[s + 1])])
+        self._reshape_ctr["merges"].add(1)
+
+    def _split_shard(self, s: int) -> None:
+        """Split shard s at its live median (a local 1 -> 2 reshape)."""
+        c = int(self._live_counts()[s])
+        self._reshape(s, s + 1, [c - c // 2, c // 2])
+        self._reshape_ctr["splits"].add(1)
+
+    def _equalize(self) -> None:
+        """Left-to-right boundary sweeps pinning each boundary to its
+        global live quantile: boundary s moves so shards 0..s hold
+        (s+1)/K of the live keys.  Each move is one local pair reshape
+        (2 -> 2); a pair already on target costs nothing.  Mass travels
+        at most one shard per sweep, so K+1 sweeps bound the worst case
+        (all mass at one end); in the common mild-skew case the first
+        sweep lands every boundary and the second is a no-op."""
+        k = self.num_shards
+        if k == 1:
+            return
+        for _ in range(k + 1):
+            total = int(self._live_counts().sum())
+            moved = False
+            for s in range(k - 1):
+                counts = self._live_counts()
+                left = int(counts[:s].sum())
+                pair = int(counts[s] + counts[s + 1])
+                want = ((s + 1) * total) // k - left
+                want = max(2, min(want, pair - 2))
+                if pair < 4 or abs(int(counts[s]) - want) <= 2:
+                    continue
+                self._reshape(s, s + 2, [want, pair - want])
+                self._reshape_ctr["shifts"].add(1)
+                moved = True
+            if not moved:
+                break
+
     def rebalance(self, num_shards: Optional[int] = None) -> None:
-        """Boundary re-fit: capture every shard's exact live
-        (keys, vals) — merged from (snapshot, frozen, active), NO
-        compaction, so even a fully drained shard folds in — re-cut
-        quantile boundaries over the global live set, rebuild the
-        shards.  Keys change owners; global ranks are invariant (the
-        oracle tests churn straight through this).  K clamps to
-        live/2 so every rebuilt shard keeps the >= 2 keys an
-        IndexService needs."""
+        """Online shard rebalance: a bounded sequence of LOCAL merge /
+        split / boundary-shift steps, each shipping only the touched
+        neighbors' collapsed live slices while every other shard — and
+        any pinned scan view — keeps serving.  (The old implementation
+        drained and rebuilt ALL shards behind one global re-cut.)  Keys
+        change owners, never global ranks (the oracle tests churn
+        straight through this).  The target K clamps to live/2 so every
+        shard keeps the >= 2 keys an IndexService needs; a final model
+        re-fit installs a fresh router — fresh health stats — over a
+        global live sample even when no boundary moved."""
         with obs_trace.span("service.rebalance", cat="rebalance"), \
                 self._op_hist["rebalance"].time():
-            parts = [_live_arrays(s) for s in self._shards]
-            self._retired["versions"] += sum(s.version for s in self._shards)
-            for svc in self._shards:  # keep aggregate op counters monotone
-                for stat, v in svc.stats.items():
-                    self._retired[stat] = self._retired.get(stat, 0) + v
-            # retiring the router would reset model hit-rate; fold its
-            # lifetime tallies in so stats_summary stays monotone too
-            for stat, v in self._router.stats.items():
-                key = f"router_{stat}"
-                self._retired[key] = self._retired.get(key, 0) + v
-            keys = np.concatenate([p[0] for p in parts])
-            vals = None
-            if all(p[1] is not None for p in parts):
-                vals = np.concatenate([p[1] for p in parts])
-            k = max(1, min(num_shards or self.num_shards, keys.size // 2))
-            self._router = LearnedRouter.from_keys(keys, k)
-            self._router.metrics = self.metrics
-            self._refit_ctr.add(1)
-            self._shards = self._build_shards(keys, vals)
-            # new shard services: every device-plane cache starts over
-            self._plan = None
-            self._scan_cache = None
-            self._static_plan = None
-            self._static_rows = {}
+            total = int(self._live_counts().sum())
+            k = max(1, min(num_shards or self.num_shards,
+                           max(1, total // 2)))
+            # 1. drained shards first: merge each into a neighbor (an
+            #    IndexService cannot exist below 2 keys)
+            while self.num_shards > 1:
+                counts = self._live_counts()
+                low = int(counts.argmin())
+                if counts[low] >= 2:
+                    break
+                self._merge_pair(
+                    low if low + 1 < self.num_shards else low - 1
+                )
+            # 2. walk K to the target: merge the lightest adjacent
+            #    pair / split the heaviest shard, one step at a time
+            while self.num_shards > k:
+                counts = self._live_counts()
+                self._merge_pair(int((counts[:-1] + counts[1:]).argmin()))
+            while self.num_shards < k:
+                counts = self._live_counts()
+                big = int(counts.argmax())
+                if counts[big] < 4:
+                    break
+                self._split_shard(big)
+            # 3. pin every boundary to its global live quantile
+            self._equalize()
+            # 4. fresh router over a global base sample
+            snaps = [s._state()[0] for s in self._shards]
+            sample = np.concatenate([
+                sn.keys.raw[:: max(1, sn.n // 64)] for sn in snaps
+            ]) if snaps else np.empty(0, np.float64)
+            self._install_router(self._router.boundaries, sample=sample)
             self.stats["rebalances"] += 1
             if self.config.snapshot_dir is not None:
                 self._save_router()
@@ -1034,9 +1211,24 @@ class ShardedIndexService:
         assert self.config.snapshot_dir is not None, "no snapshot_dir"
         self.flush()
         for s, svc in enumerate(self._shards):
-            svc.save(os.path.join(
+            sub = os.path.join(
                 self.config.snapshot_dir, _SHARD_DIR.format(s)
-            ))
+            )
+            if os.path.isdir(sub):
+                # reshapes reassign ranges between shard slots, so a
+                # stale higher-version snapshot here could shadow the
+                # one we are about to write on the next load
+                shutil.rmtree(sub)
+            svc.save(sub)
+        s = self.num_shards
+        while True:  # drop shard dirs beyond the current K
+            sub = os.path.join(
+                self.config.snapshot_dir, _SHARD_DIR.format(s)
+            )
+            if not os.path.isdir(sub):
+                break
+            shutil.rmtree(sub)
+            s += 1
         return self._save_router()
 
     @classmethod
@@ -1107,6 +1299,7 @@ class ShardedIndexService:
                 "hit_rate": (s["contains_hits"] / s["contains"]
                              if s["contains"] else 0.0),
                 "bloom_screened": int(agg("bloom_screened")),
+                "bloom_fp": int(agg("bloom_fp")),
             },
             "range": per_op("range"),
             "scan": {
@@ -1119,5 +1312,7 @@ class ShardedIndexService:
             "delete_applied": int(agg("delete_applied")),
             "compactions": int(agg("compactions")),
             "compact_stalls": int(agg("compact_stalls")),
+            "write_stalls": int(agg("write_stalls")),
+            "write_stall_s": float(agg("write_stall_s")),
             "bloom_screened": int(agg("bloom_screened")),
         }

@@ -1,6 +1,7 @@
 """Sharding rules, checkpoint/fault-tolerance, compression, pipeline."""
 
 import os
+import time
 
 import numpy as np
 import jax
@@ -203,3 +204,50 @@ def test_pipeline_deterministic_across_restart():
     np.testing.assert_array_equal(
         p1.batch_at(17)["tokens"], p2.batch_at(17)["tokens"]
     )
+
+
+# --------------------------------------------------------------------------
+# checkpoint-root sharing: age-gated tmp GC, pointer healing, warm-up
+# --------------------------------------------------------------------------
+
+def test_gc_spares_fresh_foreign_tmp_dirs(tmp_path):
+    """A fresh `.tmp` dir is another replica's save IN PROGRESS — GC
+    after our own save must leave it alone (only certainly-abandoned,
+    aged-out tmp dirs are collected)."""
+    t = _tree()
+    foreign = tmp_path / "step_0000000042.tmp"
+    os.makedirs(foreign)
+    for s in (1, 2, 3, 4, 5):
+        save_checkpoint(str(tmp_path), s, t, keep_last=2)
+    assert foreign.is_dir()  # concurrent writer's dir survived the sweep
+    # aged-out tmp dirs ARE collected
+    old = time.time() - 24 * 3600
+    os.utime(foreign, (old, old))
+    save_checkpoint(str(tmp_path), 6, t, keep_last=2)
+    assert not foreign.exists()
+
+
+def test_latest_step_heals_stale_pointer(tmp_path):
+    t = _tree()
+    save_checkpoint(str(tmp_path), 5, t)
+    save_checkpoint(str(tmp_path), 9, t)
+    import shutil
+    shutil.rmtree(tmp_path / "step_0000000009")
+    assert latest_step(str(tmp_path)) == 5
+    # the fallback rewrote LATEST atomically: the next reader takes the
+    # fast path without re-walking the directory
+    assert (tmp_path / "LATEST").read_text().strip() == "5"
+    assert latest_step(str(tmp_path)) == 5
+
+
+def test_straggler_warmup_outlier_does_not_poison_baseline():
+    """The warm-up baseline is the MEDIAN of the first samples — one
+    slow warm-up step (compilation, cold cache) must not inflate the
+    EWMA so far that genuine stragglers sail under ``factor``."""
+    p = StragglerPolicy(factor=2.0, min_samples=3)
+    for dt in (1.0, 50.0, 1.0):  # cold-start outlier mid-warm-up
+        p.observe(dt)
+    for _ in range(5):
+        assert not p.observe(1.0)
+    assert p.observe(5.0)  # a real straggler is still flagged
+    assert p.events == 1
