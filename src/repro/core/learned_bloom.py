@@ -153,6 +153,7 @@ class LearnedBloom:
 
     def contains(self, strings: Sequence[str]) -> np.ndarray:
         toks = tokenize(strings, self.spec.max_len).astype(np.int32)
+        # lixlint: host-sync(batch-eval API returns host booleans by design)
         logits = np.asarray(
             jax.jit(gru_logits)(
                 {k: jnp.asarray(v) for k, v in self.params.items()},

@@ -83,6 +83,12 @@ class Compactor:
     """Builds successor snapshots.  ``min_keys`` guards the degenerate
     all-deleted case (an index needs >= 2 distinct keys)."""
 
+    # Concurrency contract: configured once at construction, then
+    # immutable — safe to share across service worker threads.  The
+    # marker opts the class into lixlint's store analysis to keep any
+    # future mutable state honest.
+    # lixlint: thread-shared
+
     def __init__(
         self,
         *,

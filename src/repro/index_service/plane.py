@@ -73,6 +73,9 @@ class DevicePlane:
     re-pack — a plane made stale by a concurrent write just misses its
     key check on the next read."""
 
+    # lixlint: thread-shared
+    # lixlint: unsynchronized(cache publishes happen under the owning service lock; see locking contract above)
+
     def __init__(self, metrics):
         self._lookup = None  # (snap, dk, dp)
         self._scan = None    # (key, slab, ins_n)

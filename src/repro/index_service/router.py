@@ -48,6 +48,11 @@ class LearnedRouter:
     always >= 0 so the guess is monotone in the key.
     """
 
+    # Concurrency contract: owned by one ShardedIndexService; every call
+    # (route/fit/stats) happens under that service's ``_lock``.
+    # lixlint: thread-shared
+    # lixlint: unsynchronized(all access serialized under the owning service lock)
+
     boundaries: np.ndarray
     weight: float = 0.0
     bias: float = 0.0

@@ -34,6 +34,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.rmi import RMIConfig
+from repro.obs import lockstat
 from repro.obs import trace as obs_trace
 from repro.obs.metrics import MetricsRegistry, StatsView
 from repro.index_service.compact import (
@@ -181,11 +182,11 @@ class IndexService:
         # to merge into the base; the historical `_frozen` single slot
         # survives as a read-only property over this list
         self._levels: List[DeltaBuffer] = []
-        self._compacting = False  # a merge of the stack is in flight
-        self._lock = threading.RLock()
-        self._worker: Optional[threading.Thread] = None
-        self._worker_error: Optional[BaseException] = None
-        self._write_ewma = 0.0   # staged entries per recent write call
+        self._compacting = False  # guarded-by: _lock
+        self._lock = lockstat.make_lock("service._lock")
+        self._worker: Optional[threading.Thread] = None  # guarded-by: _lock
+        self._worker_error: Optional[BaseException] = None  # guarded-by: _lock
+        self._write_ewma = 0.0   # guarded-by: _lock
         # every service gets its OWN registry unless the caller shares
         # one on purpose — K shard services must never alias counters
         self.metrics = metrics if metrics is not None else MetricsRegistry(
@@ -485,6 +486,7 @@ class IndexService:
         snap, frozen, active, dk, dp = self._capture()
         qn = jnp.asarray(snap.keys.normalize(q))
         b, _ = snap.merged_lookup_fn(self.config.strategy)(qn, dk, dp)
+        # lixlint: host-sync(designed single read-back for f64 refinement)
         base_rank, in_base = snap.refine_base_rank(q, np.asarray(b))
         rank = base_rank + count_less(frozen, active, q)
         live = live_mask(in_base, frozen, active, q)
@@ -608,13 +610,15 @@ class IndexService:
     def write_rate_ewma(self) -> float:
         """EWMA of staged entries per recent write call — the hotness
         signal the rate-aware compaction trigger scales by."""
-        return self._write_ewma
+        with self._lock:
+            return self._write_ewma
 
     def _note_write_rate(self, batch: int) -> None:
         # per-call exponential average (deterministic — no wall clock):
         # shards fed large/frequent batches converge to a high EWMA,
         # cold shards decay toward their trickle size
-        self._write_ewma = 0.7 * self._write_ewma + 0.3 * float(batch)
+        with self._lock:
+            self._write_ewma = 0.7 * self._write_ewma + 0.3 * float(batch)
 
     def _compact_trigger(self) -> float:
         """Fill level (entries) that arms compaction.  With
@@ -623,10 +627,10 @@ class IndexService:
         aware scheduling), cold shards batch up to compact_fraction."""
         cfg = self.config
         frac = cfg.compact_fraction
-        if cfg.compact_rate_gain > 0.0 and self._write_ewma > 0.0:
-            hot = self._write_ewma / (
-                self._write_ewma + max(1.0, cfg.delta_capacity / 8.0)
-            )
+        with self._lock:
+            ewma = self._write_ewma
+        if cfg.compact_rate_gain > 0.0 and ewma > 0.0:
+            hot = ewma / (ewma + max(1.0, cfg.delta_capacity / 8.0))
             frac = max(
                 cfg.compact_rate_floor,
                 frac * (1.0 - cfg.compact_rate_gain * hot),
@@ -649,11 +653,15 @@ class IndexService:
         only the O(1) freeze and the O(n) merge happens once per L
         fills.  ``wait`` blocks on an in-flight merge instead of
         returning False.  Returns True if a freeze or merge happened."""
-        if self._compacting:  # one merge of the stack in flight at a time
+        with self._lock:
+            in_flight = self._compacting  # one merge in flight at a time
+        if in_flight:
             if not wait and not drain:
                 return False
             self._join_worker()
-            if self._compacting:  # worker died before commit: retry inline
+            with self._lock:
+                retry = self._compacting
+            if retry:  # worker died before commit: retry inline
                 self._run_compaction()
         froze = False
         with self._lock:
@@ -676,10 +684,11 @@ class IndexService:
         if not merge:
             return froze
         if self.config.background and not (wait or drain):
-            self._worker = threading.Thread(
-                target=self._run_compaction, daemon=True
-            )
-            self._worker.start()
+            with self._lock:
+                self._worker = threading.Thread(
+                    target=self._run_compaction, daemon=True
+                )
+                self._worker.start()
         else:
             self._run_compaction()
         return True
@@ -782,20 +791,25 @@ class IndexService:
             self.stats["compact_stalls"] += 1
             obs_trace.instant("compaction.stall", cat="compaction")
         except BaseException as e:  # surfaced on the caller thread
-            self._worker_error = e
+            with self._lock:
+                self._worker_error = e
         finally:
-            self._compacting = False
+            with self._lock:
+                self._compacting = False
 
     def _join_worker(self) -> None:
-        w = self._worker
+        with self._lock:
+            w = self._worker
         if w is not None and w.is_alive():
-            w.join()
-        self._worker = None
+            w.join()  # never under the lock — the worker takes it to commit
+        with self._lock:
+            self._worker = None
         self._raise_worker_error()
 
     def _raise_worker_error(self) -> None:
-        if self._worker_error is not None:
+        with self._lock:
             err, self._worker_error = self._worker_error, None
+        if err is not None:
             raise RuntimeError("compaction failed") from err
 
     # ---- persistence -----------------------------------------------------

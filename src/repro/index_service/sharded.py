@@ -93,6 +93,7 @@ from repro.index_service.service import (
 )
 from repro.index_service.snapshot import validate_strategy
 from repro.kernels import ops as kernels_ops
+from repro.obs import lockstat
 from repro.obs import trace as obs_trace
 from repro.obs.metrics import MetricsRegistry, StatsView
 
@@ -236,7 +237,19 @@ class ShardedIndexService:
     stats_summary); ``config.num_shards`` picks K and
     ``config.delta_capacity`` applies per shard, so aggregate write
     staging scales linearly with K.
+
+    Concurrency contract: one re-entrant service lock (``_lock``)
+    serializes every mutation of the router / shard list / plane caches
+    AND every read that consults them, so a reshape can never publish a
+    half-spliced tiling to a concurrent reader.  Shard-internal state is
+    each shard `IndexService`'s own problem (its own ``_lock``); lock
+    order is strictly sharded -> shard, never the reverse (shard
+    compaction workers never call back into this class), which
+    ``obs.lockstat`` verifies at test time.  Long device work and page
+    streaming (the `scan` iterator) run OUTSIDE the lock on pinned
+    views.
     """
+    # lixlint: thread-shared
 
     def __init__(
         self,
@@ -285,13 +298,18 @@ class ShardedIndexService:
             k: self.metrics.counter(f"rebalance.{k}")
             for k in ("splits", "merges", "shifts")
         }
+        # the service lock: serializes router/shard-list/plane-cache
+        # mutation and the reads that consult them (see class docstring)
+        self._lock = lockstat.make_lock("sharded._lock")
         # counters carried over from shards retired by rebalance(), so
         # aggregate stats and the version property stay monotone
-        self._retired: Dict[str, int] = {"versions": 0}
-        self._plan: Optional[_DevicePlan] = None
-        self._scan_cache: Optional[_ScanPlane] = None
+        self._retired: Dict[str, int] = {"versions": 0}  # guarded-by: _lock
+        self._plan: Optional[_DevicePlan] = None  # guarded-by: _lock
+        self._scan_cache: Optional[_ScanPlane] = None  # guarded-by: _lock
+        self._static_plan = None  # guarded-by: _lock
+        self._static_rows: Dict[int, tuple] = {}  # guarded-by: _lock
         if _router is not None and _shards is not None:
-            self._router, self._shards = _router, _shards
+            self._router, self._shards = _router, _shards  # guarded-by: _lock
             self._router.metrics = self.metrics
             return
         raw = np.asarray(raw_keys, np.float64)
@@ -323,7 +341,7 @@ class ShardedIndexService:
             self.config, num_shards=1, snapshot_dir=sub
         )
 
-    def _build_shards(
+    def _build_shards(  # lixlint: unsynchronized(constructor-only: runs before the instance is shared)
         self, sorted_keys: np.ndarray, vals: Optional[np.ndarray]
     ) -> List[IndexService]:
         cuts = self._router.split_points(sorted_keys)
@@ -347,34 +365,41 @@ class ShardedIndexService:
     # ---- introspection ---------------------------------------------------
     @property
     def num_shards(self) -> int:
-        return self._router.num_shards
+        with self._lock:
+            return self._router.num_shards
 
     @property
     def router(self) -> LearnedRouter:
-        return self._router
+        with self._lock:
+            return self._router
 
     @property
     def shards(self) -> Tuple[IndexService, ...]:
-        return tuple(self._shards)
+        with self._lock:
+            return tuple(self._shards)
 
     @property
     def num_keys(self) -> int:
-        return sum(s.num_keys for s in self._shards)
+        with self._lock:
+            return sum(s.num_keys for s in self._shards)
 
     @property
     def version(self) -> int:
         """Aggregate version: total compacted snapshot advances,
         monotone across rebalances (retired shards keep counting)."""
-        return self._retired["versions"] + sum(
-            s.version for s in self._shards
-        )
+        with self._lock:
+            return self._retired["versions"] + sum(
+                s.version for s in self._shards
+            )
 
     @property
     def delta_fill(self) -> float:
-        return max(s.delta_fill for s in self._shards)
+        with self._lock:
+            return max(s.delta_fill for s in self._shards)
 
     def _live_counts(self) -> np.ndarray:
-        return np.array([s.num_keys for s in self._shards], np.int64)
+        with self._lock:
+            return np.array([s.num_keys for s in self._shards], np.int64)
 
     # ---- reads -----------------------------------------------------------
     def _ranks(self, q: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
@@ -386,35 +411,40 @@ class ShardedIndexService:
         count, liveness — is pure host NumPy over the same capture the
         device plan was packed from.  The old path dispatched one
         device program per non-empty shard."""
-        shard_of = self._router.route(q)
-        plan = self._device_plan()
-        qs = np.stack([norm(q) for norm in plan.q_normalizers])
-        gbase, _ = kernels_ops.rmi_sharded_routed_lookup_op(
-            qs, shard_of, plan.stage0, plan.leaf_w, plan.leaf_b,
-            plan.err_lo, plan.err_hi, plan.keys, plan.dkeys,
-            plan.dprefix, plan.shard_n, plan.shard_m, plan.shard_ratio,
-            plan.base_off, plan.merged_off,
-            hidden=plan.hidden, max_window=plan.max_window,
-            use_kernel=self.config.strategy in _KERNEL_STRATEGIES,
-            strategy=self.config.strategy,
-        )
-        gbase = np.asarray(gbase).astype(np.int64)
-        rank = np.zeros(q.shape, np.int64)
-        live = np.zeros(q.shape, bool)
-        for s, c in enumerate(plan.caps):
-            m = shard_of == s
-            if not m.any():
-                continue
-            snap, frozen, active = c[0], c[1], c[2]
-            qm = q[m]
-            lb_local = gbase[m] - int(plan.base_off_np[s])
-            base_rank, in_base = snap.refine_base_rank(qm, lb_local)
-            rank[m] = (
-                base_rank + count_less(frozen, active, qm)
-                + int(plan.merged_off_np[s])
+        with self._lock:
+            shard_of = self._router.route(q)
+            plan = self._device_plan()
+            qs = np.stack([norm(q) for norm in plan.q_normalizers])
+            gbase, _ = kernels_ops.rmi_sharded_routed_lookup_op(
+                qs, shard_of, plan.stage0, plan.leaf_w, plan.leaf_b,
+                plan.err_lo, plan.err_hi, plan.keys, plan.dkeys,
+                plan.dprefix, plan.shard_n, plan.shard_m, plan.shard_ratio,
+                plan.base_off, plan.merged_off,
+                hidden=plan.hidden, max_window=plan.max_window,
+                use_kernel=self.config.strategy in _KERNEL_STRATEGIES,
+                strategy=self.config.strategy,
             )
-            live[m] = live_mask(in_base, frozen, active, qm)
-        return rank, live
+            # The ONE designed read-back: exact f64 refinement of the
+            # stacked dispatch's f32 lower bounds runs on host NumPy, so
+            # get/contains stay at one dispatch + host math.
+            # lixlint: host-sync(designed single read-back for f64 refinement)
+            gbase = np.asarray(gbase).astype(np.int64)
+            rank = np.zeros(q.shape, np.int64)
+            live = np.zeros(q.shape, bool)
+            for s, c in enumerate(plan.caps):
+                m = shard_of == s
+                if not m.any():
+                    continue
+                snap, frozen, active = c[0], c[1], c[2]
+                qm = q[m]
+                lb_local = gbase[m] - int(plan.base_off_np[s])
+                base_rank, in_base = snap.refine_base_rank(qm, lb_local)
+                rank[m] = (
+                    base_rank + count_less(frozen, active, qm)
+                    + int(plan.merged_off_np[s])
+                )
+                live[m] = live_mask(in_base, frozen, active, qm)
+            return rank, live
 
     def get(self, keys) -> Tuple[np.ndarray, np.ndarray]:
         """Exact global lower-bound ranks + presence mask (the K-shard
@@ -453,53 +483,54 @@ class ShardedIndexService:
         return out
 
     def _contains_inner(self, q: np.ndarray) -> np.ndarray:
-        shard_of = self._router.route(q)
-        caps = [s._state() for s in self._shards]
-        out = np.zeros(q.shape, bool)
-        maybe = np.zeros(q.shape, bool)
-        for s, (snap, frozen, active) in enumerate(caps):
-            m = shard_of == s
-            if not m.any():
-                continue
-            idx = np.flatnonzero(m)
-            qm = q[idx]
-            mentioned = np.zeros(qm.shape, bool)
-            for level in iter_levels(frozen, active):
-                mentioned |= member(level.ins_keys, qm)
-                mentioned |= member(level.del_keys, qm)
-            if mentioned.any():
-                # delta-absorbed: a mentioned key's liveness is decided
-                # by the youngest level that knows it (plus exact base
-                # membership) — no device dispatch, no Bloom
-                qmm = qm[mentioned]
-                out[idx[mentioned]] = live_mask(
-                    member(snap.keys.raw, qmm), frozen, active, qmm
-                )
-            rest = ~mentioned
-            if snap.bloom is not None:
-                mb = np.zeros(qm.shape, bool)
-                mb[rest] = snap.bloom.contains(qm[rest])
-                self._shards[s].stats["bloom_screened"] += int(
-                    (rest & ~mb).sum()
-                )
-                maybe[idx[mb]] = True
-            else:
-                maybe[idx[rest]] = True
-        if maybe.any():
-            _, lv = self._ranks(q[maybe])
-            out[maybe] = lv
-            if not lv.all():
-                # survivors the filter passed that turned out dead are
-                # its GENUINE false positives (deleted keys no longer
-                # inflate this: they are delta-absorbed until the
-                # compaction boundary rebuilds the filter)
-                fp = np.flatnonzero(maybe)[~lv]
-                for s in np.unique(shard_of[fp]):
-                    if caps[int(s)][0].bloom is not None:
-                        self._shards[int(s)].stats["bloom_fp"] += int(
-                            (shard_of[fp] == s).sum()
-                        )
-        return out
+        with self._lock:
+            shard_of = self._router.route(q)
+            caps = [s._state() for s in self._shards]
+            out = np.zeros(q.shape, bool)
+            maybe = np.zeros(q.shape, bool)
+            for s, (snap, frozen, active) in enumerate(caps):
+                m = shard_of == s
+                if not m.any():
+                    continue
+                idx = np.flatnonzero(m)
+                qm = q[idx]
+                mentioned = np.zeros(qm.shape, bool)
+                for level in iter_levels(frozen, active):
+                    mentioned |= member(level.ins_keys, qm)
+                    mentioned |= member(level.del_keys, qm)
+                if mentioned.any():
+                    # delta-absorbed: a mentioned key's liveness is decided
+                    # by the youngest level that knows it (plus exact base
+                    # membership) — no device dispatch, no Bloom
+                    qmm = qm[mentioned]
+                    out[idx[mentioned]] = live_mask(
+                        member(snap.keys.raw, qmm), frozen, active, qmm
+                    )
+                rest = ~mentioned
+                if snap.bloom is not None:
+                    mb = np.zeros(qm.shape, bool)
+                    mb[rest] = snap.bloom.contains(qm[rest])
+                    self._shards[s].stats["bloom_screened"] += int(
+                        (rest & ~mb).sum()
+                    )
+                    maybe[idx[mb]] = True
+                else:
+                    maybe[idx[rest]] = True
+            if maybe.any():
+                _, lv = self._ranks(q[maybe])
+                out[maybe] = lv
+                if not lv.all():
+                    # survivors the filter passed that turned out dead are
+                    # its GENUINE false positives (deleted keys no longer
+                    # inflate this: they are delta-absorbed until the
+                    # compaction boundary rebuilds the filter)
+                    fp = np.flatnonzero(maybe)[~lv]
+                    for s in np.unique(shard_of[fp]):
+                        if caps[int(s)][0].bloom is not None:
+                            self._shards[int(s)].stats["bloom_fp"] += int(
+                                (shard_of[fp] == s).sum()
+                            )
+            return out
 
     def range_lookup(self, lo: float, hi: float) -> Tuple[int, int]:
         """[lo, hi) as global merged ranks — the endpoints may route to
@@ -534,11 +565,14 @@ class ShardedIndexService:
         t0 = time.perf_counter()
         with obs_trace.span("service.scan", cat="service", sharded=True):
             q = np.array([lo, hi], np.float64)
-            if not (hi > lo):
-                views = []
-            else:
-                s0, s1 = (int(s) for s in self._router.route(q))
-                views = [self._shards[s]._pin() for s in range(s0, s1 + 1)]
+            with self._lock:
+                if not (hi > lo):
+                    views = []
+                else:
+                    s0, s1 = (int(s) for s in self._router.route(q))
+                    views = [
+                        self._shards[s]._pin() for s in range(s0, s1 + 1)
+                    ]
         setup = time.perf_counter() - t0
         self.stats["scan"] += 1
         self.stats["scan_s"] += setup
@@ -578,8 +612,9 @@ class ShardedIndexService:
         with obs_trace.span("service.lookup_batch", cat="service",
                             sharded=True):
             q = np.atleast_1d(np.asarray(keys, np.float64))
-            plan = self._device_plan()
-            shard_of = self._router.route(q)
+            with self._lock:
+                plan = self._device_plan()
+                shard_of = self._router.route(q)
             qs = np.stack([norm(q) for norm in plan.q_normalizers])
             _, merged = kernels_ops.rmi_sharded_routed_lookup_op(
                 qs, shard_of, plan.stage0, plan.leaf_w, plan.leaf_b,
@@ -615,7 +650,7 @@ class ShardedIndexService:
         t0 = time.perf_counter()
         with obs_trace.span("service.scan_batch", cat="service",
                             sharded=True):
-            plane = self._scan_plane()
+            plane = self._scan_plane()  # takes the service lock itself
             pages = scan_page_bound(
                 plane.raws, plane.ins_total, lo, hi, page_size
             )
@@ -660,109 +695,110 @@ class ShardedIndexService:
         racing a (single-writer) rebuild sees either the old
         fully-consistent plane or the new one — never a half-updated
         mix of device arrays."""
-        svcs = self._shards
-        keys = [self._scan_key(s) for s in svcs]
-        old = self._scan_cache
-        same_shards = (
-            old is not None
-            and len(old.shards_key) == len(svcs)
-            and all(a is b for a, b in zip(old.shards_key, svcs))
-        )
-        if same_shards and all(
-            scan_plane_key_eq(a, b) for a, b in zip(old.key, keys)
-        ):
-            self._plane_ctr["scan.hit"].add(1)
-            return old
-        self._plane_ctr["scan.miss"].add(1)
+        with self._lock:
+            svcs = self._shards
+            keys = [self._scan_key(s) for s in svcs]
+            old = self._scan_cache
+            same_shards = (
+                old is not None
+                and len(old.shards_key) == len(svcs)
+                and all(a is b for a, b in zip(old.shards_key, svcs))
+            )
+            if same_shards and all(
+                scan_plane_key_eq(a, b) for a, b in zip(old.key, keys)
+            ):
+                self._plane_ctr["scan.hit"].add(1)
+                return old
+            self._plane_ctr["scan.miss"].add(1)
 
-        changed = [
-            s for s in range(len(svcs))
-            if not (same_shards and scan_plane_key_eq(old.key[s], keys[s]))
-        ]
-        pins = {s: svcs[s]._pin() for s in changed}
-        sizes_n = [
-            pins[s].base_keys.size if s in pins else old.rows[s]["n"]
-            for s in range(len(svcs))
-        ]
-        sizes_d = [
-            pins[s].ins_keys.size if s in pins else old.rows[s]["d"]
-            for s in range(len(svcs))
-        ]
-        n_pad = _pad_bucket(max(sizes_n) + 1)
-        d_pad = _pad_bucket(max(sizes_d) + 1)
-        if same_shards and old.n_pad == n_pad and old.d_pad == d_pad:
-            # incremental: fresh plane object sharing the host mirrors
-            # (the published old plane is never mutated — its device
-            # arrays are copies, see the upload note below); base keys
-            # and payloads only change when a shard's SNAPSHOT moved
-            plane = dataclasses.replace(
-                old, rows=list(old.rows), raws=list(old.raws)
-            )
-            snap_dirty = any(
-                old.key[s][0] is not keys[s][0] for s in changed
-            )
-        else:
-            # full rebuild: pin the shards not already pinned (reuse
-            # the rest), then size pads and frame from the FINAL pin
-            # set — a background compaction between the key probe and
-            # the pin may have grown a shard past the probed sizes
-            changed = list(range(len(svcs)))
+            changed = [
+                s for s in range(len(svcs))
+                if not (same_shards and scan_plane_key_eq(old.key[s], keys[s]))
+            ]
+            pins = {s: svcs[s]._pin() for s in changed}
+            sizes_n = [
+                pins[s].base_keys.size if s in pins else old.rows[s]["n"]
+                for s in range(len(svcs))
+            ]
+            sizes_d = [
+                pins[s].ins_keys.size if s in pins else old.rows[s]["d"]
+                for s in range(len(svcs))
+            ]
+            n_pad = _pad_bucket(max(sizes_n) + 1)
+            d_pad = _pad_bucket(max(sizes_d) + 1)
+            if same_shards and old.n_pad == n_pad and old.d_pad == d_pad:
+                # incremental: fresh plane object sharing the host mirrors
+                # (the published old plane is never mutated — its device
+                # arrays are copies, see the upload note below); base keys
+                # and payloads only change when a shard's SNAPSHOT moved
+                plane = dataclasses.replace(
+                    old, rows=list(old.rows), raws=list(old.raws)
+                )
+                snap_dirty = any(
+                    old.key[s][0] is not keys[s][0] for s in changed
+                )
+            else:
+                # full rebuild: pin the shards not already pinned (reuse
+                # the rest), then size pads and frame from the FINAL pin
+                # set — a background compaction between the key probe and
+                # the pin may have grown a shard past the probed sizes
+                changed = list(range(len(svcs)))
+                for s in changed:
+                    if s not in pins:
+                        pins[s] = svcs[s]._pin()
+                n_pad = _pad_bucket(
+                    max(v.base_keys.size for v in pins.values()) + 1
+                )
+                d_pad = _pad_bucket(
+                    max(v.ins_keys.size for v in pins.values()) + 1
+                )
+                lo, hi = fit_scan_frame([pins[s] for s in changed])
+                s_count = len(svcs)
+                plane = _ScanPlane(
+                    key=(), shards_key=tuple(svcs),
+                    lo=float(lo), hi=float(hi), n_pad=n_pad, d_pad=d_pad,
+                    rows=[None] * s_count, raws=[None] * s_count, ins_total=0,
+                    base=None, bvals=None, live_prefix=None, ins=None,
+                    ivals=None, ins_rank=None,
+                    base_np=np.full((s_count, n_pad), np.inf, np.float32),
+                    bvals_np=np.zeros((s_count, n_pad), np.int32),
+                    lp_np=np.zeros((s_count, n_pad + 1), np.int32),
+                    ins_np=np.full((s_count, d_pad), np.inf, np.float32),
+                    ivals_np=np.zeros((s_count, d_pad), np.int32),
+                    irank_np=np.zeros((s_count, d_pad), np.int32),
+                )
+                snap_dirty = True
             for s in changed:
-                if s not in pins:
-                    pins[s] = svcs[s]._pin()
-            n_pad = _pad_bucket(
-                max(v.base_keys.size for v in pins.values()) + 1
-            )
-            d_pad = _pad_bucket(
-                max(v.ins_keys.size for v in pins.values()) + 1
-            )
-            lo, hi = fit_scan_frame([pins[s] for s in changed])
-            s_count = len(svcs)
-            plane = _ScanPlane(
-                key=(), shards_key=tuple(svcs),
-                lo=float(lo), hi=float(hi), n_pad=n_pad, d_pad=d_pad,
-                rows=[None] * s_count, raws=[None] * s_count, ins_total=0,
-                base=None, bvals=None, live_prefix=None, ins=None,
-                ivals=None, ins_rank=None,
-                base_np=np.full((s_count, n_pad), np.inf, np.float32),
-                bvals_np=np.zeros((s_count, n_pad), np.int32),
-                lp_np=np.zeros((s_count, n_pad + 1), np.int32),
-                ins_np=np.full((s_count, d_pad), np.inf, np.float32),
-                ivals_np=np.zeros((s_count, d_pad), np.int32),
-                irank_np=np.zeros((s_count, d_pad), np.int32),
-            )
-            snap_dirty = True
-        for s in changed:
-            view = pins[s]
-            row = pack_scan_slab(view, plane.normalize, n_pad, d_pad)
-            # keep only the true sizes — the arrays live in the mirrors
-            plane.rows[s] = {
-                "n": view.base_keys.size, "d": view.ins_keys.size,
-            }
-            plane.raws[s] = view.base_keys
-            plane.base_np[s] = row["base"]
-            plane.bvals_np[s] = row["bvals"]
-            plane.lp_np[s] = row["live_prefix"]
-            plane.ins_np[s] = row["ins"]
-            plane.ivals_np[s] = row["ivals"]
-            plane.irank_np[s] = row["ins_rank"]
-        plane.ins_total = int(sum(r["d"] for r in plane.rows))
-        # jnp.array (copy=True): jnp.asarray can zero-copy ALIAS a f32
-        # NumPy buffer on the CPU backend, and these mirrors mutate in
-        # place on the next incremental build — an aliased upload would
-        # corrupt device arrays still referenced from earlier calls.
-        # Delta-only changes reuse the old base/bvals device arrays
-        # outright (the dominant transfer for large indexes).
-        if snap_dirty:
-            plane.base = jnp.array(plane.base_np)
-            plane.bvals = jnp.array(plane.bvals_np)
-        plane.live_prefix = jnp.array(plane.lp_np)
-        plane.ins = jnp.array(plane.ins_np)
-        plane.ivals = jnp.array(plane.ivals_np)
-        plane.ins_rank = jnp.array(plane.irank_np)
-        plane.key = tuple(keys)
-        self._scan_cache = plane  # atomic publish of the finished plane
-        return plane
+                view = pins[s]
+                row = pack_scan_slab(view, plane.normalize, n_pad, d_pad)
+                # keep only the true sizes — the arrays live in the mirrors
+                plane.rows[s] = {
+                    "n": view.base_keys.size, "d": view.ins_keys.size,
+                }
+                plane.raws[s] = view.base_keys
+                plane.base_np[s] = row["base"]
+                plane.bvals_np[s] = row["bvals"]
+                plane.lp_np[s] = row["live_prefix"]
+                plane.ins_np[s] = row["ins"]
+                plane.ivals_np[s] = row["ivals"]
+                plane.irank_np[s] = row["ins_rank"]
+            plane.ins_total = int(sum(r["d"] for r in plane.rows))
+            # jnp.array (copy=True): jnp.asarray can zero-copy ALIAS a f32
+            # NumPy buffer on the CPU backend, and these mirrors mutate in
+            # place on the next incremental build — an aliased upload would
+            # corrupt device arrays still referenced from earlier calls.
+            # Delta-only changes reuse the old base/bvals device arrays
+            # outright (the dominant transfer for large indexes).
+            if snap_dirty:
+                plane.base = jnp.array(plane.base_np)
+                plane.bvals = jnp.array(plane.bvals_np)
+            plane.live_prefix = jnp.array(plane.lp_np)
+            plane.ins = jnp.array(plane.ins_np)
+            plane.ivals = jnp.array(plane.ivals_np)
+            plane.ins_rank = jnp.array(plane.irank_np)
+            plane.key = tuple(keys)
+            self._scan_cache = plane  # atomic publish of the finished plane
+            return plane
 
     def _shard_mesh(self):
         """1-D shard mesh for the vmapped (non-kernel) path, or None."""
@@ -777,64 +813,65 @@ class ShardedIndexService:
         shard's row is re-packed: per-shard rows are cached by snapshot
         identity and padded to stable quarter-pow2 buckets, so one
         shard's compaction leaves every other slab byte-identical."""
-        static_key = tuple((sn,) for sn in snaps)
-        cached = getattr(self, "_static_plan", None)
-        if cached is not None and _same_objects(cached[0], static_key):
+        with self._lock:
+            static_key = tuple((sn,) for sn in snaps)
+            cached = getattr(self, "_static_plan", None)
+            if cached is not None and _same_objects(cached[0], static_key):
+                return cached
+            n_pad = _pad_bucket(max(sn.n for sn in snaps) + 1)
+            m_pad = _pad_bucket(max(sn.index.num_leaves for sn in snaps),
+                                min_pad=16)
+            hiddens = {tuple(sn.index.config.stage0_hidden) for sn in snaps}
+            if len(hiddens) != 1:
+                raise ValueError("shards disagree on stage-0 architecture")
+            rows_cache = getattr(self, "_static_rows", {})
+            rows = []
+            new_cache = {}
+            for s, sn in enumerate(snaps):
+                prev = rows_cache.get(s)
+                if (prev is not None and prev[0] is sn
+                        and prev[1]["keys"].shape[0] == n_pad
+                        and prev[1]["leaf_w"].shape[0] == m_pad):
+                    row = prev[1]
+                else:
+                    row = kernels_ops.pad_shard_row(
+                        sn.index, sn.keys.norm, n_pad, m_pad
+                    )
+                rows.append(row)
+                new_cache[s] = (sn, row)
+            self._static_rows = new_cache
+            nl = len(next(iter(hiddens))) + 1
+            stacked = {
+                "stage0": tuple(
+                    jnp.asarray(np.stack([r["stage0"][i] for r in rows]))
+                    for i in range(2 * nl)
+                ),
+                "leaf_w": jnp.asarray(np.stack([r["leaf_w"] for r in rows])),
+                "leaf_b": jnp.asarray(np.stack([r["leaf_b"] for r in rows])),
+                "err_lo": jnp.asarray(np.stack([r["err_lo"] for r in rows])),
+                "err_hi": jnp.asarray(np.stack([r["err_hi"] for r in rows])),
+                "keys": jnp.asarray(np.stack([r["keys"] for r in rows])),
+                "shard_n": jnp.asarray(np.array([r["n"] for r in rows])),
+                "shard_m": jnp.asarray(np.array([r["m"] for r in rows])),
+                "shard_ratio": jnp.asarray(
+                    np.array([r["ratio"] for r in rows], np.float32)
+                ),
+            }
+            hidden = next(iter(hiddens))
+            max_window = max(r["max_window"] for r in rows)
+            base_n = np.array([sn.n for sn in snaps], np.int64)
+            base_off_np = np.zeros(len(snaps), np.int64)
+            base_off_np[1:] = np.cumsum(base_n[:-1])
+            stacked["base_off"] = jnp.asarray(base_off_np.astype(np.int32))
+            mesh = self._shard_mesh()
+            if mesh is not None:
+                # device-mapped shards: the vmapped XLA path partitions
+                # over a 1-D shard mesh when the host exposes enough devices
+                stacked = place_index_shards(stacked, mesh)
+            cached = (static_key, stacked, hidden, max_window,
+                      [sn.keys.normalize for sn in snaps], base_off_np)
+            self._static_plan = cached
             return cached
-        n_pad = _pad_bucket(max(sn.n for sn in snaps) + 1)
-        m_pad = _pad_bucket(max(sn.index.num_leaves for sn in snaps),
-                            min_pad=16)
-        hiddens = {tuple(sn.index.config.stage0_hidden) for sn in snaps}
-        if len(hiddens) != 1:
-            raise ValueError("shards disagree on stage-0 architecture")
-        rows_cache = getattr(self, "_static_rows", {})
-        rows = []
-        new_cache = {}
-        for s, sn in enumerate(snaps):
-            prev = rows_cache.get(s)
-            if (prev is not None and prev[0] is sn
-                    and prev[1]["keys"].shape[0] == n_pad
-                    and prev[1]["leaf_w"].shape[0] == m_pad):
-                row = prev[1]
-            else:
-                row = kernels_ops.pad_shard_row(
-                    sn.index, sn.keys.norm, n_pad, m_pad
-                )
-            rows.append(row)
-            new_cache[s] = (sn, row)
-        self._static_rows = new_cache
-        nl = len(next(iter(hiddens))) + 1
-        stacked = {
-            "stage0": tuple(
-                jnp.asarray(np.stack([r["stage0"][i] for r in rows]))
-                for i in range(2 * nl)
-            ),
-            "leaf_w": jnp.asarray(np.stack([r["leaf_w"] for r in rows])),
-            "leaf_b": jnp.asarray(np.stack([r["leaf_b"] for r in rows])),
-            "err_lo": jnp.asarray(np.stack([r["err_lo"] for r in rows])),
-            "err_hi": jnp.asarray(np.stack([r["err_hi"] for r in rows])),
-            "keys": jnp.asarray(np.stack([r["keys"] for r in rows])),
-            "shard_n": jnp.asarray(np.array([r["n"] for r in rows])),
-            "shard_m": jnp.asarray(np.array([r["m"] for r in rows])),
-            "shard_ratio": jnp.asarray(
-                np.array([r["ratio"] for r in rows], np.float32)
-            ),
-        }
-        hidden = next(iter(hiddens))
-        max_window = max(r["max_window"] for r in rows)
-        base_n = np.array([sn.n for sn in snaps], np.int64)
-        base_off_np = np.zeros(len(snaps), np.int64)
-        base_off_np[1:] = np.cumsum(base_n[:-1])
-        stacked["base_off"] = jnp.asarray(base_off_np.astype(np.int32))
-        mesh = self._shard_mesh()
-        if mesh is not None:
-            # device-mapped shards: the vmapped XLA path partitions
-            # over a 1-D shard mesh when the host exposes enough devices
-            stacked = place_index_shards(stacked, mesh)
-        cached = (static_key, stacked, hidden, max_window,
-                  [sn.keys.normalize for sn in snaps], base_off_np)
-        self._static_plan = cached
-        return cached
 
     def _device_plan(self) -> _DevicePlan:
         """The one-dispatch lookup plan, cached incrementally: keyed
@@ -844,83 +881,85 @@ class ShardedIndexService:
         so a write to one shard re-packs exactly one row of the host
         delta mirrors (and its live count) before the re-upload; the
         old path rebuilt and re-counted every shard on every write."""
-        caps = [s._capture() for s in self._shards]
-        key = tuple((c[0], c[3]) for c in caps)
-        plan = self._plan
-        if plan is not None and _same_objects(plan.key, key):
-            self._plane_ctr["lookup.hit"].add(1)
-            return plan
-        self._plane_ctr["lookup.miss"].add(1)
-        snaps = [c[0] for c in caps]
-        (_, stacked, hidden, max_window, normalizers,
-         base_off_np) = self._static_stack(snaps)
+        with self._lock:
+            caps = [s._capture() for s in self._shards]
+            key = tuple((c[0], c[3]) for c in caps)
+            plan = self._plan
+            if plan is not None and _same_objects(plan.key, key):
+                self._plane_ctr["lookup.hit"].add(1)
+                return plan
+            self._plane_ctr["lookup.miss"].add(1)
+            snaps = [c[0] for c in caps]
+            (_, stacked, hidden, max_window, normalizers,
+             base_off_np) = self._static_stack(snaps)
 
-        d_max = max(int(c[3].shape[0]) for c in caps)
-        reuse = (
-            plan is not None
-            and len(plan.key) == len(key)
-            and plan.dkeys_np.shape[1] == d_max
-        )
-        if reuse:
-            dkeys = plan.dkeys_np
-            dprefix = plan.dprefix_np
-            live = plan.live_np
-            changed = [
-                s for s in range(len(caps))
-                if not (plan.key[s][0] is key[s][0]
-                        and plan.key[s][1] is key[s][1])
-            ]
-        else:
-            dkeys = np.full((len(caps), d_max), np.inf, np.float32)
-            dprefix = np.zeros((len(caps), d_max + 1), np.int32)
-            live = np.zeros(len(caps), np.int64)
-            changed = list(range(len(caps)))
-        for s in changed:
-            c = caps[s]
-            dk, dp = np.asarray(c[3]), np.asarray(c[4])
-            dkeys[s, :] = np.inf
-            dkeys[s, : dk.size] = dk
-            dprefix[s, : dp.size] = dp
-            dprefix[s, dp.size:] = dp[-1]
-            live[s] = snaps[s].n + int(
-                count_less(c[1], c[2], np.array([np.inf]))[0]
+            d_max = max(int(c[3].shape[0]) for c in caps)
+            reuse = (
+                plan is not None
+                and len(plan.key) == len(key)
+                and plan.dkeys_np.shape[1] == d_max
             )
-        merged_off_np = np.zeros(len(caps), np.int64)
-        merged_off_np[1:] = np.cumsum(live[:-1])
-        delta = {
-            # copies, not asarray: the host mirrors mutate in place on
-            # the next incremental build (same aliasing hazard as the
-            # scan plane)
-            "dkeys": jnp.array(dkeys),
-            "dprefix": jnp.array(dprefix),
-            "merged_off": jnp.array(merged_off_np.astype(np.int32)),
-        }
-        mesh = self._shard_mesh()
-        if mesh is not None:
-            delta = place_index_shards(delta, mesh)
-        plan = _DevicePlan(
-            key=key,
-            caps=caps,
-            q_normalizers=normalizers,
-            **stacked,
-            **delta,
-            hidden=hidden,
-            max_window=max_window,
-            dkeys_np=dkeys,
-            dprefix_np=dprefix,
-            live_np=live,
-            base_off_np=base_off_np,
-            merged_off_np=merged_off_np,
-        )
-        self._plan = plan
-        return plan
+            if reuse:
+                dkeys = plan.dkeys_np
+                dprefix = plan.dprefix_np
+                live = plan.live_np
+                changed = [
+                    s for s in range(len(caps))
+                    if not (plan.key[s][0] is key[s][0]
+                            and plan.key[s][1] is key[s][1])
+                ]
+            else:
+                dkeys = np.full((len(caps), d_max), np.inf, np.float32)
+                dprefix = np.zeros((len(caps), d_max + 1), np.int32)
+                live = np.zeros(len(caps), np.int64)
+                changed = list(range(len(caps)))
+            for s in changed:
+                c = caps[s]
+                dk, dp = np.asarray(c[3]), np.asarray(c[4])
+                dkeys[s, :] = np.inf
+                dkeys[s, : dk.size] = dk
+                dprefix[s, : dp.size] = dp
+                dprefix[s, dp.size:] = dp[-1]
+                live[s] = snaps[s].n + int(
+                    count_less(c[1], c[2], np.array([np.inf]))[0]
+                )
+            merged_off_np = np.zeros(len(caps), np.int64)
+            merged_off_np[1:] = np.cumsum(live[:-1])
+            delta = {
+                # copies, not asarray: the host mirrors mutate in place on
+                # the next incremental build (same aliasing hazard as the
+                # scan plane)
+                "dkeys": jnp.array(dkeys),
+                "dprefix": jnp.array(dprefix),
+                "merged_off": jnp.array(merged_off_np.astype(np.int32)),
+            }
+            mesh = self._shard_mesh()
+            if mesh is not None:
+                delta = place_index_shards(delta, mesh)
+            plan = _DevicePlan(
+                key=key,
+                caps=caps,
+                q_normalizers=normalizers,
+                **stacked,
+                **delta,
+                hidden=hidden,
+                max_window=max_window,
+                dkeys_np=dkeys,
+                dprefix_np=dprefix,
+                live_np=live,
+                base_off_np=base_off_np,
+                merged_off_np=merged_off_np,
+            )
+            self._plan = plan
+            return plan
 
     # ---- writes ----------------------------------------------------------
     def insert(self, keys, vals=None) -> int:
         t0 = time.perf_counter()
         q = np.atleast_1d(np.asarray(keys, np.float64))
         v = None if vals is None else np.atleast_1d(np.asarray(vals, np.int64))
-        with obs_trace.span("service.insert", cat="service", sharded=True):
+        with obs_trace.span("service.insert", cat="service", sharded=True), \
+                self._lock:
             shard_of = self._router.route(q)
             applied = 0
             for s, svc in enumerate(self._shards):
@@ -948,34 +987,35 @@ class ShardedIndexService:
         return applied
 
     def _delete_inner(self, q: np.ndarray) -> int:
-        # a shard's IndexService cannot compact below 2 keys, so a
-        # batch that would drain one shard's whole range (routine at
-        # K > 1) first rebalances.  Equalization repopulates the
-        # at-risk shards from their neighbors WITHOUT dropping K while
-        # the live set has headroom; only when it does not, K steps
-        # down ONE shard at a time (local pair merges — not the old
-        # stop-the-world halving), bottoming out at the K=1
-        # (global-drain) semantics of the unsharded service.  The
-        # cheap guard counts requested keys; only when it trips do we
-        # pay for an exact per-shard liveness check, so no-op deletes
-        # of absent keys (idempotent retries) never cascade
-        # rebalances.
-        u = np.unique(q)
-        while self.num_shards > 1 and self._delete_would_drain(u):
-            k = self.num_shards
-            self.rebalance(k)
-            if self.num_shards >= k and self._delete_would_drain(u):
-                self.rebalance(k - 1)
-        shard_of = self._router.route(q)
-        applied = 0
-        for s, svc in enumerate(self._shards):
-            m = shard_of == s
-            if m.any():
-                applied += svc.delete(q[m])
-        self._maybe_rebalance()
-        return applied
+        with self._lock:
+            # a shard's IndexService cannot compact below 2 keys, so a
+            # batch that would drain one shard's whole range (routine at
+            # K > 1) first rebalances.  Equalization repopulates the
+            # at-risk shards from their neighbors WITHOUT dropping K while
+            # the live set has headroom; only when it does not, K steps
+            # down ONE shard at a time (local pair merges — not the old
+            # stop-the-world halving), bottoming out at the K=1
+            # (global-drain) semantics of the unsharded service.  The
+            # cheap guard counts requested keys; only when it trips do we
+            # pay for an exact per-shard liveness check, so no-op deletes
+            # of absent keys (idempotent retries) never cascade
+            # rebalances.
+            u = np.unique(q)
+            while self.num_shards > 1 and self._delete_would_drain(u):
+                k = self.num_shards
+                self.rebalance(k)
+                if self.num_shards >= k and self._delete_would_drain(u):
+                    self.rebalance(k - 1)
+            shard_of = self._router.route(q)
+            applied = 0
+            for s, svc in enumerate(self._shards):
+                m = shard_of == s
+                if m.any():
+                    applied += svc.delete(q[m])
+            self._maybe_rebalance()
+            return applied
 
-    def _delete_would_drain(self, u: np.ndarray) -> bool:
+    def _delete_would_drain(self, u: np.ndarray) -> bool:  # lixlint: holds(_lock)
         """True when deleting unique keys ``u`` could leave some shard
         below the 2 keys its IndexService needs."""
         shard_u = self._router.route(u)
@@ -1006,39 +1046,41 @@ class ShardedIndexService:
 
     # ---- compaction / rebalancing ---------------------------------------
     def flush(self) -> None:
-        if self.num_shards > 1 and (self._live_counts() < 2).any():
-            # a drained shard cannot compact; equalization repopulates
-            # it from its neighbors (K only shrinks when the whole live
-            # set is too small to sustain it)
-            self.rebalance(self.num_shards)
-        for s in self._shards:
-            s.flush()
+        with self._lock:
+            if self.num_shards > 1 and (self._live_counts() < 2).any():
+                # a drained shard cannot compact; equalization repopulates
+                # it from its neighbors (K only shrinks when the whole live
+                # set is too small to sustain it)
+                self.rebalance(self.num_shards)
+            for s in self._shards:
+                s.flush()
 
     def _maybe_rebalance(self) -> bool:
-        k = self.num_shards
-        counts = self._live_counts()
-        total = int(counts.sum())
-        target = self.config.num_shards
-        if k < target and total >= 4 * target:
-            # earlier drain-rebalances shrank K; regrow to the intent
-            self.rebalance(target)
+        with self._lock:
+            k = self.num_shards
+            counts = self._live_counts()
+            total = int(counts.sum())
+            target = self.config.num_shards
+            if k < target and total >= 4 * target:
+                # earlier drain-rebalances shrank K; regrow to the intent
+                self.rebalance(target)
+                return True
+            if k == 1:
+                return False
+            if counts.min() < 2:
+                # repopulate the drained shard from its neighbors; the
+                # rebalance clamp shrinks K only if the live set demands it
+                self.rebalance(k)
+                return True
+            if total < 4 * k:
+                return False
+            if counts.max() <= self.config.shard_balance_factor * total / k:
+                return False
+            self.rebalance()
             return True
-        if k == 1:
-            return False
-        if counts.min() < 2:
-            # repopulate the drained shard from its neighbors; the
-            # rebalance clamp shrinks K only if the live set demands it
-            self.rebalance(k)
-            return True
-        if total < 4 * k:
-            return False
-        if counts.max() <= self.config.shard_balance_factor * total / k:
-            return False
-        self.rebalance()
-        return True
 
     # ---- online rebalance primitives ------------------------------------
-    def _retire_stats(self, old: Sequence[IndexService]) -> None:
+    def _retire_stats(self, old: Sequence[IndexService]) -> None:  # lixlint: holds(_lock)
         """Fold retiring shards' lifetime tallies into ``_retired`` so
         aggregate stats and the `version` property stay monotone across
         reshapes."""
@@ -1047,7 +1089,7 @@ class ShardedIndexService:
             for stat, v in svc.stats.items():
                 self._retired[stat] = self._retired.get(stat, 0) + v
 
-    def _install_router(self, boundaries, sample=None) -> None:
+    def _install_router(self, boundaries, sample=None) -> None:  # lixlint: holds(_lock)
         """Retire the current router (folding its lifetime tallies so
         stats_summary stays monotone) and install a freshly fitted one
         over ``boundaries``."""
@@ -1061,7 +1103,7 @@ class ShardedIndexService:
         self._router = router
         self._refit_ctr.add(1)
 
-    def _reshape(self, s0: int, s1: int, cut_counts: Sequence[int]) -> None:
+    def _reshape(self, s0: int, s1: int, cut_counts: Sequence[int]) -> None:  # lixlint: holds(_lock)
         """The one LOCAL rebalance step: rebuild shards [s0, s1) into
         ``len(cut_counts)`` new shards holding exactly those live-key
         counts, shipping the retiring shards' collapsed live slices
@@ -1104,19 +1146,19 @@ class ShardedIndexService:
         self._install_router(bounds)
         self._shards = shards
 
-    def _merge_pair(self, s: int) -> None:
+    def _merge_pair(self, s: int) -> None:  # lixlint: holds(_lock)
         """Merge shards s and s+1 into one (a local 2 -> 1 reshape)."""
         c = self._live_counts()
         self._reshape(s, s + 2, [int(c[s] + c[s + 1])])
         self._reshape_ctr["merges"].add(1)
 
-    def _split_shard(self, s: int) -> None:
+    def _split_shard(self, s: int) -> None:  # lixlint: holds(_lock)
         """Split shard s at its live median (a local 1 -> 2 reshape)."""
         c = int(self._live_counts()[s])
         self._reshape(s, s + 1, [c - c // 2, c // 2])
         self._reshape_ctr["splits"].add(1)
 
-    def _equalize(self) -> None:
+    def _equalize(self) -> None:  # lixlint: holds(_lock)
         """Left-to-right boundary sweeps pinning each boundary to its
         global live quantile: boundary s moves so shards 0..s hold
         (s+1)/K of the live keys.  Each move is one local pair reshape
@@ -1155,81 +1197,84 @@ class ShardedIndexService:
         shard keeps the >= 2 keys an IndexService needs; a final model
         re-fit installs a fresh router — fresh health stats — over a
         global live sample even when no boundary moved."""
-        with obs_trace.span("service.rebalance", cat="rebalance"), \
-                self._op_hist["rebalance"].time():
-            total = int(self._live_counts().sum())
-            k = max(1, min(num_shards or self.num_shards,
-                           max(1, total // 2)))
-            # 1. drained shards first: merge each into a neighbor (an
-            #    IndexService cannot exist below 2 keys)
-            while self.num_shards > 1:
-                counts = self._live_counts()
-                low = int(counts.argmin())
-                if counts[low] >= 2:
-                    break
-                self._merge_pair(
-                    low if low + 1 < self.num_shards else low - 1
-                )
-            # 2. walk K to the target: merge the lightest adjacent
-            #    pair / split the heaviest shard, one step at a time
-            while self.num_shards > k:
-                counts = self._live_counts()
-                self._merge_pair(int((counts[:-1] + counts[1:]).argmin()))
-            while self.num_shards < k:
-                counts = self._live_counts()
-                big = int(counts.argmax())
-                if counts[big] < 4:
-                    break
-                self._split_shard(big)
-            # 3. pin every boundary to its global live quantile
-            self._equalize()
-            # 4. fresh router over a global base sample
-            snaps = [s._state()[0] for s in self._shards]
-            sample = np.concatenate([
-                sn.keys.raw[:: max(1, sn.n // 64)] for sn in snaps
-            ]) if snaps else np.empty(0, np.float64)
-            self._install_router(self._router.boundaries, sample=sample)
-            self.stats["rebalances"] += 1
-            if self.config.snapshot_dir is not None:
-                self._save_router()
+        with self._lock:
+            with obs_trace.span("service.rebalance", cat="rebalance"), \
+                    self._op_hist["rebalance"].time():
+                total = int(self._live_counts().sum())
+                k = max(1, min(num_shards or self.num_shards,
+                               max(1, total // 2)))
+                # 1. drained shards first: merge each into a neighbor (an
+                #    IndexService cannot exist below 2 keys)
+                while self.num_shards > 1:
+                    counts = self._live_counts()
+                    low = int(counts.argmin())
+                    if counts[low] >= 2:
+                        break
+                    self._merge_pair(
+                        low if low + 1 < self.num_shards else low - 1
+                    )
+                # 2. walk K to the target: merge the lightest adjacent
+                #    pair / split the heaviest shard, one step at a time
+                while self.num_shards > k:
+                    counts = self._live_counts()
+                    self._merge_pair(int((counts[:-1] + counts[1:]).argmin()))
+                while self.num_shards < k:
+                    counts = self._live_counts()
+                    big = int(counts.argmax())
+                    if counts[big] < 4:
+                        break
+                    self._split_shard(big)
+                # 3. pin every boundary to its global live quantile
+                self._equalize()
+                # 4. fresh router over a global base sample
+                snaps = [s._state()[0] for s in self._shards]
+                sample = np.concatenate([
+                    sn.keys.raw[:: max(1, sn.n // 64)] for sn in snaps
+                ]) if snaps else np.empty(0, np.float64)
+                self._install_router(self._router.boundaries, sample=sample)
+                self.stats["rebalances"] += 1
+                if self.config.snapshot_dir is not None:
+                    self._save_router()
 
     # ---- persistence -----------------------------------------------------
     def _save_router(self) -> str:
-        os.makedirs(self.config.snapshot_dir, exist_ok=True)
-        return self._router.save(
-            os.path.join(self.config.snapshot_dir, _ROUTER_FILE)
-        )
+        with self._lock:
+            os.makedirs(self.config.snapshot_dir, exist_ok=True)
+            return self._router.save(
+                os.path.join(self.config.snapshot_dir, _ROUTER_FILE)
+            )
 
     def save(self, directory: Optional[str] = None) -> str:
         """Drain + persist: every shard compacts and writes its latest
         snapshot under ``<dir>/shard-XX/``; the router lands beside
         them."""
-        if directory is not None:
-            self.config = dataclasses.replace(
-                self.config, snapshot_dir=directory
-            )
-        assert self.config.snapshot_dir is not None, "no snapshot_dir"
-        self.flush()
-        for s, svc in enumerate(self._shards):
-            sub = os.path.join(
-                self.config.snapshot_dir, _SHARD_DIR.format(s)
-            )
-            if os.path.isdir(sub):
-                # reshapes reassign ranges between shard slots, so a
-                # stale higher-version snapshot here could shadow the
-                # one we are about to write on the next load
+        with self._lock:
+            if directory is not None:
+                self.config = dataclasses.replace(
+                    self.config, snapshot_dir=directory
+                )
+            assert self.config.snapshot_dir is not None, "no snapshot_dir"
+            self.flush()
+            for s, svc in enumerate(self._shards):
+                sub = os.path.join(
+                    self.config.snapshot_dir, _SHARD_DIR.format(s)
+                )
+                if os.path.isdir(sub):
+                    # reshapes reassign ranges between shard slots, so a
+                    # stale higher-version snapshot here could shadow the
+                    # one we are about to write on the next load
+                    shutil.rmtree(sub)
+                svc.save(sub)
+            s = self.num_shards
+            while True:  # drop shard dirs beyond the current K
+                sub = os.path.join(
+                    self.config.snapshot_dir, _SHARD_DIR.format(s)
+                )
+                if not os.path.isdir(sub):
+                    break
                 shutil.rmtree(sub)
-            svc.save(sub)
-        s = self.num_shards
-        while True:  # drop shard dirs beyond the current K
-            sub = os.path.join(
-                self.config.snapshot_dir, _SHARD_DIR.format(s)
-            )
-            if not os.path.isdir(sub):
-                break
-            shutil.rmtree(sub)
-            s += 1
-        return self._save_router()
+                s += 1
+            return self._save_router()
 
     @classmethod
     def load(
@@ -1253,66 +1298,67 @@ class ShardedIndexService:
 
     # ---- reporting -------------------------------------------------------
     def stats_summary(self) -> Dict[str, object]:
-        def agg(key):
-            return (self._retired.get(key, 0)
-                    + sum(s.stats[key] for s in self._shards))
-        s = self.stats
+        with self._lock:
+            def agg(key):  # lixlint: holds(_lock)
+                return (self._retired.get(key, 0)
+                        + sum(s.stats[key] for s in self._shards))
+            s = self.stats
 
-        def per_op(kind):
-            n = s[kind]
-            return {
-                "count": int(n),
-                "ns_per_op": (s[f"{kind}_s"] / n * 1e9) if n else 0.0,
+            def per_op(kind):
+                n = s[kind]
+                return {
+                    "count": int(n),
+                    "ns_per_op": (s[f"{kind}_s"] / n * 1e9) if n else 0.0,
+                }
+            counts = self._live_counts()
+            # router health: hit-rate over the SERVICE lifetime (current
+            # router + every router retired by a rebalance re-fit), plus
+            # the live-count skew the next re-fit would be judged by
+            routed = self._retired.get("router_routed", 0) \
+                + self._router.stats["routed"]
+            model_hits = self._retired.get("router_model_hits", 0) \
+                + self._router.stats["model_hits"]
+            mean = counts.mean() if counts.size else 0.0
+            router_health = {
+                "model_hit_rate": (model_hits / routed) if routed else None,
+                "routed": int(routed),
+                "refits": int(self._refit_ctr.value),
+                "rebalances": int(s["rebalances"]),
+                "live_count_skew": (
+                    float(counts.max() / mean) if mean > 0 else 0.0
+                ),
             }
-        counts = self._live_counts()
-        # router health: hit-rate over the SERVICE lifetime (current
-        # router + every router retired by a rebalance re-fit), plus
-        # the live-count skew the next re-fit would be judged by
-        routed = self._retired.get("router_routed", 0) \
-            + self._router.stats["routed"]
-        model_hits = self._retired.get("router_model_hits", 0) \
-            + self._router.stats["model_hits"]
-        mean = counts.mean() if counts.size else 0.0
-        router_health = {
-            "model_hit_rate": (model_hits / routed) if routed else None,
-            "routed": int(routed),
-            "refits": int(self._refit_ctr.value),
-            "rebalances": int(s["rebalances"]),
-            "live_count_skew": (
-                float(counts.max() / mean) if mean > 0 else 0.0
-            ),
-        }
-        return {
-            "num_shards": self.num_shards,
-            "live_keys": int(counts.sum()),
-            "shard_live_keys": counts.tolist(),
-            "shard_versions": [sh.version for sh in self._shards],
-            "rebalances": int(s["rebalances"]),
-            "router_model_hit_rate": self._router.model_hit_rate,
-            "router": router_health,
-            "get": {
-                **per_op("get"),
-                "hit_rate": s["get_hits"] / s["get"] if s["get"] else 0.0,
-            },
-            "contains": {
-                **per_op("contains"),
-                "hit_rate": (s["contains_hits"] / s["contains"]
-                             if s["contains"] else 0.0),
+            return {
+                "num_shards": self.num_shards,
+                "live_keys": int(counts.sum()),
+                "shard_live_keys": counts.tolist(),
+                "shard_versions": [sh.version for sh in self._shards],
+                "rebalances": int(s["rebalances"]),
+                "router_model_hit_rate": self._router.model_hit_rate,
+                "router": router_health,
+                "get": {
+                    **per_op("get"),
+                    "hit_rate": s["get_hits"] / s["get"] if s["get"] else 0.0,
+                },
+                "contains": {
+                    **per_op("contains"),
+                    "hit_rate": (s["contains_hits"] / s["contains"]
+                                 if s["contains"] else 0.0),
+                    "bloom_screened": int(agg("bloom_screened")),
+                    "bloom_fp": int(agg("bloom_fp")),
+                },
+                "range": per_op("range"),
+                "scan": {
+                    "count": int(s["scan"]),
+                    "pages": int(s["scan_pages"]),
+                    "rows": int(s["scan_rows"]),
+                    "total_s": round(s["scan_s"], 4),
+                },
+                "insert_applied": int(agg("insert_applied")),
+                "delete_applied": int(agg("delete_applied")),
+                "compactions": int(agg("compactions")),
+                "compact_stalls": int(agg("compact_stalls")),
+                "write_stalls": int(agg("write_stalls")),
+                "write_stall_s": float(agg("write_stall_s")),
                 "bloom_screened": int(agg("bloom_screened")),
-                "bloom_fp": int(agg("bloom_fp")),
-            },
-            "range": per_op("range"),
-            "scan": {
-                "count": int(s["scan"]),
-                "pages": int(s["scan_pages"]),
-                "rows": int(s["scan_rows"]),
-                "total_s": round(s["scan_s"], 4),
-            },
-            "insert_applied": int(agg("insert_applied")),
-            "delete_applied": int(agg("delete_applied")),
-            "compactions": int(agg("compactions")),
-            "compact_stalls": int(agg("compact_stalls")),
-            "write_stalls": int(agg("write_stalls")),
-            "write_stall_s": float(agg("write_stall_s")),
-            "bloom_screened": int(agg("bloom_screened")),
-        }
+            }

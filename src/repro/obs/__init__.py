@@ -29,6 +29,7 @@ from repro.obs.metrics import (
     default_registry,
 )
 from repro.obs.trace import Tracer, TRACER, span, instant
+from repro.obs import lockstat
 from repro.obs.export import (
     chrome_trace,
     op_latency_rows,
@@ -43,6 +44,7 @@ __all__ = [
     "Counter", "Gauge", "Histogram", "MetricsRegistry", "StatsView",
     "default_registry",
     "Tracer", "TRACER", "span", "instant",
+    "lockstat",
     "chrome_trace", "op_latency_rows", "prometheus_text", "registry_json",
     "write_chrome_trace", "write_json", "write_prometheus",
 ]

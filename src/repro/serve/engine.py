@@ -63,6 +63,12 @@ def prefix_key(prompt: List[int]) -> str:
 
 
 class ServeEngine:
+    # Concurrency contract: instances cross threads (built by the caller,
+    # driven by one dispatcher), but every mutating method — admit, tick,
+    # retire — runs on that single dispatcher thread; there is no
+    # internal lock by design.
+    # lixlint: thread-shared
+    # lixlint: unsynchronized(single-dispatcher-thread ownership; see contract above)
     def __init__(
         self,
         api,

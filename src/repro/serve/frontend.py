@@ -58,6 +58,7 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.index_service.scan import _pad_bucket
+from repro.obs import lockstat
 from repro.obs import trace as obs_trace
 from repro.obs.export import op_latency_rows
 from repro.obs.metrics import MetricsRegistry
@@ -143,12 +144,12 @@ class IndexFrontend:
         self.metrics = metrics if metrics is not None else MetricsRegistry(
             "frontend"
         )
-        self._queue: collections.deque = collections.deque()
-        self._cond = threading.Condition()
-        self._tenants: Dict[str, _Tenant] = {}
-        self._tenants_lock = threading.Lock()
+        self._queue: collections.deque = collections.deque()  # guarded-by: _cond
+        self._cond = threading.Condition(lockstat.make_lock("frontend._cond"))
+        self._tenants: Dict[str, _Tenant] = {}  # guarded-by: _tenants_lock
+        self._tenants_lock = lockstat.make_lock("frontend._tenants")
         self._worker: Optional[threading.Thread] = None
-        self._stopping = False
+        self._stopping = False  # guarded-by: _cond
         self._rounds_ctr = self.metrics.counter("frontend.rounds")
         self._enq_ctr = self.metrics.counter("frontend.enqueued")
         self._rej_ctr = self.metrics.counter("frontend.rejected")
@@ -170,7 +171,9 @@ class IndexFrontend:
     def start(self) -> "IndexFrontend":
         if self._worker is not None:
             raise RuntimeError("frontend already started")
-        self._stopping = False
+        with self._cond:
+            self._stopping = False
+        # lixlint: unsynchronized(start/stop run on the owner thread only)
         self._worker = threading.Thread(target=self._loop, daemon=True)
         self._worker.start()
         return self
@@ -184,6 +187,7 @@ class IndexFrontend:
             self._stopping = True
             self._cond.notify_all()
         w.join()
+        # lixlint: unsynchronized(start/stop run on the owner thread only)
         self._worker = None
 
     def __enter__(self) -> "IndexFrontend":

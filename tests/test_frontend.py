@@ -15,6 +15,7 @@ import pytest
 
 from repro.index_service import IndexService, ServiceConfig
 from repro.kernels import ops
+from repro.obs import lockstat
 from repro.serve import Backpressure, FrontendConfig, IndexFrontend, WriteShed
 
 
@@ -114,6 +115,11 @@ def test_write_shed_keeps_reads_serving():
 # ---- read-your-writes across the maintenance machinery ---------------------
 
 def test_threaded_clients_read_their_writes():
+    # lock-order sanitizer armed for the run: the frontend condition +
+    # service lock acquisitions across 8 client threads, the dispatcher
+    # and delta freezes must form an acyclic order graph
+    lockstat.enable()
+    lockstat.reset()
     fe = _frontend(delta_capacity=64)  # small: force freezes mid-run
     errors = []
 
@@ -139,6 +145,11 @@ def test_threaded_clients_read_their_writes():
             t.start()
         for t in threads:
             t.join()
+    try:
+        lockstat.assert_acyclic()
+    finally:
+        lockstat.disable()
+        lockstat.reset()
     assert not errors
     # the churn actually crossed at least one freeze/swap boundary
     assert fe.service.metrics.counter("delta.freezes").value >= 1

@@ -1,0 +1,64 @@
+"""lixlint: repo-aware static analysis for the learned-index stack.
+
+Three AST passes (lock discipline, dispatch hygiene, trace purity) plus
+a shared annotation/waiver/baseline layer; the runtime lock-order
+sanitizer lives in ``repro.obs.lockstat``.  Run as::
+
+    python -m tools.lixlint src/repro
+
+See the README "Static analysis" section for the annotation grammar.
+"""
+
+from __future__ import annotations
+
+from pathlib import Path
+from typing import List, Optional, Sequence, Tuple
+
+from . import dispatch_hygiene, lock_discipline, trace_purity
+from .core import Baseline, Finding, SourceFile, load_sources
+
+__all__ = [
+    "Baseline",
+    "Finding",
+    "SourceFile",
+    "load_sources",
+    "run_passes",
+    "lock_discipline",
+    "dispatch_hygiene",
+    "trace_purity",
+]
+
+PASSES = ("lock", "dispatch", "purity")
+
+
+def run_passes(
+    sources: Sequence[SourceFile],
+    passes: Sequence[str] = PASSES,
+    entry_points: Optional[Sequence[Tuple[str, str]]] = None,
+) -> List[Finding]:
+    """Run the requested passes; returns unwaived findings (sorted)."""
+    findings: List[Finding] = []
+    for src in sources:
+        findings.extend(src.malformed)
+    if "lock" in passes:
+        findings.extend(lock_discipline.run(sources))
+    if "dispatch" in passes:
+        if entry_points is None:
+            findings.extend(dispatch_hygiene.run(sources))
+        else:
+            findings.extend(dispatch_hygiene.run(sources, entry_points))
+    if "purity" in passes:
+        findings.extend(trace_purity.run(sources))
+    findings.sort(key=lambda f: (f.path, f.line, f.code))
+    return findings
+
+
+def analyze_paths(
+    paths: Sequence[str],
+    root: Optional[Path] = None,
+    passes: Sequence[str] = PASSES,
+) -> List[Finding]:
+    """Convenience: load every .py under `paths` and run `passes`."""
+    root = root or Path.cwd()
+    sources = load_sources([Path(p) for p in paths], root)
+    return run_passes(sources, passes)

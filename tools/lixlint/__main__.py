@@ -1,0 +1,89 @@
+"""CLI: ``python -m tools.lixlint [paths...]``.
+
+Exit status 0 iff every finding is either waived in-source or present in
+the committed baseline (``tools/lixlint/baseline.json``).  New findings
+print with file:line and fail the run — fix them, waive them with a
+reason, or (for pre-existing debt only) re-baseline with
+``--write-baseline`` and justify the diff in review.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import List
+
+from . import PASSES, run_passes
+from .core import Baseline, Finding, load_sources
+
+DEFAULT_BASELINE = Path(__file__).resolve().parent / "baseline.json"
+
+
+def main(argv: List[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.lixlint",
+        description="repo-aware static analysis (lock/dispatch/purity passes)",
+    )
+    ap.add_argument("paths", nargs="*", default=["src/repro"],
+                    help="files or directories to analyze (default: src/repro)")
+    ap.add_argument("--root", default=".",
+                    help="repo root findings paths are relative to")
+    ap.add_argument("--passes", default=",".join(PASSES),
+                    help=f"comma-separated subset of {','.join(PASSES)}")
+    ap.add_argument("--baseline", default=str(DEFAULT_BASELINE),
+                    help="baseline JSON path")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="ignore the baseline (report everything)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="rewrite the baseline to the current finding set")
+    ap.add_argument("--report", default=None,
+                    help="write a machine-readable findings report (JSON)")
+    args = ap.parse_args(argv)
+
+    root = Path(args.root).resolve()
+    paths = [Path(p) if Path(p).is_absolute() else root / p for p in args.paths]
+    sources = load_sources(paths, root)
+    passes = [p.strip() for p in args.passes.split(",") if p.strip()]
+    findings = run_passes(sources, passes)
+
+    baseline_path = Path(args.baseline)
+    if args.write_baseline:
+        Baseline().save(baseline_path, findings)
+        print(f"lixlint: wrote {len(findings)} finding(s) to {baseline_path}")
+        return 0
+
+    baseline = Baseline() if args.no_baseline else Baseline.load(baseline_path)
+    new, baselined, stale = baseline.split(findings)
+
+    if args.report:
+        payload = {
+            "files": len(sources),
+            "passes": passes,
+            "new": [vars(f) | {"key": f.key} for f in new],
+            "baselined": [vars(f) | {"key": f.key} for f in baselined],
+            "stale_baseline_keys": stale,
+        }
+        Path(args.report).write_text(json.dumps(payload, indent=2) + "\n")
+
+    for f in new:
+        print(f.render())
+    if stale:
+        print(
+            f"lixlint: note: {len(stale)} stale baseline entr"
+            f"{'y' if len(stale) == 1 else 'ies'} (fixed findings — "
+            f"shrink the baseline):", file=sys.stderr,
+        )
+        for key in stale:
+            print(f"  {key}", file=sys.stderr)
+    summary = (
+        f"lixlint: {len(sources)} files, {len(new)} new finding(s), "
+        f"{len(baselined)} baselined"
+    )
+    print(summary)
+    return 1 if new else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

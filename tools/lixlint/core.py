@@ -1,0 +1,291 @@
+"""lixlint core: source model, annotations, waivers, findings, baseline.
+
+The analyzer is comment-driven, and Python's ``ast`` drops comments, so
+each :class:`SourceFile` keeps a per-line comment map scraped from the
+raw source next to the parsed tree.  Annotation grammar (documented in
+the README "Static analysis" section):
+
+  ``# guarded-by: _lock``
+      On an attribute-assignment line in ``__init__``: every read/write
+      of that attribute outside ``with self._lock`` is a finding.
+  ``# lixlint: thread-shared``
+      Class-level marker: opt the class into shared-state analysis even
+      if it never spawns a thread itself (instances are handed to other
+      threads).
+  ``# lixlint: holds(_lock)``
+      On a ``def`` line (or any statement line): the enclosing code runs
+      with ``_lock`` held by caller contract, so guarded accesses under
+      it are legal.
+  ``# lixlint: unsynchronized(<reason>)``
+      Lock-discipline waiver (line-, function- or class-level).
+  ``# lixlint: host-sync(<reason>)``
+      Dispatch-hygiene waiver: this host round-trip is intentional.
+  ``# lixlint: impure(<reason>)``
+      Trace-purity waiver.
+  ``# lixlint: ignore(<reason>)``
+      Suppress every pass on the line.
+
+Waivers carry a mandatory reason: a bare ``unsynchronized`` without
+``(...)`` is itself reported (``waiver-missing-reason``) so the escape
+hatch stays auditable.
+
+Baseline entries match findings by stable key (pass:path:code:detail),
+never by line number, so unrelated edits don't churn the baseline.
+"""
+
+from __future__ import annotations
+
+import ast
+import json
+import re
+import tokenize
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+__all__ = [
+    "Finding",
+    "SourceFile",
+    "load_sources",
+    "Baseline",
+    "GUARDED_RE",
+    "DIRECTIVE_RE",
+]
+
+# ``# guarded-by: _lock``  (also accepts ``# guarded by:``)
+GUARDED_RE = re.compile(r"#\s*guarded[- ]by:\s*(?P<lock>[A-Za-z_][A-Za-z0-9_]*)")
+
+# ``# lixlint: directive(arg)[, directive2(arg2) ...]``
+DIRECTIVE_RE = re.compile(r"#\s*lixlint:\s*(?P<body>.+)$")
+_DIRECTIVE_ITEM_RE = re.compile(
+    r"(?P<name>[a-z-]+)\s*(?:\(\s*(?P<arg>[^()]*)\s*\))?"
+)
+
+# Directives that waive a pass; maps directive name -> pass id it waives
+# (``ignore`` waives everything).
+WAIVER_PASSES = {
+    "unsynchronized": "lock",
+    "host-sync": "dispatch",
+    "impure": "purity",
+    "ignore": "*",
+}
+# Directives that carry semantics rather than waiving.
+MARKER_DIRECTIVES = {"thread-shared", "holds"}
+
+
+@dataclass(frozen=True)
+class Directive:
+    name: str
+    arg: Optional[str]
+    line: int
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One analyzer finding.
+
+    ``detail`` is a line-number-free symbol path (e.g.
+    ``ShardedIndexService.insert:_shards``) used as the stable baseline
+    key; ``line`` is for humans.
+    """
+
+    pass_id: str
+    path: str
+    line: int
+    code: str
+    detail: str
+    message: str
+
+    @property
+    def key(self) -> str:
+        return f"{self.pass_id}:{self.path}:{self.code}:{self.detail}"
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: [{self.pass_id}/{self.code}] {self.message}"
+
+
+class SourceFile:
+    """A parsed module plus its comment/directive maps."""
+
+    def __init__(self, path: Path, root: Path) -> None:
+        self.path = path
+        self.rel = path.relative_to(root).as_posix()
+        self.text = path.read_text()
+        self.lines = self.text.splitlines()
+        self.tree = ast.parse(self.text, filename=str(path))
+        # line -> full comment text (comments only, via tokenize so '#'
+        # inside string literals never parses as an annotation)
+        self.comments: Dict[int, str] = {}
+        self._scan_comments()
+        # line -> [Directive]
+        self.directives: Dict[int, List[Directive]] = {}
+        self.malformed: List[Finding] = []
+        self._parse_directives()
+        self._attach_standalone()
+
+    def _scan_comments(self) -> None:
+        try:
+            tokens = tokenize.generate_tokens(iter(self.text.splitlines(True)).__next__)
+            for tok in tokens:
+                if tok.type == tokenize.COMMENT:
+                    self.comments[tok.start[0]] = tok.string
+        except tokenize.TokenError:  # pragma: no cover - parse already succeeded
+            for i, line in enumerate(self.lines, start=1):
+                if "#" in line:
+                    self.comments[i] = line[line.index("#"):]
+
+    def _parse_directives(self) -> None:
+        for line, comment in self.comments.items():
+            m = DIRECTIVE_RE.search(comment)
+            if not m:
+                continue
+            body = m.group("body")
+            for item in _DIRECTIVE_ITEM_RE.finditer(body):
+                name = item.group("name")
+                if name not in WAIVER_PASSES and name not in MARKER_DIRECTIVES:
+                    self.malformed.append(
+                        Finding(
+                            "meta", self.rel, line, "unknown-directive",
+                            f"L{name}",
+                            f"unknown lixlint directive {name!r}",
+                        )
+                    )
+                    continue
+                arg = item.group("arg")
+                if arg is not None:
+                    arg = arg.strip()
+                if name in WAIVER_PASSES and not arg:
+                    self.malformed.append(
+                        Finding(
+                            "meta", self.rel, line, "waiver-missing-reason",
+                            f"L{line}:{name}",
+                            f"waiver {name!r} requires a reason: "
+                            f"# lixlint: {name}(<why>)",
+                        )
+                    )
+                    continue
+                self.directives.setdefault(line, []).append(Directive(name, arg, line))
+
+    def _attach_standalone(self) -> None:
+        # A directive on its own comment line governs the next code line
+        # (standard standalone-pragma semantics), so long waiver reasons
+        # don't have to fit on the statement line.
+        for line in sorted(self.directives):
+            if line > len(self.lines):
+                continue
+            if not self.lines[line - 1].lstrip().startswith("#"):
+                continue
+            nxt = line + 1
+            while nxt <= len(self.lines):
+                s = self.lines[nxt - 1].strip()
+                if s and not s.startswith("#"):
+                    break
+                nxt += 1
+            if nxt <= len(self.lines):
+                for d in self.directives[line]:
+                    self.directives.setdefault(nxt, []).append(d)
+
+    # -- queries --------------------------------------------------------
+
+    def guarded_decl(self, line: int) -> Optional[str]:
+        """Lock name declared by a ``# guarded-by:`` comment on `line`."""
+        comment = self.comments.get(line)
+        if not comment:
+            return None
+        m = GUARDED_RE.search(comment)
+        return m.group("lock") if m else None
+
+    def directives_on(self, lines: Iterable[int]) -> List[Directive]:
+        out: List[Directive] = []
+        for line in lines:
+            out.extend(self.directives.get(line, ()))
+        return out
+
+    def node_lines(self, node: ast.AST) -> range:
+        lineno = getattr(node, "lineno", None)
+        if lineno is None:
+            return range(0)
+        end = getattr(node, "end_lineno", None) or lineno
+        return range(lineno, end + 1)
+
+    def waived(self, pass_id: str, lines: Iterable[int]) -> bool:
+        """True if any line carries a waiver for `pass_id` (or ignore)."""
+        for d in self.directives_on(lines):
+            waives = WAIVER_PASSES.get(d.name)
+            if waives == "*" or waives == pass_id:
+                return True
+        return False
+
+    def holds_locks(self, lines: Iterable[int]) -> Set[str]:
+        """Lock names asserted held via ``holds(...)`` on any of `lines`."""
+        out: Set[str] = set()
+        for d in self.directives_on(lines):
+            if d.name == "holds" and d.arg:
+                for part in d.arg.split(","):
+                    part = part.strip()
+                    if part:
+                        out.add(part)
+        return out
+
+
+def load_sources(paths: Sequence[Path], root: Path) -> List[SourceFile]:
+    """Load every ``.py`` under `paths` (files or directories)."""
+    files: List[Path] = []
+    for p in paths:
+        if p.is_dir():
+            files.extend(sorted(p.rglob("*.py")))
+        elif p.suffix == ".py":
+            files.append(p)
+    seen: Set[Path] = set()
+    out: List[SourceFile] = []
+    for f in files:
+        f = f.resolve()
+        if f in seen:
+            continue
+        seen.add(f)
+        out.append(SourceFile(f, root))
+    return out
+
+
+@dataclass
+class Baseline:
+    """Committed findings ledger: keys the gate tolerates (legacy debt)."""
+
+    entries: Dict[str, str] = field(default_factory=dict)  # key -> note
+
+    @classmethod
+    def load(cls, path: Path) -> "Baseline":
+        if not path.exists():
+            return cls()
+        raw = json.loads(path.read_text())
+        entries: Dict[str, str] = {}
+        for item in raw.get("findings", []):
+            entries[item["key"]] = item.get("note", "")
+        return cls(entries)
+
+    def save(self, path: Path, findings: Sequence[Finding]) -> None:
+        payload = {
+            "comment": "lixlint baseline: pre-existing findings tolerated by the "
+            "CI gate. Shrink this file; never grow it without review.",
+            "findings": [
+                {"key": f.key, "message": f.message} for f in
+                sorted(findings, key=lambda f: f.key)
+            ],
+        }
+        path.write_text(json.dumps(payload, indent=2) + "\n")
+
+    def split(
+        self, findings: Sequence[Finding]
+    ) -> Tuple[List[Finding], List[Finding], List[str]]:
+        """Partition into (new, baselined) + stale baseline keys."""
+        new: List[Finding] = []
+        old: List[Finding] = []
+        hit: Set[str] = set()
+        for f in findings:
+            if f.key in self.entries:
+                old.append(f)
+                hit.add(f.key)
+            else:
+                new.append(f)
+        stale = sorted(k for k in self.entries if k not in hit)
+        return new, old, stale

@@ -1,0 +1,339 @@
+"""Pass 2: dispatch hygiene — static twin of ``tests/test_dispatch_count.py``.
+
+Walks a static call graph from the hot-read entry points
+(``lookup_batch`` / ``get`` / ``contains`` / ``scan_batch`` on both
+services, frontend ``pump``) and flags host round-trips inside any
+reachable function:
+
+  * ``.item()``, ``.block_until_ready()``, ``jax.device_get(...)`` —
+    always findings on the hot path;
+  * ``np.asarray`` / ``np.array`` / ``float`` / ``int`` / ``bool``
+    applied to a *device-tainted* local — a hidden device->host sync.
+
+Taint is intra-procedural and name-based: locals assigned from device
+producers (``jnp.*``, ``jax.*``, anything named ``*_op`` / ``*_pallas``,
+or calling a local bound from a ``*_fn`` factory) are tainted, and taint
+propagates through assignments that mention a tainted name.  Function
+boundaries deliberately launder taint — every function's *returned*
+hygiene is its own responsibility, which keeps the analysis local and
+the findings explainable.
+
+Call resolution is over-approximate: ``self.m()`` binds within the
+enclosing class first; ``anything.m()`` fans out to every analyzed class
+defining ``m``; bare ``f()`` binds to module-level functions of the
+analyzed set.  Write/maintenance sinks (insert/delete/compaction/
+rebalance/save/load and model (re)fits) are cut — host work is the
+design there, and ``pump`` would otherwise drag the whole compactor in.
+
+Intentional syncs (e.g. the one documented f64 rank-refinement read-back
+in ``_ranks``) carry ``# lixlint: host-sync(<reason>)`` waivers.
+"""
+
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from .core import Finding, SourceFile
+
+PASS_ID = "dispatch"
+
+# (class name, method) roots — the same set tests/test_dispatch_count.py
+# pins dynamically (plus frontend pump, which coalesces onto them).
+DEFAULT_ENTRY_POINTS: Tuple[Tuple[str, str], ...] = (
+    ("IndexService", "lookup_batch"),
+    ("IndexService", "get"),
+    ("IndexService", "contains"),
+    ("IndexService", "scan_batch"),
+    ("ShardedIndexService", "lookup_batch"),
+    ("ShardedIndexService", "get"),
+    ("ShardedIndexService", "contains"),
+    ("ShardedIndexService", "scan_batch"),
+    ("IndexFrontend", "pump"),
+)
+
+# Method names never traversed: write/maintenance paths where host work
+# is by design, plus (re)training.
+STOP_METHODS: Set[str] = {
+    "insert", "delete", "maybe_compact", "flush", "save", "load",
+    "rebalance", "compact", "checkpoint", "restore", "fit", "refit",
+    "train", "build_snapshot", "execute", "build_rmi", "refit_rmi",
+}
+
+# jax.* members that return host metadata, not device arrays
+_JAX_HOST_META = {
+    "devices", "local_devices", "device_count", "local_device_count",
+    "default_backend", "ShapeDtypeStruct", "eval_shape", "named_scope",
+}
+
+_SYNC_METHODS = {"item", "block_until_ready"}
+_HOST_COERCIONS = {"float", "int", "bool"}
+_NP_SINKS = {"asarray", "array", "copy", "ascontiguousarray"}
+_TAINT_SUFFIXES = ("_op", "_pallas")
+_FN_FACTORY_SUFFIX = "_fn"
+
+
+def _attr_chain(node: ast.AST) -> List[str]:
+    """``a.b.c`` -> ["a", "b", "c"]; non-chains -> []."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        parts.reverse()
+        return parts
+    return []
+
+
+@dataclass(frozen=True)
+class FuncKey:
+    """Stable identity of an analyzed function."""
+
+    rel: str
+    qualname: str  # "Class.method" or "function"
+
+
+class ProjectIndex:
+    """Classes, methods, and module functions across the analyzed set."""
+
+    def __init__(self, sources: Sequence[SourceFile]) -> None:
+        self.functions: Dict[FuncKey, Tuple[SourceFile, ast.AST]] = {}
+        self.by_method: Dict[str, List[FuncKey]] = {}
+        self.by_class_method: Dict[Tuple[str, str], List[FuncKey]] = {}
+        self.by_module_fn: Dict[str, List[FuncKey]] = {}
+        for src in sources:
+            for node in src.tree.body:
+                if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    key = FuncKey(src.rel, node.name)
+                    self.functions[key] = (src, node)
+                    self.by_module_fn.setdefault(node.name, []).append(key)
+            for cls in ast.walk(src.tree):
+                if not isinstance(cls, ast.ClassDef):
+                    continue
+                for node in cls.body:
+                    if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                        key = FuncKey(src.rel, f"{cls.name}.{node.name}")
+                        self.functions[key] = (src, node)
+                        self.by_method.setdefault(node.name, []).append(key)
+                        self.by_class_method.setdefault(
+                            (cls.name, node.name), []
+                        ).append(key)
+
+    def resolve(self, cls: Optional[str], name: str, on_self: bool) -> List[FuncKey]:
+        if name in STOP_METHODS:
+            return []
+        if on_self and cls is not None:
+            keys = self.by_class_method.get((cls, name))
+            if keys:
+                return keys
+        out = list(self.by_method.get(name, ()))
+        if not on_self:
+            out.extend(self.by_module_fn.get(name, ()))
+        elif not out:
+            out.extend(self.by_module_fn.get(name, ()))
+        return out
+
+
+class _FuncScanner(ast.NodeVisitor):
+    """Taint + flag + outgoing-edge scan of one function body."""
+
+    def __init__(self, src: SourceFile, key: FuncKey, index: ProjectIndex,
+                 findings: List[Finding]) -> None:
+        self.src = src
+        self.key = key
+        self.cls = key.qualname.split(".")[0] if "." in key.qualname else None
+        self.index = index
+        self.findings = findings
+        self.tainted: Set[str] = set()
+        self.tainted_fns: Set[str] = set()
+        self.edges: List[FuncKey] = []
+        self.stmt_stack: List[ast.stmt] = []
+
+    # -- infra ----------------------------------------------------------
+
+    def visit(self, node: ast.AST) -> None:
+        is_stmt = isinstance(node, ast.stmt)
+        if is_stmt:
+            self.stmt_stack.append(node)
+        try:
+            super().visit(node)
+        finally:
+            if is_stmt:
+                self.stmt_stack.pop()
+
+    def _context_lines(self, node: ast.AST) -> List[int]:
+        lines = list(self.src.node_lines(node))
+        if self.stmt_stack:
+            lines.extend(self.src.node_lines(self.stmt_stack[-1]))
+        return lines
+
+    def _emit(self, node: ast.AST, code: str, msg: str) -> None:
+        if self.src.waived(PASS_ID, self._context_lines(node)):
+            return
+        snippet = ast.unparse(node)
+        if len(snippet) > 60:
+            snippet = snippet[:57] + "..."
+        self.findings.append(
+            Finding(
+                PASS_ID, self.src.rel, node.lineno, code,
+                f"{self.key.qualname}:{snippet}",
+                f"in {self.key.qualname} (hot read path): {msg}",
+            )
+        )
+
+    # -- taint ----------------------------------------------------------
+
+    def _is_device_call(self, call: ast.Call) -> bool:
+        chain = _attr_chain(call.func)
+        if not chain:
+            return False
+        if chain[0] in ("jnp", "jax") and chain[-1] not in (
+            {"device_get"} | _JAX_HOST_META
+        ):
+            return True
+        last = chain[-1]
+        if any(last.endswith(sfx) for sfx in _TAINT_SUFFIXES):
+            return True
+        if len(chain) == 1 and chain[0] in self.tainted_fns:
+            return True
+        return False
+
+    def _is_fn_factory_call(self, call: ast.Call) -> bool:
+        chain = _attr_chain(call.func)
+        return bool(chain) and chain[-1].endswith(_FN_FACTORY_SUFFIX)
+
+    def _mentions_taint(self, node: ast.AST) -> bool:
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Name) and sub.id in self.tainted:
+                return True
+            if isinstance(sub, ast.Call) and self._is_device_call(sub):
+                return True
+        return False
+
+    def _taint_targets(self, targets: Sequence[ast.AST]) -> None:
+        for t in targets:
+            if isinstance(t, ast.Name):
+                self.tainted.add(t.id)
+            elif isinstance(t, (ast.Tuple, ast.List)):
+                self._taint_targets(t.elts)
+            elif isinstance(t, ast.Starred):
+                self._taint_targets([t.value])
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        value = node.value
+        if isinstance(value, ast.Call) and self._is_fn_factory_call(value):
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    self.tainted_fns.add(t.id)
+        if self._mentions_taint(value):
+            self._taint_targets(node.targets)
+        self.generic_visit(node)
+
+    def visit_AugAssign(self, node: ast.AugAssign) -> None:
+        if self._mentions_taint(node.value):
+            self._taint_targets([node.target])
+        self.generic_visit(node)
+
+    # -- flags + edges ---------------------------------------------------
+
+    def visit_Call(self, node: ast.Call) -> None:
+        func = node.func
+        chain = _attr_chain(func)
+        # 1. unconditional syncs
+        if isinstance(func, ast.Attribute) and func.attr in _SYNC_METHODS:
+            self._emit(
+                node, "host-sync",
+                f"`.{func.attr}()` forces a device->host sync",
+            )
+        if chain and chain[0] == "jax" and chain[-1] == "device_get":
+            self._emit(node, "host-sync", "`jax.device_get` on the hot path")
+        # 2. host coercions of tainted values
+        args_tainted = any(self._mentions_taint(a) for a in node.args)
+        if isinstance(func, ast.Name) and func.id in _HOST_COERCIONS and args_tainted:
+            self._emit(
+                node, "host-coercion",
+                f"`{func.id}(...)` over a device value blocks on transfer",
+            )
+        if (
+            len(chain) == 2 and chain[0] in ("np", "numpy")
+            and chain[1] in _NP_SINKS and args_tainted
+        ):
+            self._emit(
+                node, "host-transfer",
+                f"`np.{chain[1]}` over a device value is a hidden "
+                f"device->host copy",
+            )
+        # 3. call-graph edges
+        if isinstance(func, ast.Name):
+            self.edges.extend(self.index.resolve(self.cls, func.id, on_self=False))
+        elif isinstance(func, ast.Attribute):
+            on_self = isinstance(func.value, ast.Name) and func.value.id == "self"
+            self.edges.extend(self.index.resolve(
+                self.cls if on_self else None, func.attr, on_self=on_self,
+            ))
+            func._lix_call_func = True  # type: ignore[attr-defined]
+        self.generic_visit(node)
+
+    def visit_Attribute(self, node: ast.Attribute) -> None:
+        # Bare method references used as callbacks: self.service.get
+        # passed into _apply_keyed and called there as op(...).  Skip
+        # attributes that are the func of a Call (handled above).
+        if (
+            isinstance(node.ctx, ast.Load)
+            and not getattr(node, "_lix_call_func", False)
+            and node.attr in self.index.by_method
+            and node.attr not in STOP_METHODS
+        ):
+            self.edges.extend(self.index.resolve(None, node.attr, on_self=False))
+        self.generic_visit(node)
+
+
+def run(
+    sources: Sequence[SourceFile],
+    entry_points: Sequence[Tuple[str, str]] = DEFAULT_ENTRY_POINTS,
+) -> List[Finding]:
+    index = ProjectIndex(sources)
+    src_by_rel = {s.rel: s for s in sources}
+    worklist: List[FuncKey] = []
+    for cls, meth in entry_points:
+        worklist.extend(index.by_class_method.get((cls, meth), ()))
+    seen: Set[FuncKey] = set()
+    findings: List[Finding] = []
+    while worklist:
+        key = worklist.pop()
+        if key in seen:
+            continue
+        seen.add(key)
+        src, node = index.functions[key]
+        scanner = _FuncScanner(src_by_rel[src.rel], key, index, findings)
+        for stmt in node.body:  # type: ignore[attr-defined]
+            scanner.visit(stmt)
+        worklist.extend(scanner.edges)
+    return findings
+
+
+def reachable(
+    sources: Sequence[SourceFile],
+    entry_points: Sequence[Tuple[str, str]] = DEFAULT_ENTRY_POINTS,
+) -> Set[str]:
+    """Qualnames reachable from the entry points (for coverage tests)."""
+    index = ProjectIndex(sources)
+    worklist: List[FuncKey] = []
+    for cls, meth in entry_points:
+        worklist.extend(index.by_class_method.get((cls, meth), ()))
+    seen: Set[FuncKey] = set()
+    findings: List[Finding] = []
+    src_by_rel = {s.rel: s for s in sources}
+    while worklist:
+        key = worklist.pop()
+        if key in seen:
+            continue
+        seen.add(key)
+        src, node = index.functions[key]
+        scanner = _FuncScanner(src_by_rel[src.rel], key, index, findings)
+        for stmt in node.body:  # type: ignore[attr-defined]
+            scanner.visit(stmt)
+        worklist.extend(scanner.edges)
+    return {k.qualname for k in seen}

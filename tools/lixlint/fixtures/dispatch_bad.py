@@ -1,0 +1,44 @@
+"""Seeded dispatch-hygiene violations reachable from FixtureService
+read entry points (tests pass entry_points=[("FixtureService", ...)])."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class FixtureService:
+    def lookup_batch(self, keys):
+        q = jnp.asarray(keys)
+        pos = jnp.searchsorted(self._keys, q)
+        return int(pos[0])  # VIOLATION: host-coercion on traced value
+
+    def get(self, key):
+        pos = self._locate(key)
+        return pos.item()  # VIOLATION: host-sync .item()
+
+    def contains(self, key):
+        mask = jnp.equal(self._keys, key)
+        host = np.asarray(mask)  # VIOLATION: host-transfer np.asarray
+        return bool(host.any())
+
+    def scan_batch(self, lo, hi):
+        vals = jnp.arange(lo, hi)
+        vals.block_until_ready()  # VIOLATION: host-sync barrier
+        return vals
+
+    def _locate(self, key):
+        return jnp.searchsorted(self._keys, jnp.asarray(key))
+
+    def insert(self, key):  # STOP method: never traversed
+        arr = jnp.asarray(key)
+        return arr.item()  # not a finding: write path may sync
+
+
+def helper_transfer(x):
+    y = jnp.abs(x)
+    return jax.device_get(y)  # VIOLATION: host-transfer (via pump call)
+
+
+class FixtureFrontend:
+    def pump(self):
+        return helper_transfer(jnp.ones((4,)))

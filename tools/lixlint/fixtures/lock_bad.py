@@ -1,0 +1,44 @@
+"""Seeded lock-discipline violations: every marked line MUST be caught
+(tests/test_lixlint.py asserts the exact set)."""
+
+import threading
+
+
+class RacyCounter:  # spawns a thread -> opted into analysis
+    def __init__(self):
+        self._lock = threading.RLock()
+        self._count = 0  # guarded-by: _lock
+        self._worker = None
+
+    def start(self):
+        self._worker = threading.Thread(target=self.bump)
+        self._worker.start()
+
+    def bump(self):
+        self._count += 1  # VIOLATION: unguarded-access (write, no lock)
+
+    def peek(self):
+        return self._count  # VIOLATION: unguarded-access (read, no lock)
+
+    def publish(self, x):
+        self.latest = x  # VIOLATION: unguarded-write (unannotated store)
+
+
+class NoLockPool:  # VIOLATION: no-lock (mutates state, declares no lock)
+    # lixlint: thread-shared
+    def __init__(self):
+        self.items = []
+
+    def put(self, x):
+        self.items = self.items + [x]  # VIOLATION: unguarded-write
+
+
+class StaleWaiver:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._n = 0  # guarded-by: _lock
+
+    def touch(self):
+        # VIOLATION below: waiver-missing-reason (bare waiver, no rationale)
+        # lixlint: unsynchronized
+        self._n += 1

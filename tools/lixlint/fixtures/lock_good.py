@@ -1,0 +1,40 @@
+"""Clean twin of lock_bad.py: same shapes, zero findings."""
+
+import threading
+
+
+class SafeCounter:
+    def __init__(self):
+        self._lock = threading.RLock()
+        self._count = 0  # guarded-by: _lock
+        self._worker = None
+
+    def start(self):
+        with self._lock:
+            self._worker = threading.Thread(target=self.bump)
+            self._worker.start()
+
+    def bump(self):
+        with self._lock:
+            self._count += 1
+
+    def peek(self):
+        with self._lock:
+            return self._count
+
+    def publish(self, x):
+        # lixlint: unsynchronized(single benchmark thread owns this slot)
+        self.latest = x
+
+    def _drain(self):  # lixlint: holds(_lock)
+        self._count = 0  # legal: caller contract asserts the lock
+
+
+class FrozenPool:
+    # immutable after construction: no lock required, store check active
+    # lixlint: thread-shared
+    def __init__(self):
+        self.items = ()
+
+    def get(self, i):
+        return self.items[i]

@@ -1,0 +1,29 @@
+"""Seeded trace-purity violations in a pallas kernel and a jit fn."""
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+
+def leaky_kernel(x_ref, o_ref, *, block):
+    t = time.perf_counter()  # VIOLATION: impure-host-call (clock)
+    noise = np.random.rand()  # VIOLATION: impure-host-call (RNG)
+    o_ref[...] = x_ref[...].astype(jnp.float64) + t + noise  # VIOLATION: f64
+
+
+def run_leaky(x):
+    return pl.pallas_call(
+        functools.partial(leaky_kernel, block=8),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+    )(x)
+
+
+@jax.jit
+def branchy(x, lo):
+    if lo > 0:  # VIOLATION: trace-branch on traced operand
+        return x - lo
+    return x

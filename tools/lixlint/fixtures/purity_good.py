@@ -1,0 +1,35 @@
+"""Clean twin of purity_bad.py: static shape math, f32, no host state."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def clean_kernel(x_ref, o_ref, *, block):
+    if block > 8:  # legal: kwonly kernel args are static by construction
+        o_ref[...] = x_ref[...] * jnp.float32(2.0)
+    else:
+        o_ref[...] = x_ref[...]
+
+
+def run_clean(x):
+    return pl.pallas_call(
+        functools.partial(clean_kernel, block=8),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+    )(x)
+
+
+@jax.jit
+def shape_branch(x, lo):
+    if x.shape[0] > 4:  # legal: shape reads are static
+        return x - lo
+    return jnp.where(lo > 0, x - lo, x)
+
+
+@functools.partial(jax.jit, static_argnames=("mode",))
+def moded(x, mode):
+    if mode == "fast":  # legal: static_argnames operand
+        return x * 2.0
+    return x

@@ -1,0 +1,327 @@
+"""Pass 1: lock discipline / race detector.
+
+A class opts into analysis by (any of):
+
+  * declaring guarded state — ``self._x = ...  # guarded-by: _lock``
+  * spawning threads (``threading.Thread(...)`` anywhere in its body)
+  * carrying a class-level ``# lixlint: thread-shared`` marker
+
+For opted-in classes the pass enforces:
+
+  * every load/store of a guarded attribute happens under a syntactic
+    ``with self.<lock>:`` for the declared lock, inside ``__init__``,
+    under a ``# lixlint: holds(<lock>)`` contract, or behind a waiver
+    (``unguarded-access``);
+  * a thread-spawning / thread-shared class that mutates state after
+    construction declares at least one lock (``threading.Lock/RLock/
+    Condition`` or ``obs.lockstat.make_lock``) or a class-level
+    ``unsynchronized`` waiver (``no-lock``); immutable-after-init
+    classes pass without a lock but keep the store check;
+  * attribute *stores* outside ``__init__`` — even to undeclared attrs —
+    happen under some declared lock or a waiver (``unguarded-write``),
+    because publishing new state to concurrent readers without a fence
+    is exactly the bug class this pass exists for.
+
+Purely syntactic by design: it cannot see aliasing (``svc = self``) or
+cross-object locking, which is what ``holds(...)`` and the waivers are
+for.  The runtime half (lock *order*) lives in ``repro.obs.lockstat``.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from .core import Finding, SourceFile
+
+PASS_ID = "lock"
+
+_INIT_METHODS = {"__init__", "__post_init__", "__new__"}
+_LOCK_FACTORIES = {
+    "Lock", "RLock", "Condition", "Semaphore", "BoundedSemaphore", "make_lock",
+}
+
+
+def _call_name(call: ast.Call) -> Optional[str]:
+    """Trailing name of the called thing: ``a.b.C()`` -> ``C``."""
+    f = call.func
+    if isinstance(f, ast.Attribute):
+        return f.attr
+    if isinstance(f, ast.Name):
+        return f.id
+    return None
+
+
+def _self_attr(node: ast.AST) -> Optional[str]:
+    if (
+        isinstance(node, ast.Attribute)
+        and isinstance(node.value, ast.Name)
+        and node.value.id == "self"
+    ):
+        return node.attr
+    return None
+
+
+def _def_header_lines(fn: ast.AST) -> range:
+    """Lines of the signature + decorators (where function-level
+    directives live), excluding the body."""
+    assert isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda))
+    if isinstance(fn, ast.Lambda):
+        return range(fn.lineno, (fn.end_lineno or fn.lineno) + 1)
+    start = fn.lineno
+    for dec in fn.decorator_list:
+        start = min(start, dec.lineno)
+    body_start = fn.body[0].lineno
+    return range(start, body_start + 1)
+
+
+class _ClassInfo:
+    def __init__(self, src: SourceFile, node: ast.ClassDef) -> None:
+        self.src = src
+        self.node = node
+        self.name = node.name
+        self.guarded: Dict[str, str] = {}       # attr -> lock name
+        self.locks: Set[str] = set()            # declared lock attrs
+        self.spawns_threads = False
+        self.methods: List[ast.AST] = []
+        self._collect()
+
+    def mutates_after_init(self) -> bool:
+        """True if any non-init method stores to a ``self.`` attribute.
+        A shared class that never does is immutable-after-construction
+        and needs no lock (the store check still applies, so a future
+        mutation re-arms the ``no-lock`` requirement)."""
+        for method in self.methods:
+            if getattr(method, "name", "") in _INIT_METHODS:
+                continue
+            for sub in ast.walk(method):
+                if isinstance(sub, ast.Attribute) and _self_attr(sub):
+                    if isinstance(sub.ctx, (ast.Store, ast.Del)):
+                        return True
+        return False
+
+    def _collect(self) -> None:
+        for stmt in self.node.body:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self.methods.append(stmt)
+        for sub in ast.walk(self.node):
+            # guarded-by declarations and lock factories on any
+            # `self.x = ...` statement in the class body
+            if isinstance(sub, (ast.Assign, ast.AnnAssign)):
+                targets = sub.targets if isinstance(sub, ast.Assign) else [sub.target]
+                attrs = [a for a in (_self_attr(t) for t in targets) if a]
+                if attrs:
+                    for line in self.src.node_lines(sub):
+                        lock = self.src.guarded_decl(line)
+                        if lock:
+                            for a in attrs:
+                                self.guarded[a] = lock
+                            break
+                    value = sub.value
+                    if isinstance(value, ast.Call):
+                        name = _call_name(value)
+                        if name in _LOCK_FACTORIES:
+                            self.locks.update(attrs)
+                        # Condition(make_lock(...)) etc.
+                        for arg in value.args:
+                            if (
+                                isinstance(arg, ast.Call)
+                                and _call_name(arg) in _LOCK_FACTORIES
+                            ):
+                                self.locks.update(attrs)
+            if isinstance(sub, ast.Call) and _call_name(sub) == "Thread":
+                self.spawns_threads = True
+
+    def method_line_ranges(self) -> List[range]:
+        out = []
+        for m in self.methods:
+            start = m.lineno
+            for dec in getattr(m, "decorator_list", ()):
+                start = min(start, dec.lineno)
+            out.append(range(start, (m.end_lineno or m.lineno) + 1))
+        return out
+
+    def class_level_lines(self) -> List[int]:
+        """Lines inside the class body but outside every method."""
+        body = self.method_line_ranges()
+        out = []
+        for line in self.src.node_lines(self.node):
+            if not any(line in r for r in body):
+                out.append(line)
+        return out
+
+
+class _MethodChecker(ast.NodeVisitor):
+    """Walk one method, tracking held locks and enclosing statements."""
+
+    def __init__(
+        self,
+        info: _ClassInfo,
+        method: ast.AST,
+        findings: List[Finding],
+        in_init: bool,
+        check_stores: bool,
+    ) -> None:
+        self.info = info
+        self.src = info.src
+        self.findings = findings
+        self.in_init = in_init
+        self.check_stores = check_stores
+        self.method_name = getattr(method, "name", "<lambda>")
+        self.held: List[str] = []
+        self.holds_stack: List[Set[str]] = [
+            self.src.holds_locks(_def_header_lines(method))
+        ]
+        self.stmt_stack: List[ast.stmt] = []
+
+    # -- helpers --------------------------------------------------------
+
+    def _context_lines(self, node: ast.AST) -> List[int]:
+        lines = list(self.src.node_lines(node))
+        if self.stmt_stack:
+            lines.extend(self.src.node_lines(self.stmt_stack[-1]))
+        return lines
+
+    def _lock_satisfied(self, lock: str, node: ast.AST) -> bool:
+        if lock in self.held:
+            return True
+        for holds in self.holds_stack:
+            if lock in holds:
+                return True
+        if lock in self.src.holds_locks(self._context_lines(node)):
+            return True
+        return False
+
+    def _any_lock_held(self, node: ast.AST) -> bool:
+        if self.held:
+            return True
+        if any(h for h in self.holds_stack):
+            return True
+        return bool(self.src.holds_locks(self._context_lines(node)))
+
+    def _waived(self, node: ast.AST) -> bool:
+        return self.src.waived(PASS_ID, self._context_lines(node))
+
+    def _emit(self, node: ast.AST, code: str, detail: str, msg: str) -> None:
+        self.findings.append(
+            Finding(PASS_ID, self.src.rel, node.lineno, code, detail, msg)
+        )
+
+    # -- traversal ------------------------------------------------------
+
+    def visit(self, node: ast.AST) -> None:
+        is_stmt = isinstance(node, ast.stmt)
+        if is_stmt:
+            self.stmt_stack.append(node)
+        try:
+            super().visit(node)
+        finally:
+            if is_stmt:
+                self.stmt_stack.pop()
+
+    def visit_With(self, node: ast.With) -> None:
+        acquired = []
+        for item in node.items:
+            ctx = item.context_expr
+            attr = _self_attr(ctx)
+            if attr is None and isinstance(ctx, ast.Call):
+                attr = _self_attr(ctx.func)  # e.g. self._lock.acquire_timeout()
+            if attr is not None:
+                acquired.append(attr)
+        for item in node.items:
+            self.visit(item)
+        self.held.extend(acquired)
+        for stmt in node.body:
+            self.visit(stmt)
+        for _ in acquired:
+            self.held.pop()
+
+    def _visit_nested_fn(self, node: ast.AST) -> None:
+        # A nested def/lambda does not inherit the syntactic with-scope:
+        # it may run later on another thread.  It keeps holds() from its
+        # own header only.
+        saved_held, self.held = self.held, []
+        self.holds_stack.append(self.src.holds_locks(_def_header_lines(node)))
+        self.generic_visit(node)
+        self.holds_stack.pop()
+        self.held = saved_held
+
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        self._visit_nested_fn(node)
+
+    def visit_AsyncFunctionDef(self, node: ast.AsyncFunctionDef) -> None:
+        self._visit_nested_fn(node)
+
+    def visit_Lambda(self, node: ast.Lambda) -> None:
+        self._visit_nested_fn(node)
+
+    def visit_Attribute(self, node: ast.Attribute) -> None:
+        attr = _self_attr(node)
+        if attr is None or self.in_init:
+            self.generic_visit(node)
+            return
+        info = self.info
+        detail = f"{info.name}.{self.method_name}:{attr}"
+        if attr in info.guarded:
+            lock = info.guarded[attr]
+            if not self._lock_satisfied(lock, node) and not self._waived(node):
+                kind = "write" if isinstance(node.ctx, (ast.Store, ast.Del)) else "read"
+                self._emit(
+                    node, "unguarded-access", detail,
+                    f"{kind} of guarded attribute self.{attr} outside "
+                    f"`with self.{lock}` (declared `# guarded-by: {lock}`)",
+                )
+        elif (
+            self.check_stores
+            and isinstance(node.ctx, (ast.Store, ast.Del))
+            and attr not in info.locks
+        ):
+            if not self._any_lock_held(node) and not self._waived(node):
+                self._emit(
+                    node, "unguarded-write", detail,
+                    f"store to self.{attr} outside any declared lock in a "
+                    f"thread-shared class (declare `# guarded-by:`, hold a "
+                    f"lock, or waive with `# lixlint: unsynchronized(...)`)",
+                )
+        self.generic_visit(node)
+
+
+def run(sources: Sequence[SourceFile]) -> List[Finding]:
+    findings: List[Finding] = []
+    for src in sources:
+        for node in ast.walk(src.tree):
+            if not isinstance(node, ast.ClassDef):
+                continue
+            info = _ClassInfo(src, node)
+            class_lines = info.class_level_lines()
+            class_directives = {d.name for d in src.directives_on(class_lines)}
+            class_waived = src.waived(PASS_ID, class_lines)
+            marked_shared = "thread-shared" in class_directives
+            shared = info.spawns_threads or marked_shared
+            analyzed = shared or bool(info.guarded)
+            if not analyzed:
+                continue
+            if class_waived:
+                continue
+            if shared and not info.locks and info.mutates_after_init():
+                findings.append(
+                    Finding(
+                        PASS_ID, src.rel, node.lineno, "no-lock",
+                        f"{info.name}",
+                        f"class {info.name} "
+                        + ("spawns threads" if info.spawns_threads
+                           else "is marked thread-shared")
+                        + " but declares no lock (threading.Lock/RLock/"
+                          "Condition or lockstat.make_lock) and no "
+                          "class-level `# lixlint: unsynchronized(...)` waiver",
+                    )
+                )
+            # Only structurally-shared classes get the unannotated-store
+            # check; guarded-only classes are checked for their guarded
+            # attrs alone.
+            for method in info.methods:
+                in_init = getattr(method, "name", "") in _INIT_METHODS
+                checker = _MethodChecker(info, method, findings, in_init, shared)
+                for stmt in method.body:  # type: ignore[attr-defined]
+                    checker.visit(stmt)
+    return findings

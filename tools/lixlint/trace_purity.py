@@ -1,0 +1,278 @@
+"""Pass 3: jit/pallas trace purity.
+
+Scopes: (a) Pallas kernel bodies — any local function passed (directly
+or via ``functools.partial``) as the first argument to ``pallas_call``;
+(b) jit-closed functions — decorated ``@jax.jit`` or
+``@functools.partial(jax.jit, static_argnames=...)``, or rebound via
+``f = jax.jit(g)``.
+
+Inside those, the pass flags:
+
+  * host clock / RNG calls (``time.*``, ``np.random.*``, ``random.*``) —
+    they execute once at trace time and freeze into the program
+    (``impure-host-call``);
+  * f64 markers (``np.float64`` / ``jnp.float64`` / ``"float64"`` /
+    ``dtype="double"``) — the device plane is f32 by contract, exact
+    rank math is host f64; mixing them on device is this repo's
+    most-repeated bug class (``f64-on-device``);
+  * Python ``if`` / ``while`` whose test reads a *traced* parameter
+    directly — a concretization error waiting for non-interpret mode
+    (``trace-branch``).  Parameters named in ``static_argnames`` and
+    ``.shape`` / ``.dtype`` / ``.ndim`` / ``.size`` attribute reads are
+    static and exempt.
+
+Waive intentional deviations with ``# lixlint: impure(<reason>)``.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from .core import Finding, SourceFile
+
+PASS_ID = "purity"
+
+_STATIC_ATTRS = {"shape", "dtype", "ndim", "size"}
+_HOST_MODULE_CALLS = {
+    ("time",): "host clock read",
+    ("np", "random"): "host RNG",
+    ("numpy", "random"): "host RNG",
+    ("random",): "host RNG",
+}
+
+
+def _attr_chain(node: ast.AST) -> List[str]:
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        parts.reverse()
+        return parts
+    return []
+
+
+def _local_functions(tree: ast.Module) -> Dict[str, ast.AST]:
+    out: Dict[str, ast.AST] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            out.setdefault(node.name, node)
+    return out
+
+
+def _static_argnames(call: ast.Call) -> Set[str]:
+    """Constant names in a ``static_argnames=(...)`` keyword."""
+    out: Set[str] = set()
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            for sub in ast.walk(kw.value):
+                if isinstance(sub, ast.Constant) and isinstance(sub.value, str):
+                    out.add(sub.value)
+    return out
+
+
+def _jit_static_names(fn: ast.AST) -> Optional[Set[str]]:
+    """If `fn` is jit-decorated, the static argnames; else None."""
+    for dec in getattr(fn, "decorator_list", ()):
+        chain = _attr_chain(dec)
+        if chain[-2:] == ["jax", "jit"] or chain == ["jit"]:
+            return set()
+        if isinstance(dec, ast.Call):
+            fchain = _attr_chain(dec.func)
+            if fchain[-1:] == ["jit"]:
+                return _static_argnames(dec)
+            if fchain[-1:] == ["partial"]:
+                if dec.args and _attr_chain(dec.args[0])[-1:] == ["jit"]:
+                    return _static_argnames(dec)
+    return None
+
+
+def _kernel_fn_names(tree: ast.Module) -> Set[str]:
+    """Names of functions passed (possibly via partial) to pallas_call."""
+    out: Set[str] = set()
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        chain = _attr_chain(node.func)
+        if chain[-1:] != ["pallas_call"]:
+            continue
+        if not node.args:
+            continue
+        first = node.args[0]
+        if isinstance(first, ast.Name):
+            out.add(first.id)
+        elif isinstance(first, ast.Call):
+            fchain = _attr_chain(first.func)
+            if fchain[-1:] == ["partial"] and first.args:
+                inner = first.args[0]
+                if isinstance(inner, ast.Name):
+                    out.add(inner.id)
+    return out
+
+
+def _jit_rebinds(tree: ast.Module) -> Set[str]:
+    """Function names rebound through ``x = jax.jit(f)`` (or partial)."""
+    out: Set[str] = set()
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Assign):
+            continue
+        v = node.value
+        if not isinstance(v, ast.Call):
+            continue
+        chain = _attr_chain(v.func)
+        target = None
+        if chain[-1:] == ["jit"] and v.args:
+            target = v.args[0]
+        elif chain[-1:] == ["partial"] and v.args:
+            if _attr_chain(v.args[0])[-1:] == ["jit"] and len(v.args) > 1:
+                target = v.args[1]
+        if isinstance(target, ast.Name):
+            out.add(target.id)
+    return out
+
+
+class _PurityChecker(ast.NodeVisitor):
+    def __init__(
+        self,
+        src: SourceFile,
+        fn: ast.AST,
+        kind: str,
+        static_names: Set[str],
+        findings: List[Finding],
+    ) -> None:
+        self.src = src
+        self.fn = fn
+        self.kind = kind  # "kernel" | "jit"
+        self.name = getattr(fn, "name", "<fn>")
+        self.findings = findings
+        self.stmt_stack: List[ast.stmt] = []
+        args = fn.args  # type: ignore[attr-defined]
+        all_args = list(args.posonlyargs) + list(args.args) + list(args.kwonlyargs)
+        self.traced_params = {
+            a.arg for a in all_args if a.arg not in static_names and a.arg != "self"
+        }
+
+    def visit(self, node: ast.AST) -> None:
+        is_stmt = isinstance(node, ast.stmt)
+        if is_stmt:
+            self.stmt_stack.append(node)
+        try:
+            super().visit(node)
+        finally:
+            if is_stmt:
+                self.stmt_stack.pop()
+
+    def _context_lines(self, node: ast.AST) -> List[int]:
+        lines = list(self.src.node_lines(node))
+        if self.stmt_stack:
+            lines.extend(self.src.node_lines(self.stmt_stack[-1]))
+        return lines
+
+    def _emit(self, node: ast.AST, code: str, msg: str) -> None:
+        if self.src.waived(PASS_ID, self._context_lines(node)):
+            return
+        snippet = ast.unparse(node)
+        if len(snippet) > 60:
+            snippet = snippet[:57] + "..."
+        self.findings.append(
+            Finding(
+                PASS_ID, self.src.rel, node.lineno, code,
+                f"{self.name}:{snippet}",
+                f"in {self.kind} fn {self.name}: {msg}",
+            )
+        )
+
+    def visit_Call(self, node: ast.Call) -> None:
+        chain = _attr_chain(node.func)
+        if len(chain) >= 2:
+            for prefix, what in _HOST_MODULE_CALLS.items():
+                if tuple(chain[: len(prefix)]) == prefix and len(chain) > len(prefix):
+                    self._emit(
+                        node, "impure-host-call",
+                        f"{what} `{'.'.join(chain)}` executes at trace "
+                        f"time and freezes into the compiled program",
+                    )
+                    break
+        self.generic_visit(node)
+
+    def _check_f64(self, node: ast.AST) -> None:
+        chain = _attr_chain(node)
+        if chain[-1:] == ["float64"] or chain[-1:] == ["double"]:
+            self._emit(
+                node, "f64-on-device",
+                "f64 on the device plane (f32 by contract; exact rank "
+                "math is host-side f64)",
+            )
+
+    def visit_Attribute(self, node: ast.Attribute) -> None:
+        self._check_f64(node)
+        self.generic_visit(node)
+
+    def visit_Constant(self, node: ast.Constant) -> None:
+        if node.value == "float64" or node.value == "double":
+            self._emit(
+                node, "f64-on-device",
+                "f64 dtype string on the device plane (f32 by contract)",
+            )
+
+    def _check_branch(self, test: ast.expr, node: ast.stmt, kw: str) -> None:
+        for sub in ast.walk(test):
+            if isinstance(sub, ast.Attribute) and sub.attr in _STATIC_ATTRS:
+                # neutralize `param.shape...` subtrees: mark names under
+                # a static attribute access as safe
+                for inner in ast.walk(sub.value):
+                    if isinstance(inner, ast.Name):
+                        inner._lix_static = True  # type: ignore[attr-defined]
+        for sub in ast.walk(test):
+            if (
+                isinstance(sub, ast.Name)
+                and sub.id in self.traced_params
+                and not getattr(sub, "_lix_static", False)
+            ):
+                self._emit(
+                    node, "trace-branch",
+                    f"Python `{kw}` on traced operand `{sub.id}` "
+                    f"concretizes the tracer (use jnp.where / lax.cond)",
+                )
+                return
+
+    def visit_If(self, node: ast.If) -> None:
+        self._check_branch(node.test, node, "if")
+        self.generic_visit(node)
+
+    def visit_While(self, node: ast.While) -> None:
+        self._check_branch(node.test, node, "while")
+        self.generic_visit(node)
+
+
+def run(sources: Sequence[SourceFile]) -> List[Finding]:
+    findings: List[Finding] = []
+    for src in sources:
+        local = _local_functions(src.tree)
+        kernel_names = _kernel_fn_names(src.tree)
+        rebinds = _jit_rebinds(src.tree)
+        seen: Set[int] = set()
+        for name, fn in local.items():
+            static = _jit_static_names(fn)
+            kind = None
+            static_names: Set[str] = set()
+            if name in kernel_names:
+                kind = "kernel"
+                # keyword-only args of a pallas kernel come from
+                # functools.partial closure -> static by construction
+                static_names = {
+                    a.arg for a in fn.args.kwonlyargs  # type: ignore[attr-defined]
+                }
+            elif static is not None:
+                kind, static_names = "jit", static
+            elif name in rebinds:
+                kind, static_names = "jit", set()
+            if kind is None or id(fn) in seen:
+                continue
+            seen.add(id(fn))
+            checker = _PurityChecker(src, fn, kind, static_names, findings)
+            for stmt in fn.body:  # type: ignore[attr-defined]
+                checker.visit(stmt)
+    return findings
