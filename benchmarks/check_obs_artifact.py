@@ -5,8 +5,12 @@ serving-tier section (per-tenant percentiles, QPS per client count,
 the one-dispatch coalescing proof, and the latency-SLO verdict, which
 gates), the chaos section (bit-exact crash recovery per shard count
 and the leveled-vs-single-level write-stall rows, where a leveled run
-merging as often as single-level fails the gate), and the Chrome trace
-dump must be loadable with real events.
+merging as often as single-level fails the gate), the faults section
+(the chaos matrix: every fault class must heal bit-exact with read
+availability >= 99%, the compactor-crash schedule must show a
+supervisor restart without escalation, and the kernel class a sticky
+failover), and the Chrome trace dump must be loadable with real
+events.
 
 Run after the bench-smoke steps:
 
@@ -145,6 +149,37 @@ def main() -> None:
              f"{l1['compactions']}x single-level — the deferred merge "
              "schedule (the bounded-write-stall mechanism) is broken")
 
+    # ---- faults: post-fault recovery exact, reads stayed available -------
+    fault_rows = obs.get("faults") or {}
+    if not fault_rows:
+        fail("observability.faults is empty (run the fault sweep: "
+             "LIX_FAULTS_ONLY=1 python -m benchmarks.dynamic_index)")
+    required_classes = ("ckpt_torn", "compactor_crash", "kernel_failover")
+    for cls in required_classes:
+        if cls not in fault_rows:
+            fail(f"observability.faults missing the {cls!r} class")
+    for label, row in fault_rows.items():
+        for field in ("recovery_ms", "bit_exact", "read_availability"):
+            if field not in row:
+                fail(f"faults[{label!r}] missing {field!r}")
+        if not row["bit_exact"]:
+            fail(f"faults[{label!r}]: post-fault recovery was NOT "
+                 "bit-exact — healing changed answers")
+        if row["read_availability"] < 0.99:
+            fail(f"faults[{label!r}]: read availability "
+                 f"{row['read_availability']:.4f} < 0.99 — reads did not "
+                 "keep serving through the fault")
+    cc = fault_rows["compactor_crash"]
+    if cc.get("worker_restarts", 0) < 1:
+        fail("faults['compactor_crash']: supervisor never restarted the "
+             "crashed worker")
+    if cc.get("escalated", False):
+        fail("faults['compactor_crash']: supervisor escalated on a "
+             "recoverable crash schedule")
+    if fault_rows["kernel_failover"].get("failovers", 0) < 1:
+        fail("faults['kernel_failover']: no sticky kernel->XLA failover "
+             "was recorded")
+
     # ---- Chrome trace dump ----------------------------------------------
     trace_path = obs.get("trace_file") or ""
     n_events = 0
@@ -166,7 +201,8 @@ def main() -> None:
         f"{len(lat)} sweeps, {n_rows} dispatch rows over "
         f"{len(disp)} runs, {n_tenants} tenant rows over "
         f"{len(serving)} serve sweeps (SLO pass), {len(rec)} bit-exact "
-        f"recoveries + leveled stall rows, {n_events} trace events"
+        f"recoveries + leveled stall rows, {len(fault_rows)} fault classes "
+        f"healed (availability >= 99%), {n_events} trace events"
     )
 
 

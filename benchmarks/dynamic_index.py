@@ -86,6 +86,7 @@ _JSON_ROWS: list = []
 _OBS_LATENCY: dict = {}
 _SERVING: dict = {}
 _CHAOS: dict = {}
+_FAULTS: dict = {}
 _RUN_LABEL = "main"
 
 
@@ -140,6 +141,10 @@ def write_json() -> None:
                 k: v for k, v in old_obs.get("chaos", {}).items()
                 if k not in _CHAOS
             }
+            data["observability"]["faults"] = {
+                k: v for k, v in old_obs.get("faults", {}).items()
+                if k not in _FAULTS
+            }
         except (OSError, ValueError, KeyError):
             pass
     data["rows"] += _JSON_ROWS
@@ -148,6 +153,8 @@ def write_json() -> None:
         data["observability"].setdefault("serving", {}).update(_SERVING)
     if _CHAOS:
         data["observability"].setdefault("chaos", {}).update(_CHAOS)
+    if _FAULTS:
+        data["observability"].setdefault("faults", {}).update(_FAULTS)
     data["observability"]["dispatch"][_RUN_LABEL] = (
         kernels_ops.dispatch_summary()
     )
@@ -583,6 +590,230 @@ def chaos_sweep(raw=None, ks=None) -> None:
         record_latency(label, svc.metrics)
 
 
+def fault_sweep(raw=None, ks=None) -> None:
+    """Question 9: the chaos matrix — read availability and recovery
+    time per fault class, under the deterministic fault plane
+    (`repro.faults`).  Every row is refused unless recovery is
+    bit-exact, and the compactor-crash row additionally demands read
+    availability >= 99% while the supervisor is restarting the worker
+    (`check_obs_artifact.py` enforces both).  Also runnable alone via
+    LIX_FAULTS_ONLY=1 (the CI bench-smoke job does).
+
+    Classes:
+      ckpt_torn        — the NEWEST checkpoint is torn after publish;
+                         restore must quarantine it and fall back to
+                         the previous intact step, bit-exact.
+      compactor_crash  — the merge worker crashes twice mid-churn; the
+                         supervisor restarts it with backoff while
+                         reads keep serving, and the healed service
+                         matches the oracle.
+      kernel_failover  — the Pallas dispatch raises twice; the op is
+                         retried then stickily rerouted to its
+                         bit-identical XLA fallback.
+      router_refit     — a shard-router re-fit crashes mid-rebalance;
+                         the abort is clean (old router, old shards)
+                         and reads never diverge.
+    """
+    import shutil
+    import tempfile
+    import time
+
+    from repro import faults
+    from repro.distributed.fault_tolerance import IndexCheckpointer
+    from repro.obs.metrics import default_registry
+
+    rng = np.random.default_rng(7)
+    if raw is None:  # standalone (LIX_FAULTS_ONLY) path
+        raw = gen_weblogs(BENCH_N)
+        ks = make_keyset(raw)
+    fresh = np.setdiff1d(
+        rng.integers(0, 1 << 52, 4 * DELTA_CAPACITY).astype(np.float64),
+        ks.raw,
+    )
+    probe = np.concatenate([
+        raw[rng.integers(0, ks.n, 384)],
+        fresh[rng.integers(0, fresh.size, 128)],
+    ])
+
+    # ---- ckpt_torn: newest checkpoint torn -> fall back one step ---------
+    cfg = ServiceConfig(delta_capacity=DELTA_CAPACITY, num_shards=4)
+    svc = ShardedIndexService(ks.raw, cfg)
+    svc.insert(fresh[:DELTA_CAPACITY])
+    want = svc.contains(probe)
+    root = tempfile.mkdtemp(prefix="lix_fault_")
+    try:
+        ckpt = IndexCheckpointer(root, keep_last=4)
+        ckpt.save(1, svc)
+        svc.insert(fresh[DELTA_CAPACITY: 2 * DELTA_CAPACITY])
+        with faults.inject(faults.FaultSchedule({"ckpt.write.torn": 1})) as sched:
+            ckpt.save(2, svc)  # published, then torn
+        assert sched.fired["ckpt.write.torn"] == 1
+        del svc  # SIGKILL simulation
+        t0 = time.perf_counter()
+        back, step = ckpt.restore(cfg)
+        got = back.contains(probe)
+        t_rec = time.perf_counter() - t0
+        bit_exact = bool(step == 1 and np.array_equal(got, want))
+        if not bit_exact:
+            raise RuntimeError(
+                f"fault ckpt_torn: restore landed on step {step} or diverged"
+            )
+        _FAULTS["ckpt_torn"] = {
+            "recovery_ms": round(t_rec * 1e3, 2),
+            "restored_step": int(step),
+            "bit_exact": bit_exact,
+            "read_availability": 1.0,
+            "restore_fallbacks": int(
+                default_registry().counter("ckpt.restore_fallbacks").value
+            ),
+            "quarantined": int(
+                default_registry().counter("ckpt.quarantined").value
+            ),
+        }
+        record(
+            "dynamic_index/fault_ckpt_torn", t_rec * 1e6,
+            f"recovery_ms={t_rec * 1e3:.1f};restored_step={step};"
+            f"bit_exact={bit_exact}",
+        )
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+    # ---- compactor_crash: worker dies twice, reads keep serving ----------
+    cap = 1024
+    svc = IndexService(ks.raw, ServiceConfig(
+        delta_capacity=cap, background=True,
+        compact_backoff_s=0.01, compact_backoff_cap_s=0.05,
+    ))
+    pool = fresh[2 * DELTA_CAPACITY:]
+    inserted = np.array([], np.float64)
+    reads = failures = 0
+    with faults.inject(faults.FaultSchedule({"compactor.crash": 2})) as sched:
+        t0 = time.perf_counter()
+        step_sz = int(cap * 0.4)
+        for r in range(6):
+            chunk = pool[r * step_sz: (r + 1) * step_sz]
+            svc.insert(chunk)
+            inserted = np.concatenate([inserted, chunk])
+            want_now = np.isin(probe, ks.raw) | np.isin(probe, inserted)
+            try:
+                got = svc.contains(probe)
+            except RuntimeError:
+                failures += 1
+            else:
+                if not np.array_equal(got, want_now):
+                    raise RuntimeError("read diverged during compactor churn")
+            reads += 1
+        # heal: the supervisor's third attempt merges for real
+        deadline = time.perf_counter() + 30.0
+        while (sched.fired["compactor.crash"] < 2
+               or svc.stats["compactions"] < 1):
+            if time.perf_counter() > deadline:
+                raise RuntimeError("fault compactor_crash: never healed")
+            try:
+                svc.contains(probe)
+            except RuntimeError:
+                failures += 1
+            reads += 1
+            time.sleep(0.005)
+        t_heal = time.perf_counter() - t0
+    want_now = np.isin(probe, ks.raw) | np.isin(probe, inserted)
+    bit_exact = bool(np.array_equal(svc.contains(probe), want_now))
+    availability = 1.0 - failures / max(1, reads)
+    restarts = int(svc.metrics.counter("compact.worker_restarts").value)
+    if not bit_exact or restarts < 1:
+        raise RuntimeError(
+            f"fault compactor_crash: bit_exact={bit_exact} restarts={restarts}"
+        )
+    _FAULTS["compactor_crash"] = {
+        "recovery_ms": round(t_heal * 1e3, 2),
+        "bit_exact": bit_exact,
+        "read_availability": round(availability, 4),
+        "reads": reads,
+        "worker_crashes": int(
+            svc.metrics.counter("compact.worker_crashes").value),
+        "worker_restarts": restarts,
+        "escalated": bool(svc.compactor_escalated),
+    }
+    record(
+        "dynamic_index/fault_compactor_crash", t_heal * 1e6,
+        f"availability={availability:.4f};restarts={restarts};"
+        f"bit_exact={bit_exact}",
+    )
+    record_latency("fault_compactor_crash", svc.metrics)
+
+    # ---- kernel_failover: pallas raises -> sticky XLA fallback -----------
+    kernels_ops.reset_failover()
+    svc = IndexService(ks.raw, ServiceConfig(
+        delta_capacity=DELTA_CAPACITY, strategy="pallas_fused"))
+    oracle = IndexService(ks.raw, ServiceConfig(
+        delta_capacity=DELTA_CAPACITY, strategy="binary"))
+    keys = fresh[:256]
+    svc.insert(keys)
+    oracle.insert(keys)
+    want_f, want_r = oracle.get(probe)
+    svc.get(probe)  # warm the kernel path before injecting
+    failovers0 = int(default_registry().counter("kernel_failover").value)
+    with faults.inject(faults.FaultSchedule({"kernel.dispatch": 2})) as sched:
+        t0 = time.perf_counter()
+        got_f, got_r = svc.get(probe)  # retried once, then rerouted
+        t_rec = time.perf_counter() - t0
+    got_f2, got_r2 = svc.get(probe)  # sticky fallback path
+    bit_exact = bool(
+        np.array_equal(got_f, want_f) and np.array_equal(got_r, want_r)
+        and np.array_equal(got_f2, want_f) and np.array_equal(got_r2, want_r)
+    )
+    failovers = int(
+        default_registry().counter("kernel_failover").value) - failovers0
+    if not bit_exact or failovers < 1 or sched.fired["kernel.dispatch"] != 2:
+        raise RuntimeError(
+            f"fault kernel_failover: bit_exact={bit_exact} "
+            f"failovers={failovers} fired={sched.fired}"
+        )
+    _FAULTS["kernel_failover"] = {
+        "recovery_ms": round(t_rec * 1e3, 2),
+        "bit_exact": bit_exact,
+        "read_availability": 1.0,
+        "failovers": failovers,
+        "failover_state": kernels_ops.failover_summary(),
+    }
+    record(
+        "dynamic_index/fault_kernel_failover", t_rec * 1e6,
+        f"failovers={failovers};bit_exact={bit_exact}",
+    )
+    kernels_ops.reset_failover()
+
+    # ---- router_refit: re-fit crash aborts cleanly -----------------------
+    svc = ShardedIndexService(
+        ks.raw, ServiceConfig(delta_capacity=DELTA_CAPACITY, num_shards=4))
+    svc.insert(fresh[:DELTA_CAPACITY])
+    want = svc.contains(probe)
+    aborted = False
+    with faults.inject(faults.FaultSchedule({"router.refit": 1})):
+        t0 = time.perf_counter()
+        try:
+            svc.rebalance()
+        except faults.InjectedFault:
+            aborted = True
+        t_rec = time.perf_counter() - t0
+    bit_exact = bool(np.array_equal(svc.contains(probe), want))
+    svc.rebalance()  # the retry heals: fresh router installs cleanly
+    bit_exact = bit_exact and bool(np.array_equal(svc.contains(probe), want))
+    if not (aborted and bit_exact):
+        raise RuntimeError(
+            f"fault router_refit: aborted={aborted} bit_exact={bit_exact}"
+        )
+    _FAULTS["router_refit"] = {
+        "recovery_ms": round(t_rec * 1e3, 2),
+        "bit_exact": bit_exact,
+        "read_availability": 1.0,
+        "aborted_cleanly": aborted,
+    }
+    record(
+        "dynamic_index/fault_router_refit", t_rec * 1e6,
+        f"aborted_cleanly={aborted};bit_exact={bit_exact}",
+    )
+
+
 def main() -> None:
     rng = np.random.default_rng(0)
     raw = gen_weblogs(BENCH_N)
@@ -682,6 +913,7 @@ def main() -> None:
     scan_sweep(raw, ks)
     serve_sweep(raw, ks)
     chaos_sweep(raw, ks)
+    fault_sweep(raw, ks)
 
 
 if __name__ == "__main__":
@@ -698,6 +930,9 @@ if __name__ == "__main__":
     elif os.environ.get("LIX_CHAOS_ONLY", "0") == "1":
         _RUN_LABEL = "chaos_sweep"
         chaos_sweep()
+    elif os.environ.get("LIX_FAULTS_ONLY", "0") == "1":
+        _RUN_LABEL = "fault_sweep"
+        fault_sweep()
     else:
         main()
     write_json()

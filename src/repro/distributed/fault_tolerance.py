@@ -36,6 +36,15 @@ from typing import Any, Dict, List, Optional, Tuple
 import jax
 import numpy as np
 
+from repro import faults
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+
+
+class CheckpointCorrupt(RuntimeError):
+    """A checkpoint step failed integrity verification (checksum
+    mismatch, missing/truncated file, unreadable manifest)."""
+
 
 def _tree_paths(tree) -> List[str]:
     flat, _ = jax.tree_util.tree_flatten_with_path(tree)
@@ -58,6 +67,86 @@ def config_fingerprint(cfg) -> str:
     except TypeError:
         blob = repr(cfg)
     return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+
+# ---- checkpoint integrity ------------------------------------------------
+
+def _sha256_file(path: str, chunk: int = 1 << 20) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        while True:
+            b = f.read(chunk)
+            if not b:
+                break
+            h.update(b)
+    return h.hexdigest()
+
+
+def _step_dirs(root: str) -> List[int]:
+    """Published (non-tmp, non-quarantined) step numbers, ascending."""
+    try:
+        names = os.listdir(root)
+    except FileNotFoundError:
+        return []
+    return sorted(
+        int(d[5:]) for d in names
+        if d.startswith("step_") and d[5:].isdigit()
+    )
+
+
+def verify_step(d: str) -> Dict:
+    """Verify one published step dir against its manifest checksums and
+    return the manifest.  Raises `CheckpointCorrupt` on an unreadable
+    manifest, a missing file, or a SHA-256 mismatch.  Pre-checksum
+    checkpoints (no ``files``/``sha256`` entries) only get existence
+    checks — restore still catches their read errors and falls back."""
+    try:
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+    except (OSError, ValueError) as e:
+        raise CheckpointCorrupt(f"{d}: unreadable manifest: {e}") from e
+    files: Dict[str, str] = dict(manifest.get("files") or {})
+    for entry in manifest.get("leaves", ()):
+        if entry.get("file"):
+            files.setdefault(entry["file"], entry.get("sha256", ""))
+    for rel in sorted(files):
+        p = os.path.join(d, rel)
+        if not os.path.isfile(p):
+            raise CheckpointCorrupt(f"{d}: missing {rel}")
+        want = files[rel]
+        if want and _sha256_file(p) != want:
+            raise CheckpointCorrupt(f"{d}: checksum mismatch on {rel}")
+    return manifest
+
+
+def quarantine_step(d: str, reason: str = "") -> str:
+    """Move a corrupt step dir aside (``<dir>.quarantine``) so no later
+    restore retries it; the rename is atomic, counted, and traced.  The
+    age-gated sweep in `_gc` collects quarantines like abandoned tmps."""
+    q = d + ".quarantine"
+    if os.path.exists(q):
+        shutil.rmtree(q, ignore_errors=True)
+    os.replace(d, q)
+    obs_metrics.default_registry().counter("ckpt.quarantined").add(1)
+    obs_trace.instant(
+        "ckpt.quarantine", cat="fault", dir=os.path.basename(d),
+        reason=reason,
+    )
+    return q
+
+
+def _tear(d: str) -> None:
+    """Simulate a torn write / bit rot: truncate the first data file of
+    a published step to half its size.  Only reachable through the
+    ``ckpt.write.torn`` fault point."""
+    for base, _dirs, names in sorted(os.walk(d)):
+        for n in sorted(names):
+            if n == "manifest.json":
+                continue
+            p = os.path.join(base, n)
+            with open(p, "r+b") as f:
+                f.truncate(max(1, os.path.getsize(p) // 2))
+            return
 
 
 def save_checkpoint(
@@ -91,13 +180,17 @@ def save_checkpoint(
         np.save(os.path.join(tmp, fn), arr)
         manifest["leaves"].append(
             {"path": p, "file": fn, "shape": list(arr.shape),
-             "dtype": logical_dtype}
+             "dtype": logical_dtype, "sha256": _sha256_file(
+                 os.path.join(tmp, fn))}
         )
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
+    faults.maybe("ckpt.write.crash")  # dies pre-publish: only .tmp left
     if os.path.exists(final):
         shutil.rmtree(final)
     os.replace(tmp, final)
+    if faults.should("ckpt.write.torn"):
+        _tear(final)  # published, then silently corrupted on disk
     # LATEST last: readers never see a partial checkpoint
     with open(os.path.join(root, "LATEST.tmp"), "w") as f:
         f.write(str(step))
@@ -110,19 +203,19 @@ _TMP_TTL_S = 15 * 60.0  # a healthy writer publishes well within this
 
 
 def _gc(root: str, keep_last: int, tmp_ttl_s: float = _TMP_TTL_S) -> None:
-    steps = sorted(
-        d for d in os.listdir(root)
-        if d.startswith("step_") and not d.endswith(".tmp")
-    )
-    for d in steps[:-keep_last]:
-        shutil.rmtree(os.path.join(root, d), ignore_errors=True)
+    for step in _step_dirs(root)[:-keep_last]:
+        shutil.rmtree(
+            os.path.join(root, f"step_{step:010d}"), ignore_errors=True
+        )
     # age-gated tmp sweep: another writer's IN-PROGRESS step also looks
     # like `step_*.tmp` (replicated savers share the root), so only tmp
     # dirs old enough to be certainly-abandoned crashes are collected —
-    # unconditionally rm -rf'ing here used to destroy concurrent saves
+    # unconditionally rm -rf'ing here used to destroy concurrent saves.
+    # Quarantined (corrupt) steps are swept on the same clock: long
+    # enough to debug, not forever.
     now = time.time()
     for d in os.listdir(root):
-        if not d.endswith(".tmp"):
+        if not (d.endswith(".tmp") or d.endswith(".quarantine")):
             continue
         p = os.path.join(root, d)
         try:
@@ -141,11 +234,9 @@ def latest_step(root: str) -> Optional[int]:
         step = int(f.read().strip())
     if os.path.isdir(os.path.join(root, f"step_{step:010d}")):
         return step
-    # LATEST points at a GC'd/incomplete dir: fall back to newest complete
-    steps = sorted(
-        int(d[5:]) for d in os.listdir(root)
-        if d.startswith("step_") and not d.endswith(".tmp")
-    )
+    # LATEST points at a GC'd/incomplete/quarantined dir: fall back to
+    # the newest published step
+    steps = _step_dirs(root)
     if not steps:
         return None
     # heal the pointer atomically so every later reader takes the fast
@@ -161,27 +252,72 @@ def latest_step(root: str) -> Optional[int]:
     return steps[-1]
 
 
+def newest_intact_step(
+    root: str, *, step: Optional[int] = None
+) -> Tuple[int, Dict]:
+    """(step, verified manifest) — of the requested step, or of the
+    newest published step that passes `verify_step`.  Every corrupt dir
+    hit on the way down is quarantined (so it is tried exactly once,
+    ever) and counted as a restore fallback.  An explicitly requested
+    corrupt step raises `CheckpointCorrupt`; running out of steps
+    raises `FileNotFoundError` (the callers' "fresh init" signal)."""
+    if step is not None:
+        d = os.path.join(root, f"step_{step:010d}")
+        if not os.path.isdir(d):
+            raise FileNotFoundError(
+                f"no checkpoint step {step} under {root}"
+            )
+        try:
+            return step, verify_step(d)
+        except CheckpointCorrupt as e:
+            quarantine_step(d, str(e))
+            raise
+    steps = _step_dirs(root)
+    if not steps:
+        raise FileNotFoundError(f"no checkpoint under {root}")
+    reg = obs_metrics.default_registry()
+    for s in reversed(steps):
+        d = os.path.join(root, f"step_{s:010d}")
+        try:
+            manifest = verify_step(d)
+        except CheckpointCorrupt as e:
+            quarantine_step(d, str(e))
+            reg.counter("ckpt.restore_fallbacks").add(1)
+            continue
+        return s, manifest
+    raise FileNotFoundError(f"no intact checkpoint under {root}")
+
+
 def restore_checkpoint(
     root: str, like: Any, *, step: Optional[int] = None, shardings: Any = None
 ) -> Tuple[Any, int]:
     """Restore into the structure of `like`.  With `shardings` (a pytree
     of NamedShardings) the leaves are device_put onto the *current*
     mesh — this is the elastic-restart path: the checkpoint has no mesh
-    baked in."""
-    step = latest_step(root) if step is None else step
-    if step is None:
-        raise FileNotFoundError(f"no checkpoint under {root}")
-    d = os.path.join(root, f"step_{step:010d}")
-    with open(os.path.join(d, "manifest.json")) as f:
-        manifest = json.load(f)
-    arrs = []
-    for entry in manifest["leaves"]:
-        a = np.load(os.path.join(d, entry["file"]))
-        if entry["dtype"] == "bfloat16":
-            import ml_dtypes
+    baked in.  Steps are checksum-verified before use; a torn or
+    corrupt step is quarantined and restore falls back to the newest
+    intact one."""
+    explicit = step is not None
+    while True:
+        step, manifest = newest_intact_step(root, step=step)
+        d = os.path.join(root, f"step_{step:010d}")
+        try:
+            arrs = []
+            for entry in manifest["leaves"]:
+                a = np.load(os.path.join(d, entry["file"]))
+                if entry["dtype"] == "bfloat16":
+                    import ml_dtypes
 
-            a = a.view(ml_dtypes.bfloat16)
-        arrs.append(a)
+                    a = a.view(ml_dtypes.bfloat16)
+                arrs.append(a)
+        except (OSError, ValueError) as e:
+            # pre-checksum step with an unreadable leaf: same treatment
+            quarantine_step(d, f"unreadable leaf: {e}")
+            if explicit:
+                raise CheckpointCorrupt(f"{d}: unreadable leaf: {e}") from e
+            step = None
+            continue
+        break
     flat_like, tree = jax.tree.flatten(like)
     assert len(arrs) == len(flat_like), (
         f"checkpoint has {len(arrs)} leaves, expected {len(flat_like)}"
@@ -312,11 +448,22 @@ class IndexCheckpointer:
                 "wal_deletes": int(dels.size),
             })
         svc.router.save(os.path.join(tmp, _ROUTER_FILE))
+        # per-file SHA-256 over everything but the manifest itself, so
+        # restore can prove a step intact before trusting any of it
+        files: Dict[str, str] = {}
+        for base, _dirs, names in os.walk(tmp):
+            for n in names:
+                p = os.path.join(base, n)
+                files[os.path.relpath(p, tmp)] = _sha256_file(p)
+        manifest["files"] = files
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f)
+        faults.maybe("ckpt.write.crash")  # dies pre-publish: .tmp only
         if os.path.exists(final):
             shutil.rmtree(final)
         os.replace(tmp, final)
+        if faults.should("ckpt.write.torn"):
+            _tear(final)  # published, then silently corrupted on disk
         with open(os.path.join(self.root, "LATEST.tmp"), "w") as f:
             f.write(str(step))
         os.replace(
@@ -327,8 +474,10 @@ class IndexCheckpointer:
         return final
 
     def restore(self, config=None):
-        """(service, step) from the newest complete checkpoint; raises
-        FileNotFoundError when none exists."""
+        """(service, step) from the newest INTACT checkpoint: each
+        candidate step is checksum-verified first, corrupt steps are
+        quarantined and skipped (newest -> oldest), and only a root
+        with no intact step left raises FileNotFoundError."""
         import dataclasses as dc
 
         from repro.index_service.delta import DeltaBuffer
@@ -341,12 +490,8 @@ class IndexCheckpointer:
         )
         from repro.index_service.snapshot import VersionManager
 
-        step = latest_step(self.root)
-        if step is None:
-            raise FileNotFoundError(f"no index checkpoint under {self.root}")
+        step, manifest = newest_intact_step(self.root)
         d = os.path.join(self.root, f"step_{step:010d}")
-        with open(os.path.join(d, "manifest.json")) as f:
-            manifest = json.load(f)
         router = LearnedRouter.load(os.path.join(d, _ROUTER_FILE))
         config = config or ServiceConfig()
         config = dc.replace(
@@ -397,8 +542,12 @@ class CheckpointManager:
         )
 
     def restore_or_init(self, like: Any, init_fn, *, shardings=None):
+        # CheckpointCorrupt can only escape restore_checkpoint for an
+        # EXPLICIT step request; the default newest-intact walk folds
+        # corruption into fallback and only raises FileNotFoundError
+        # once every step has been quarantined — either way, init fresh
         try:
             tree, step = restore_checkpoint(self.root, like, shardings=shardings)
             return tree, step
-        except FileNotFoundError:
+        except (FileNotFoundError, CheckpointCorrupt):
             return init_fn(), 0

@@ -22,6 +22,7 @@ from typing import Optional, Tuple
 
 import numpy as np
 
+from repro import faults
 from repro.core.rmi import RMIConfig
 from repro.index_service.delta import DeltaBuffer
 from repro.index_service.snapshot import IndexSnapshot, build_snapshot
@@ -108,6 +109,9 @@ class Compactor:
         self, snap: IndexSnapshot, frozen: DeltaBuffer
     ) -> Tuple[IndexSnapshot, CompactionStats]:
         t0 = time.perf_counter()
+        # before any work: a crash here models the worker dying with
+        # the frozen stack untouched (the supervisor's retry re-merges)
+        faults.maybe("compactor.crash")
         with obs_trace.span(
             "compactor.merge_delta", cat="compaction",
             inserts=frozen.num_inserts, deletes=frozen.num_deletes,

@@ -98,6 +98,14 @@ class ServiceConfig:
     # values turn most capacity fills into an O(1) freeze (bounded
     # write stall) and amortize the O(n) merge over L fills.
     max_delta_levels: int = 1
+    # compactor supervision: a crashed merge attempt is retried with
+    # capped exponential backoff; this many CONSECUTIVE failures stop
+    # the retries, surface the error to the next writer, and escalate
+    # service health (`compactor_escalated`) so the serving tier can
+    # shed writes instead of queueing against a dead compactor.
+    compact_max_failures: int = 3
+    compact_backoff_s: float = 0.05
+    compact_backoff_cap_s: float = 2.0
 
 
 def _default_rmi(n: int) -> RMIConfig:
@@ -186,6 +194,7 @@ class IndexService:
         self._lock = lockstat.make_lock("service._lock")
         self._worker: Optional[threading.Thread] = None  # guarded-by: _lock
         self._worker_error: Optional[BaseException] = None  # guarded-by: _lock
+        self._compact_failures = 0  # consecutive, guarded-by: _lock
         self._write_ewma = 0.0   # guarded-by: _lock
         # every service gets its OWN registry unless the caller shares
         # one on purpose — K shard services must never alias counters
@@ -704,12 +713,70 @@ class IndexService:
         self._raise_worker_error()
 
     def _run_compaction(self) -> None:
-        # runs inline or on the background worker thread: the span tags
-        # whichever thread executes it, and the histogram covers the
-        # whole attempt (including a stall's fold-back)
-        with obs_trace.span("service.compaction", cat="compaction"), \
-                self._op_hist["compact"].time():
-            self._run_compaction_inner()
+        # The compaction SUPERVISOR: runs inline or on the background
+        # worker thread.  A crashed merge attempt leaves the frozen
+        # stack untouched (the commit never ran), so the supervisor
+        # retries it with capped exponential backoff instead of letting
+        # the worker die silently; `compact_max_failures` consecutive
+        # crashes stop the retries, park the error for the next caller
+        # (`_raise_worker_error`), and flip `compactor_escalated` so
+        # the serving tier starts shedding writes.
+        cfg = self.config
+        limit = max(1, cfg.compact_max_failures)
+        attempt = 0
+        try:
+            while True:
+                try:
+                    # the span tags whichever thread executes the
+                    # attempt; the histogram covers it end to end
+                    # (including a stall's fold-back)
+                    with obs_trace.span(
+                        "service.compaction", cat="compaction",
+                    ), self._op_hist["compact"].time():
+                        self._run_compaction_inner()
+                    with self._lock:
+                        self._compact_failures = 0
+                    return
+                except BaseException as e:  # fault-wall: supervisor — any crash retries with backoff, then surfaces via _worker_error
+                    attempt += 1
+                    with self._lock:
+                        self._compact_failures += 1
+                        consec = self._compact_failures
+                    self.metrics.counter("compact.worker_crashes").add(1)
+                    obs_trace.instant(
+                        "compactor.crash", cat="fault",
+                        attempt=attempt, error=type(e).__name__,
+                    )
+                    if consec >= limit:
+                        with self._lock:
+                            self._worker_error = e
+                        self.metrics.counter("compact.escalations").add(1)
+                        obs_trace.instant(
+                            "compactor.escalated", cat="fault",
+                            consecutive=consec,
+                        )
+                        return
+                    self.metrics.counter("compact.worker_restarts").add(1)
+                    time.sleep(min(
+                        cfg.compact_backoff_cap_s,
+                        cfg.compact_backoff_s * (2.0 ** (attempt - 1)),
+                    ))
+        finally:
+            # one owner for the in-flight flag: attempts (and their
+            # retries) all run under the same _compacting=True claim,
+            # so no second merge can start mid-backoff
+            with self._lock:
+                self._compacting = False
+
+    @property
+    def compactor_escalated(self) -> bool:
+        """True while the compactor is in the escalated state: its last
+        `compact_max_failures` attempts all crashed and retries have
+        stopped.  Clears when a later compaction succeeds."""
+        with self._lock:
+            return self._compact_failures >= max(
+                1, self.config.compact_max_failures
+            )
 
     def _run_compaction_inner(self) -> None:
         try:
@@ -790,12 +857,6 @@ class IndexService:
                 self._level_gauge.set(0)
             self.stats["compact_stalls"] += 1
             obs_trace.instant("compaction.stall", cat="compaction")
-        except BaseException as e:  # surfaced on the caller thread
-            with self._lock:
-                self._worker_error = e
-        finally:
-            with self._lock:
-                self._compacting = False
 
     def _join_worker(self) -> None:
         with self._lock:

@@ -69,6 +69,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import jax.numpy as jnp
 import numpy as np
 
+from repro import faults
 from repro.distributed.sharding import index_shard_mesh, place_index_shards
 from repro.index_service.delta import (
     count_less,
@@ -396,6 +397,15 @@ class ShardedIndexService:
     def delta_fill(self) -> float:
         with self._lock:
             return max(s.delta_fill for s in self._shards)
+
+    @property
+    def compactor_escalated(self) -> bool:
+        """True while ANY shard's compactor is in the escalated state
+        (its supervisor gave up retrying) — the serving tier's signal
+        to stop accepting writes against a merge that will not come."""
+        with self._lock:
+            shards = tuple(self._shards)
+        return any(s.compactor_escalated for s in shards)
 
     def _live_counts(self) -> np.ndarray:
         with self._lock:
@@ -1092,14 +1102,18 @@ class ShardedIndexService:
     def _install_router(self, boundaries, sample=None) -> None:  # lixlint: holds(_lock)
         """Retire the current router (folding its lifetime tallies so
         stats_summary stays monotone) and install a freshly fitted one
-        over ``boundaries``."""
-        for stat, v in self._router.stats.items():
-            key = f"router_{stat}"
-            self._retired[key] = self._retired.get(key, 0) + v
+        over ``boundaries``.  The fit runs BEFORE any mutation: a
+        re-fit that crashes (the ``router.refit`` fault point) leaves
+        the old router — stats, boundaries, and all — serving exactly
+        as before, so the enclosing reshape/rebalance aborts cleanly."""
+        faults.maybe("router.refit")
         router = LearnedRouter.fit(
             np.asarray(boundaries, np.float64), sample_keys=sample
         )
         router.metrics = self.metrics
+        for stat, v in self._router.stats.items():
+            key = f"router_{stat}"
+            self._retired[key] = self._retired.get(key, 0) + v
         self._router = router
         self._refit_ctr.add(1)
 
@@ -1142,8 +1156,11 @@ class ShardedIndexService:
         )
         shards = list(self._shards)
         shards[s0:s1] = pieces
-        self._retire_stats(old)
+        # router first: its fit is the only step here that can fail, and
+        # it mutates nothing until it succeeds — so a refit crash aborts
+        # the reshape with the old router AND the old shards intact
         self._install_router(bounds)
+        self._retire_stats(old)
         self._shards = shards
 
     def _merge_pair(self, s: int) -> None:  # lixlint: holds(_lock)

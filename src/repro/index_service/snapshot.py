@@ -51,6 +51,15 @@ from repro.kernels.rmi_lookup import (
 KERNEL_STRATEGIES: Tuple[str, ...] = ("pallas", "pallas_fused",
                                       "sharded_fused")
 
+# each kernel strategy's bit-identical XLA twin: where the sticky
+# kernel->fallback failover (`kernels.ops.run_with_failover`) reroutes
+# a closure whose pallas_call raises
+_FALLBACK_STRATEGY = {
+    "pallas": "binary",
+    "pallas_fused": "xla_fused",
+    "sharded_fused": "xla_fused",
+}
+
 _SNAP_RE = re.compile(r"snapshot-(\d+)\.npz$")
 
 # The lookup strategy registry: every name a Snapshot (and through it
@@ -311,6 +320,21 @@ class IndexSnapshot:
                 ):
                     return _inner(q, dkeys, dprefix)
 
+            if kernel:
+                # kernel closures ride the sticky failover policy onto
+                # their bit-identical XLA twin (built lazily, and itself
+                # counted under its OWN strategy tag, so attribution
+                # shows which program really ran)
+                fb = _FALLBACK_STRATEGY[strategy]
+
+                def counted(q, dkeys, dprefix, _k=counted):
+                    return kernels_ops.run_with_failover(
+                        "merged_lookup", strategy,
+                        lambda: _k(q, dkeys, dprefix),
+                        lambda: self.merged_lookup_fn(fb)(
+                            q, dkeys, dprefix),
+                    )
+
             fn = self._compiled[strategy] = counted
         return fn
 
@@ -445,6 +469,16 @@ class IndexSnapshot:
                         sig=(np.shape(q), snap_n, tag),
                     ):
                         return _inner(q)
+
+                if kernel:
+                    # both kernel aliases lower to the base RMI kernel;
+                    # its bit-identical twin is the binary closure
+                    def base(q, _k=base):
+                        return kernels_ops.run_with_failover(
+                            "base_lookup", tag,
+                            lambda: _k(q),
+                            lambda: self.base_lookup_fn("binary")(q),
+                        )
 
             fn = self._compiled[key] = base
         return fn

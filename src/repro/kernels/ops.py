@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import faults
 from repro.kernels import ref
 from repro.obs import metrics as obs_metrics
 from repro.obs import trace as obs_trace
@@ -173,6 +174,116 @@ def _shape(x):
     return tuple(getattr(x, "shape", ()) or ())
 
 
+# ---------------------------------------------------------------------------
+# kernel -> fallback strategy failover
+# ---------------------------------------------------------------------------
+# Every Pallas op below has a bit-identical XLA fallback one branch
+# away; a kernel that RAISES (driver regression, lowering bug, an
+# injected ``kernel.dispatch`` fault) must not take the read path down
+# with it.  Policy, per (op, strategy):
+#
+#   * a healthy kernel that raises is retried ONCE (transient faults
+#     heal invisibly), and a second failure stickily reroutes the pair
+#     to the fallback — counted as ``kernel_failover``;
+#   * while rerouted, every `FAILOVER_REPROBE_EVERY`-th call re-probes
+#     the kernel with a single attempt; success re-enables it
+#     (``kernel_failover.recoveries``), failure stays on the fallback.
+#
+# The healthy fast path costs one dict read and one attribute check —
+# nothing the dispatch-count or parity suites can observe.
+
+FAILOVER_REPROBE_EVERY = 64
+
+
+class _Failover:
+    """Sticky health record for one (op, strategy) kernel pair."""
+
+    __slots__ = ("lock", "disabled", "since")
+
+    def __init__(self):
+        self.lock = threading.Lock()
+        self.disabled = False   # reroute every call to the fallback
+        self.since = 0          # fallback calls since disablement
+
+
+_FAILOVER: dict = {}            # (op, strategy) -> _Failover
+_FAILOVER_LOCK = threading.Lock()
+
+
+def _failover_state(op: str, strategy) -> _Failover:
+    key = (op, strategy or "")
+    st = _FAILOVER.get(key)     # lock-free fast path (GIL-atomic read)
+    if st is None:
+        with _FAILOVER_LOCK:
+            st = _FAILOVER.setdefault(key, _Failover())
+    return st
+
+
+def failover_summary() -> dict:
+    """{"op:strategy": {"disabled": bool, "fallback_calls": int}} for
+    every kernel pair that has been exercised."""
+    with _FAILOVER_LOCK:
+        items = list(_FAILOVER.items())
+    return {
+        f"{op}:{strategy}": {
+            "disabled": st.disabled, "fallback_calls": st.since,
+        }
+        for (op, strategy), st in items
+    }
+
+
+def reset_failover() -> None:
+    """Forget all sticky reroutes (tests / bench isolation)."""
+    with _FAILOVER_LOCK:
+        _FAILOVER.clear()
+
+
+def run_with_failover(op: str, strategy, kernel_fn, fallback_fn):
+    """Run ``kernel_fn`` under the retry-once + sticky-failover policy,
+    rerouting to ``fallback_fn`` (bit-identical results) on failure.
+    Both callables own their dispatch_span, so attribution stays honest
+    about which program actually ran.  Fallback errors propagate — with
+    the kernel already out of the picture there is nothing left to fail
+    over to."""
+    st = _failover_state(op, strategy)
+    probe = False
+    if st.disabled:
+        with st.lock:
+            if st.disabled:
+                st.since += 1
+                if st.since % FAILOVER_REPROBE_EVERY:
+                    return fallback_fn()
+                probe = True
+    reg = obs_metrics.default_registry()
+    for _attempt in range(1 if probe else 2):
+        try:
+            faults.maybe("kernel.dispatch")
+            out = kernel_fn()
+        except Exception as e:
+            reg.counter("kernel_failover.errors").add(1)
+            obs_trace.instant(
+                "kernel.error", cat="fault", op=op,
+                strategy=strategy or "", error=type(e).__name__,
+            )
+            continue
+        if st.disabled:
+            with st.lock:
+                st.disabled = False
+                st.since = 0
+            reg.counter("kernel_failover.recoveries").add(1)
+            obs_trace.instant("kernel.recovered", cat="fault", op=op,
+                              strategy=strategy or "")
+        return out
+    if not st.disabled:
+        with st.lock:
+            st.disabled = True
+            st.since = 0
+        reg.counter("kernel_failover").add(1)
+        obs_trace.instant("kernel.failover", cat="fault", op=op,
+                          strategy=strategy or "")
+    return fallback_fn()
+
+
 def rmi_lookup_op(index, sorted_keys_norm, q_norm, *, block_q=1024,
                   interpret=None):
     """Batched RMI lookup via the fused kernel.  `index` is an RMIndex.
@@ -207,40 +318,56 @@ def rmi_merged_lookup_op(index, sorted_keys_norm, q_norm, delta_keys,
     *and* the delta prefix search (`strategy="pallas_fused"`); with
     ``use_kernel=False`` the identical-signature XLA fallback runs
     instead (`strategy="xla_fused"`) — same arithmetic, same results,
-    no pallas_call.
+    no pallas_call.  A kernel that raises rides the retry-once +
+    sticky-failover policy onto that fallback (`run_with_failover`).
     """
-    with dispatch_span(
-        "rmi_merged_lookup", kernel=use_kernel,
-        strategy=strategy or ("pallas_fused" if use_kernel
-                              else "xla_fused"),
-        sig=(_shape(q_norm), _shape(delta_keys), index.n, block_q,
-             use_kernel),
-    ):
-        args = (
-            jnp.asarray(q_norm),
-            stage0_flat(index.stage0_params),
-            jnp.asarray(index.leaf_w),
-            jnp.asarray(index.leaf_b),
-            jnp.asarray(index.err_lo),
-            jnp.asarray(index.err_hi),
-            jnp.asarray(sorted_keys_norm),
-            jnp.asarray(delta_keys),
-            jnp.asarray(delta_prefix),
-        )
-        if not use_kernel:
+    args = (
+        jnp.asarray(q_norm),
+        stage0_flat(index.stage0_params),
+        jnp.asarray(index.leaf_w),
+        jnp.asarray(index.leaf_b),
+        jnp.asarray(index.err_lo),
+        jnp.asarray(index.err_hi),
+        jnp.asarray(sorted_keys_norm),
+        jnp.asarray(delta_keys),
+        jnp.asarray(delta_prefix),
+    )
+    sig = (_shape(q_norm), _shape(delta_keys), index.n, block_q)
+
+    def run_fallback():
+        with dispatch_span(
+            "rmi_merged_lookup", kernel=False,
+            strategy=(strategy or "xla_fused") if not use_kernel
+            else "xla_fused",
+            sig=sig + (False,),
+        ):
             return ref.rmi_merged_lookup_reference(
                 *args, n=index.n, num_leaves=index.num_leaves,
                 max_window=index.max_window,
             )
-        return rmi_merged_lookup_pallas(
-            *args,
-            hidden=tuple(index.config.stage0_hidden),
-            n=index.n,
-            num_leaves=index.num_leaves,
-            max_window=index.max_window,
-            block_q=block_q,
-            interpret=interpret,
-        )
+
+    if not use_kernel:
+        return run_fallback()
+
+    def run_kernel():
+        with dispatch_span(
+            "rmi_merged_lookup", kernel=True,
+            strategy=strategy or "pallas_fused", sig=sig + (True,),
+        ):
+            return rmi_merged_lookup_pallas(
+                *args,
+                hidden=tuple(index.config.stage0_hidden),
+                n=index.n,
+                num_leaves=index.num_leaves,
+                max_window=index.max_window,
+                block_q=block_q,
+                interpret=interpret,
+            )
+
+    return run_with_failover(
+        "rmi_merged_lookup", strategy or "pallas_fused",
+        run_kernel, run_fallback,
+    )
 
 
 def stack_shard_arrays(indexes, key_arrays):
@@ -348,30 +475,47 @@ def rmi_sharded_merged_lookup_op(
     per-shard body (``use_kernel=False`` — the path that partitions
     over devices when the stacked arrays carry a shard-axis sharding).
     Returns the per-shard local ``(base_lb, delta_contrib)`` matrices;
-    feed them to `sharded_reassemble` for global ranks.
+    feed them to `sharded_reassemble` for global ranks.  The kernel
+    path rides the retry-once + sticky-failover policy onto the vmapped
+    fallback.
     """
-    with dispatch_span(
-        "rmi_sharded_merged_lookup", kernel=use_kernel,
-        strategy=strategy or "sharded_fused",
-        sig=(_shape(q_stacked), _shape(sorted_keys), _shape(delta_keys),
-             block_q, use_kernel),
-    ):
-        args = (
-            jnp.asarray(q_stacked),
-            tuple(jnp.asarray(p) for p in stage0),
-            jnp.asarray(leaf_w), jnp.asarray(leaf_b),
-            jnp.asarray(err_lo), jnp.asarray(err_hi),
-            jnp.asarray(sorted_keys),
-            jnp.asarray(delta_keys), jnp.asarray(delta_prefix),
-            jnp.asarray(shard_n), jnp.asarray(shard_m),
-            jnp.asarray(shard_ratio),
-        )
-        if not use_kernel:
+    args = (
+        jnp.asarray(q_stacked),
+        tuple(jnp.asarray(p) for p in stage0),
+        jnp.asarray(leaf_w), jnp.asarray(leaf_b),
+        jnp.asarray(err_lo), jnp.asarray(err_hi),
+        jnp.asarray(sorted_keys),
+        jnp.asarray(delta_keys), jnp.asarray(delta_prefix),
+        jnp.asarray(shard_n), jnp.asarray(shard_m),
+        jnp.asarray(shard_ratio),
+    )
+    sig = (_shape(q_stacked), _shape(sorted_keys), _shape(delta_keys),
+           block_q)
+
+    def run_fallback():
+        with dispatch_span(
+            "rmi_sharded_merged_lookup", kernel=False,
+            strategy=strategy or "sharded_fused", sig=sig + (False,),
+        ):
             return _sharded_reference_jit(*args, max_window=max_window)
-        return rmi_sharded_merged_lookup_pallas(
-            *args, hidden=tuple(hidden), max_window=max_window,
-            block_q=block_q, interpret=interpret,
-        )
+
+    if not use_kernel:
+        return run_fallback()
+
+    def run_kernel():
+        with dispatch_span(
+            "rmi_sharded_merged_lookup", kernel=True,
+            strategy=strategy or "sharded_fused", sig=sig + (True,),
+        ):
+            return rmi_sharded_merged_lookup_pallas(
+                *args, hidden=tuple(hidden), max_window=max_window,
+                block_q=block_q, interpret=interpret,
+            )
+
+    return run_with_failover(
+        "rmi_sharded_merged_lookup", strategy or "sharded_fused",
+        run_kernel, run_fallback,
+    )
 
 
 @functools.partial(jax.jit, static_argnames=("max_window",))
@@ -429,29 +573,43 @@ def rmi_scan_page_op(
     surface; this op is its device data plane.  ``live_mask`` is True
     for rows below ``end_rank`` (partial last page, empty ranges).
     """
-    with dispatch_span(
-        "rmi_scan_page", kernel=use_kernel, strategy=strategy,
-        sig=(_shape(starts), _shape(base_keys), _shape(ins_keys),
-             page_size, use_kernel),
-    ):
-        args = (
-            jnp.asarray(starts, jnp.int32),
-            jnp.asarray(base_keys, jnp.float32),
-            jnp.asarray(base_vals, jnp.int32),
-            jnp.asarray(ins_keys, jnp.float32),
-            jnp.asarray(ins_vals, jnp.int32),
-            jnp.asarray(del_pos, jnp.int32),
-            jnp.asarray(end_rank, jnp.int32).reshape(1),
-        )
-        if not use_kernel:
+    args = (
+        jnp.asarray(starts, jnp.int32),
+        jnp.asarray(base_keys, jnp.float32),
+        jnp.asarray(base_vals, jnp.int32),
+        jnp.asarray(ins_keys, jnp.float32),
+        jnp.asarray(ins_vals, jnp.int32),
+        jnp.asarray(del_pos, jnp.int32),
+        jnp.asarray(end_rank, jnp.int32).reshape(1),
+    )
+    sig = (_shape(starts), _shape(base_keys), _shape(ins_keys), page_size)
+
+    def run_fallback():
+        with dispatch_span(
+            "rmi_scan_page", kernel=False, strategy=strategy,
+            sig=sig + (False,),
+        ):
             keys, vals, live = _scan_page_reference_jit(
                 *args, page_size=page_size
             )
-        else:
+            return keys, vals, live.astype(bool)
+
+    if not use_kernel:
+        return run_fallback()
+
+    def run_kernel():
+        with dispatch_span(
+            "rmi_scan_page", kernel=True, strategy=strategy,
+            sig=sig + (True,),
+        ):
             keys, vals, live = rmi_scan_page_pallas(
                 *args, page_size=page_size, interpret=interpret
             )
-        return keys, vals, live.astype(bool)
+            return keys, vals, live.astype(bool)
+
+    return run_with_failover(
+        "rmi_scan_page", strategy, run_kernel, run_fallback,
+    )
 
 
 @functools.partial(jax.jit, static_argnames=("page_size",))
@@ -486,32 +644,46 @@ def rmi_scan_range_op(
     pages past the true range come back fully masked.  Kernel and XLA
     fallback share the same body — bit-identical for every input.
     """
-    with dispatch_span(
-        "rmi_scan_range", kernel=use_kernel, strategy=strategy,
-        # pad-bucket resizes land here as fresh (shape, max_pages)
-        # signatures, i.e. retraces
-        sig=(_shape(base_keys), _shape(ins_keys), page_size, max_pages,
-             use_kernel),
-    ):
-        args = (
-            jnp.asarray(bounds, jnp.float32),
-            jnp.asarray(base_keys, jnp.float32),
-            jnp.asarray(base_vals, jnp.int32),
-            jnp.asarray(live_prefix, jnp.int32),
-            jnp.asarray(ins_keys, jnp.float32),
-            jnp.asarray(ins_vals, jnp.int32),
-            jnp.asarray(ins_rank, jnp.int32),
-        )
-        if not use_kernel:
+    args = (
+        jnp.asarray(bounds, jnp.float32),
+        jnp.asarray(base_keys, jnp.float32),
+        jnp.asarray(base_vals, jnp.int32),
+        jnp.asarray(live_prefix, jnp.int32),
+        jnp.asarray(ins_keys, jnp.float32),
+        jnp.asarray(ins_vals, jnp.int32),
+        jnp.asarray(ins_rank, jnp.int32),
+    )
+    # pad-bucket resizes land here as fresh (shape, max_pages)
+    # signatures, i.e. retraces
+    sig = (_shape(base_keys), _shape(ins_keys), page_size, max_pages)
+
+    def run_fallback():
+        with dispatch_span(
+            "rmi_scan_range", kernel=False, strategy=strategy,
+            sig=sig + (False,),
+        ):
             keys, vals, live = _scan_range_reference_jit(
                 *args, page_size=page_size, max_pages=max_pages
             )
-        else:
+            return keys, vals, live.astype(bool)
+
+    if not use_kernel:
+        return run_fallback()
+
+    def run_kernel():
+        with dispatch_span(
+            "rmi_scan_range", kernel=True, strategy=strategy,
+            sig=sig + (True,),
+        ):
             keys, vals, live = rmi_scan_range_pallas(
                 *args, page_size=page_size, max_pages=max_pages,
                 interpret=interpret,
             )
-        return keys, vals, live.astype(bool)
+            return keys, vals, live.astype(bool)
+
+    return run_with_failover(
+        "rmi_scan_range", strategy, run_kernel, run_fallback,
+    )
 
 
 @functools.partial(jax.jit, static_argnames=("page_size", "max_pages"))
@@ -541,22 +713,43 @@ def rmi_sharded_scan_page_op(
     come back in that frame.  Returns ``(keys (G,P) f32, vals i32,
     live_mask bool)``; pages past the range are fully masked.
     """
-    with dispatch_span(
-        "rmi_sharded_scan_page", kernel=use_kernel, strategy=strategy,
-        sig=(_shape(base_keys), _shape(ins_keys), page_size, max_pages,
-             use_kernel),
-    ):
-        return _sharded_scan_jit(
-            jnp.asarray(bounds, jnp.float32),
-            jnp.asarray(base_keys, jnp.float32),
-            jnp.asarray(base_vals, jnp.int32),
-            jnp.asarray(live_prefix, jnp.int32),
-            jnp.asarray(ins_keys, jnp.float32),
-            jnp.asarray(ins_vals, jnp.int32),
-            jnp.asarray(ins_rank, jnp.int32),
-            page_size=page_size, max_pages=max_pages,
-            use_kernel=use_kernel, interpret=interpret,
-        )
+    args = (
+        jnp.asarray(bounds, jnp.float32),
+        jnp.asarray(base_keys, jnp.float32),
+        jnp.asarray(base_vals, jnp.int32),
+        jnp.asarray(live_prefix, jnp.int32),
+        jnp.asarray(ins_keys, jnp.float32),
+        jnp.asarray(ins_vals, jnp.int32),
+        jnp.asarray(ins_rank, jnp.int32),
+    )
+    sig = (_shape(base_keys), _shape(ins_keys), page_size, max_pages)
+
+    def run_fallback():
+        with dispatch_span(
+            "rmi_sharded_scan_page", kernel=False, strategy=strategy,
+            sig=sig + (False,),
+        ):
+            return _sharded_scan_jit(
+                *args, page_size=page_size, max_pages=max_pages,
+                use_kernel=False, interpret=interpret,
+            )
+
+    if not use_kernel:
+        return run_fallback()
+
+    def run_kernel():
+        with dispatch_span(
+            "rmi_sharded_scan_page", kernel=True, strategy=strategy,
+            sig=sig + (True,),
+        ):
+            return _sharded_scan_jit(
+                *args, page_size=page_size, max_pages=max_pages,
+                use_kernel=True, interpret=interpret,
+            )
+
+    return run_with_failover(
+        "rmi_sharded_scan_page", strategy, run_kernel, run_fallback,
+    )
 
 
 @functools.partial(
@@ -617,26 +810,48 @@ def rmi_sharded_routed_lookup_op(
     previous two-call path paid a second dispatch (and an HBM
     round-trip of the full (S, B) local-rank matrices) just to gather
     the routed rows.  Returns global ``(base_rank, merged_rank)``."""
-    with dispatch_span(
-        "rmi_sharded_routed_lookup", kernel=use_kernel,
-        strategy=strategy or "sharded_fused",
-        sig=(_shape(q_stacked), _shape(sorted_keys), _shape(delta_keys),
-             block_q, use_kernel),
-    ):
-        return _sharded_routed_jit(
-            jnp.asarray(q_stacked),
-            jnp.asarray(shard_of, jnp.int32),
-            tuple(jnp.asarray(p) for p in stage0),
-            jnp.asarray(leaf_w), jnp.asarray(leaf_b),
-            jnp.asarray(err_lo), jnp.asarray(err_hi),
-            jnp.asarray(sorted_keys),
-            jnp.asarray(delta_keys), jnp.asarray(delta_prefix),
-            jnp.asarray(shard_n), jnp.asarray(shard_m),
-            jnp.asarray(shard_ratio),
-            jnp.asarray(base_off), jnp.asarray(merged_off),
-            hidden=tuple(hidden), max_window=max_window, block_q=block_q,
-            interpret=interpret, use_kernel=use_kernel,
-        )
+    args = (
+        jnp.asarray(q_stacked),
+        jnp.asarray(shard_of, jnp.int32),
+        tuple(jnp.asarray(p) for p in stage0),
+        jnp.asarray(leaf_w), jnp.asarray(leaf_b),
+        jnp.asarray(err_lo), jnp.asarray(err_hi),
+        jnp.asarray(sorted_keys),
+        jnp.asarray(delta_keys), jnp.asarray(delta_prefix),
+        jnp.asarray(shard_n), jnp.asarray(shard_m),
+        jnp.asarray(shard_ratio),
+        jnp.asarray(base_off), jnp.asarray(merged_off),
+    )
+    sig = (_shape(q_stacked), _shape(sorted_keys), _shape(delta_keys),
+           block_q)
+
+    def run_fallback():
+        with dispatch_span(
+            "rmi_sharded_routed_lookup", kernel=False,
+            strategy=strategy or "sharded_fused", sig=sig + (False,),
+        ):
+            return _sharded_routed_jit(
+                *args, hidden=tuple(hidden), max_window=max_window,
+                block_q=block_q, interpret=interpret, use_kernel=False,
+            )
+
+    if not use_kernel:
+        return run_fallback()
+
+    def run_kernel():
+        with dispatch_span(
+            "rmi_sharded_routed_lookup", kernel=True,
+            strategy=strategy or "sharded_fused", sig=sig + (True,),
+        ):
+            return _sharded_routed_jit(
+                *args, hidden=tuple(hidden), max_window=max_window,
+                block_q=block_q, interpret=interpret, use_kernel=True,
+            )
+
+    return run_with_failover(
+        "rmi_sharded_routed_lookup", strategy or "sharded_fused",
+        run_kernel, run_fallback,
+    )
 
 
 @functools.partial(

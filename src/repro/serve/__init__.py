@@ -1,14 +1,24 @@
 from repro.serve.kvcache import PagedKVAllocator
 from repro.serve.engine import Request, ServeEngine, prefix_key
 from repro.serve.frontend import (
+    DEGRADED_WRITES,
+    HEALTH_STATES,
+    HEALTHY,
+    STALE_READS,
+    UNAVAILABLE,
     Backpressure,
+    DeadlineExceeded,
     FrontendConfig,
     IndexFrontend,
     WriteShed,
+    retry_with_backoff,
 )
 
 __all__ = [
     "PagedKVAllocator",
     "Request", "ServeEngine", "prefix_key",
-    "Backpressure", "FrontendConfig", "IndexFrontend", "WriteShed",
+    "Backpressure", "DeadlineExceeded", "FrontendConfig", "IndexFrontend",
+    "WriteShed", "retry_with_backoff",
+    "HEALTH_STATES", "HEALTHY", "DEGRADED_WRITES", "STALE_READS",
+    "UNAVAILABLE",
 ]

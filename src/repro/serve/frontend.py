@@ -51,12 +51,14 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import random
 import threading
 import time
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro import faults
 from repro.index_service.scan import _pad_bucket
 from repro.obs import lockstat
 from repro.obs import trace as obs_trace
@@ -73,9 +75,75 @@ class WriteShed(RuntimeError):
     allocation failure); reads keep serving.  Retryable."""
 
 
+class DeadlineExceeded(TimeoutError):
+    """The request aged past its deadline while queued: failed fast at
+    dispatch instead of being served late (a late answer is a wrong
+    answer to an SLO).  Retryable once load drops."""
+
+
 READ_KINDS = ("get", "contains", "range", "scan")
 WRITE_KINDS = ("insert", "delete")
 KINDS = WRITE_KINDS + READ_KINDS
+
+# The degradation ladder, healthiest first.  Each state names what the
+# frontend still guarantees, and drives admission:
+#
+#   HEALTHY          — full service.
+#   DEGRADED_WRITES  — recent rounds shed writes (compaction stall /
+#                      allocation pressure): writes are still ATTEMPTED
+#                      (the service decides per batch) but callers
+#                      should expect `WriteShed`; reads unaffected.
+#   STALE_READS      — a compactor supervisor gave up (escalated):
+#                      merges have stopped, so accepted writes could
+#                      only pile up against a delta that will not
+#                      drain.  Writes fail fast with `WriteShed` at
+#                      admission; reads keep serving (growing staler
+#                      relative to the un-merged backlog).
+#   UNAVAILABLE      — consecutive whole-round read failures: the
+#                      service itself is failing.  Everything is
+#                      rejected with `Backpressure`; the dispatcher
+#                      keeps probing the service and the ladder climbs
+#                      back up as soon as a probe succeeds.
+HEALTH_STATES = (
+    "HEALTHY", "DEGRADED_WRITES", "STALE_READS", "UNAVAILABLE",
+)
+HEALTHY, DEGRADED_WRITES, STALE_READS, UNAVAILABLE = HEALTH_STATES
+
+
+def retry_with_backoff(
+    fn: Callable,
+    *,
+    attempts: int = 5,
+    base_s: float = 0.01,
+    cap_s: float = 1.0,
+    retry_on: tuple = (Backpressure,),
+    jitter: float = 0.5,
+    rng: Optional[random.Random] = None,
+    sleep: Callable[[float], None] = time.sleep,
+) -> object:
+    """Call ``fn`` under bounded exponential backoff with jitter: the
+    client-side half of admission control.  Retries only ``retry_on``
+    (default `Backpressure` — `WriteShed` and `DeadlineExceeded` are
+    for the caller to decide), doubling the delay per attempt up to
+    ``cap_s``, with multiplicative jitter so N backing-off clients
+    don't re-stampede in phase.  ``rng`` and ``sleep`` are injectable
+    for deterministic tests.  Raises the last error after ``attempts``
+    tries."""
+    if attempts < 1:
+        raise ValueError("attempts must be >= 1")
+    rng = rng or random.Random()
+    last: Optional[BaseException] = None
+    for a in range(attempts):
+        try:
+            return fn()
+        except retry_on as e:
+            last = e
+            if a == attempts - 1:
+                break
+            delay = min(cap_s, base_s * (2.0 ** a))
+            sleep(delay * (1.0 + jitter * rng.random()))
+    assert last is not None
+    raise last
 
 
 @dataclasses.dataclass
@@ -86,6 +154,17 @@ class FrontendConfig:
     scan_page_size: int = 256
     slo_p99_ms: float = 50.0       # read-path p99 target for summaries
     pad_reads: bool = True         # bucket-pad coalesced read batches
+    # synchronous-client default: how long get/insert/... block on the
+    # pending request before raising TimeoutError (pass timeout=None
+    # explicitly to wait forever)
+    default_timeout_s: Optional[float] = 60.0
+    # queue-age deadline enforced at DISPATCH: a request older than
+    # this when the round starts fails fast with `DeadlineExceeded`
+    # instead of being served late (None disables)
+    request_deadline_s: Optional[float] = 30.0
+    # consecutive all-reads-failed rounds before the ladder drops to
+    # UNAVAILABLE and admission closes
+    unavailable_after: int = 3
 
 
 @dataclasses.dataclass
@@ -156,6 +235,18 @@ class IndexFrontend:
         self._shed_ctr = self.metrics.counter("frontend.shed_writes")
         self._applied_ctr = self.metrics.counter("frontend.writes_applied")
         self._depth_gauge = self.metrics.gauge("frontend.queue_depth")
+        self._deadline_ctr = self.metrics.counter("frontend.deadline_exceeded")
+        self._probe_fail_ctr = self.metrics.counter("frontend.probe_failures")
+        # degradation-ladder evidence.  Written by the single dispatcher
+        # thread (pump); racy integer reads from client threads in
+        # health() are tolerated — the ladder is advisory admission
+        # control, one round of slack is fine.
+        # lixlint: unsynchronized(dispatcher writes, racy reads tolerated)
+        self._consec_read_fail_rounds = 0
+        # lixlint: unsynchronized(dispatcher writes, racy reads tolerated)
+        self._consec_shed_rounds = 0
+        # lixlint: unsynchronized(dispatcher-only)
+        self._last_health = HEALTHY
         self._round_hist = self.metrics.histogram("op.round.latency_s")
         self._coalesce_hist = self.metrics.histogram(
             "frontend.requests_per_round", edges=[1, 2, 4, 8, 16, 32, 64,
@@ -210,7 +301,24 @@ class IndexFrontend:
         pending `ServeRequest` — call ``.wait()`` for the result."""
         if kind not in KINDS:
             raise ValueError(f"unknown op kind {kind!r}")
-        self.tenant(tenant)  # registries exist from first contact
+        t = self.tenant(tenant)  # registries exist from first contact
+        state = self.health()
+        if state == UNAVAILABLE:
+            self._rej_ctr.add(1)
+            raise Backpressure(
+                "frontend UNAVAILABLE (consecutive read-round failures) "
+                "— admission closed until a recovery probe succeeds"
+            )
+        if state == STALE_READS and kind in WRITE_KINDS:
+            # merges have stopped (compactor escalated): a queued write
+            # could only pile onto a delta that will not drain.  Fail
+            # fast here instead of timing out in the queue.
+            self._shed_ctr.add(1)
+            t.shed.add(1)
+            raise WriteShed(
+                "compactor escalated: writes fail fast at admission "
+                "while reads keep serving (stale)"
+            )
         req = ServeRequest(tenant, kind, args, time.perf_counter())
         deadline = time.perf_counter() + (
             self.config.submit_timeout_s if timeout is None else timeout
@@ -231,7 +339,11 @@ class IndexFrontend:
             self._cond.notify_all()
         return req
 
-    def _call(self, tenant, kind, *args, timeout: Optional[float] = 60.0):
+    _UNSET = object()  # distinguishes "use config default" from "wait forever"
+
+    def _call(self, tenant, kind, *args, timeout=_UNSET):
+        if timeout is IndexFrontend._UNSET:
+            timeout = self.config.default_timeout_s
         return self.submit(tenant, kind, *args).wait(timeout)
 
     def get(self, tenant: str, keys, **kw) -> Tuple[np.ndarray, np.ndarray]:
@@ -261,15 +373,47 @@ class IndexFrontend:
         return self._call(tenant, "delete",
                           np.atleast_1d(np.asarray(keys, np.float64)), **kw)
 
+    # ---- health ladder ---------------------------------------------------
+    def health(self) -> str:
+        """Current degradation-ladder state, computed from evidence (not
+        stored — no transition can be missed between rounds)."""
+        if (self._consec_read_fail_rounds
+                >= max(1, self.config.unavailable_after)):
+            return UNAVAILABLE
+        if bool(getattr(self.service, "compactor_escalated", False)):
+            return STALE_READS
+        if self._consec_shed_rounds > 0:
+            return DEGRADED_WRITES
+        return HEALTHY
+
+    def _probe_service(self) -> bool:
+        """UNAVAILABLE-state recovery probe: one tiny read against the
+        service.  Success climbs the ladder back up immediately."""
+        try:
+            self.service.contains(np.array([0.0]))
+        except BaseException:  # fault-wall: probe failure keeps UNAVAILABLE
+            self._probe_fail_ctr.add(1)
+            return False
+        # lixlint: unsynchronized(dispatcher-only store; racy reads tolerated)
+        self._consec_read_fail_rounds = 0
+        obs_trace.instant("frontend.recovered", cat="serve")
+        return True
+
     # ---- dispatcher ------------------------------------------------------
     def _loop(self) -> None:
         while True:
             with self._cond:
-                while not self._queue and not self._stopping:
+                if not self._queue and not self._stopping:
                     self._cond.wait(0.1)
                 if not self._queue and self._stopping:
                     return
-            self.pump()
+                have = bool(self._queue)
+            if have:
+                self.pump()
+            elif self.health() == UNAVAILABLE:
+                # idle + UNAVAILABLE: keep probing so the ladder can
+                # climb back up even though admission rejects new work
+                self._probe_service()
 
     def pump(self, max_requests: Optional[int] = None) -> int:
         """Process ONE round synchronously on the calling thread:
@@ -284,14 +428,45 @@ class IndexFrontend:
             self._depth_gauge.set(len(self._queue))
             self._cond.notify_all()  # wake submitters blocked on room
         if not batch:
+            if self.health() == UNAVAILABLE:
+                self._probe_service()
             return 0
-        self._rounds_ctr.add(1)
-        self._coalesce_hist.observe(len(batch))
-        with obs_trace.span("frontend.round", cat="serve",
-                            requests=len(batch)), self._round_hist.time():
-            self._round(batch)
+        # deadline check at DISPATCH time: requests that aged out while
+        # queued fail fast — a late answer is a wrong answer to an SLO.
+        # The injected form of a scheduling stall backdates the whole
+        # batch past its deadline (deterministic, no sleeping).
+        ddl = self.config.request_deadline_s
         now = time.perf_counter()
-        for r in batch:
+        if ddl is not None and faults.should("frontend.queue.delay"):
+            for r in batch:
+                r.enqueued_at = now - ddl - 1.0
+        expired: List[ServeRequest] = []
+        if ddl is not None:
+            live: List[ServeRequest] = []
+            for r in batch:
+                age = now - r.enqueued_at
+                if age > ddl:
+                    r.error = DeadlineExceeded(
+                        f"{r.kind} request queued {age:.3f}s past its "
+                        f"{ddl}s deadline"
+                    )
+                    expired.append(r)
+                else:
+                    live.append(r)
+            if expired:
+                self._deadline_ctr.add(len(expired))
+                obs_trace.instant("frontend.deadline_exceeded",
+                                  cat="serve", n=len(expired))
+            batch = live
+        if batch:
+            self._rounds_ctr.add(1)
+            self._coalesce_hist.observe(len(batch))
+            with obs_trace.span("frontend.round", cat="serve",
+                                requests=len(batch)), self._round_hist.time():
+                self._round(batch)
+            self._observe_round(batch)
+        now = time.perf_counter()
+        for r in batch + expired:
             t = self.tenant(r.tenant)
             dt = now - r.enqueued_at
             t.requests.add(1)
@@ -300,7 +475,39 @@ class IndexFrontend:
             if r.error is not None:
                 (t.shed if isinstance(r.error, WriteShed) else t.errors).add(1)
             r.event.set()
-        return len(batch)
+        state = self.health()
+        if state != self._last_health:
+            obs_trace.instant("frontend.health", cat="serve",
+                              state=state, prev=self._last_health)
+            self.metrics.counter(f"frontend.health.{state}").add(1)
+            # lixlint: unsynchronized(dispatcher-only store)
+            self._last_health = state
+        return len(batch) + len(expired)
+
+    def _observe_round(self, batch: List[ServeRequest]) -> None:
+        """Fold one served round into the degradation-ladder evidence:
+        all-reads-failed rounds push toward UNAVAILABLE; shed writes
+        mark DEGRADED_WRITES until a write run applies cleanly."""
+        reads = [r for r in batch if r.kind in READ_KINDS]
+        if reads:
+            hard_fail = all(
+                r.error is not None and not isinstance(r.error, WriteShed)
+                for r in reads
+            )
+            if hard_fail:
+                # lixlint: unsynchronized(dispatcher-only store; racy reads tolerated)
+                self._consec_read_fail_rounds += 1
+            else:
+                # lixlint: unsynchronized(dispatcher-only store; racy reads tolerated)
+                self._consec_read_fail_rounds = 0
+        writes = [r for r in batch if r.kind in WRITE_KINDS]
+        if writes:
+            if any(isinstance(r.error, WriteShed) for r in writes):
+                # lixlint: unsynchronized(dispatcher-only store; racy reads tolerated)
+                self._consec_shed_rounds += 1
+            elif all(r.error is None for r in writes):
+                # lixlint: unsynchronized(dispatcher-only store; racy reads tolerated)
+                self._consec_shed_rounds = 0
 
     # ---- one coalesced round ---------------------------------------------
     def _round(self, batch: List[ServeRequest]) -> None:
@@ -328,13 +535,13 @@ class IndexFrontend:
         for r in by_kind.get("range", ()):
             try:
                 r.result = self.service.range_lookup(*r.args)
-            except BaseException as e:  # noqa: BLE001 — per-request fault wall
+            except BaseException as e:  # fault-wall: per-request — error lands on this request, round survives
                 r.error = e
         for r in by_kind.get("scan", ()):
             try:
                 lo, hi, page = r.args
                 r.result = self.service.scan_batch(lo, hi, page)
-            except BaseException as e:  # noqa: BLE001
+            except BaseException as e:  # fault-wall: per-request — error lands on this request, round survives
                 r.error = e
 
     def _apply_writes(self, kind: str, run: List[ServeRequest]) -> None:
@@ -363,7 +570,7 @@ class IndexFrontend:
             shed.__cause__ = e
             for r in run:
                 r.error = shed
-        except BaseException as e:  # noqa: BLE001
+        except BaseException as e:  # fault-wall: per-run — the write run fails, the dispatcher survives
             for r in run:
                 r.error = e
 
@@ -380,7 +587,7 @@ class IndexFrontend:
                 q = np.concatenate([q, np.full(padded - n, q[-1])])
         try:
             out = op(q)
-        except BaseException as e:  # noqa: BLE001
+        except BaseException as e:  # fault-wall: per-batch — coalesced reads fail together, dispatcher survives
             for r in run:
                 r.error = e
             return
@@ -411,6 +618,7 @@ class IndexFrontend:
         with self._tenants_lock:
             tenants = dict(self._tenants)
         return {
+            "health": self.health(),
             "slo_p99_ms": slo,
             "slo_pass": bool(worst <= slo),
             "worst_read_p99_ms": round(worst, 3),
@@ -419,6 +627,8 @@ class IndexFrontend:
             "requests": int(self._enq_ctr.value),
             "rejected": int(self._rej_ctr.value),
             "shed_writes": int(self._shed_ctr.value),
+            "deadline_exceeded": int(self._deadline_ctr.value),
+            "probe_failures": int(self._probe_fail_ctr.value),
             "tenants": {
                 name: {
                     "requests": int(t.requests.value),

@@ -18,7 +18,12 @@ import pytest
 from repro.obs import lockstat
 from tools.lixlint import run_passes
 from tools.lixlint.core import Baseline, load_sources
-from tools.lixlint import dispatch_hygiene, lock_discipline, trace_purity
+from tools.lixlint import (
+    dispatch_hygiene,
+    fault_walls,
+    lock_discipline,
+    trace_purity,
+)
 
 ROOT = Path(__file__).resolve().parent.parent
 FIXTURES = ROOT / "tools" / "lixlint" / "fixtures"
@@ -99,6 +104,17 @@ def test_purity_fixture_bad_catches_all_seeded():
 
 def test_purity_fixture_good_is_clean():
     assert trace_purity.run(_load("purity_good.py")) == []
+
+
+def test_faultwall_fixture_bad_catches_all_seeded():
+    findings = fault_walls.run(_load("faultwall_bad.py"))
+    assert [f.code for f in findings] == ["unannotated-fault-wall"] * 3
+    kinds = {f.detail.split(":")[0] for f in findings}
+    assert kinds == {"swallow_everything", "naked", "Dispatcher.round"}
+
+
+def test_faultwall_fixture_good_is_clean():
+    assert fault_walls.run(_load("faultwall_good.py")) == []
 
 
 # ---- the repo gate ------------------------------------------------------

@@ -1,8 +1,9 @@
 """lixlint: repo-aware static analysis for the learned-index stack.
 
-Three AST passes (lock discipline, dispatch hygiene, trace purity) plus
-a shared annotation/waiver/baseline layer; the runtime lock-order
-sanitizer lives in ``repro.obs.lockstat``.  Run as::
+Four AST passes (lock discipline, dispatch hygiene, trace purity,
+fault-wall accountability) plus a shared annotation/waiver/baseline
+layer; the runtime lock-order sanitizer lives in
+``repro.obs.lockstat``.  Run as::
 
     python -m tools.lixlint src/repro
 
@@ -14,7 +15,7 @@ from __future__ import annotations
 from pathlib import Path
 from typing import List, Optional, Sequence, Tuple
 
-from . import dispatch_hygiene, lock_discipline, trace_purity
+from . import dispatch_hygiene, fault_walls, lock_discipline, trace_purity
 from .core import Baseline, Finding, SourceFile, load_sources
 
 __all__ = [
@@ -26,9 +27,10 @@ __all__ = [
     "lock_discipline",
     "dispatch_hygiene",
     "trace_purity",
+    "fault_walls",
 ]
 
-PASSES = ("lock", "dispatch", "purity")
+PASSES = ("lock", "dispatch", "purity", "faultwall")
 
 
 def run_passes(
@@ -49,6 +51,8 @@ def run_passes(
             findings.extend(dispatch_hygiene.run(sources, entry_points))
     if "purity" in passes:
         findings.extend(trace_purity.run(sources))
+    if "faultwall" in passes:
+        findings.extend(fault_walls.run(sources))
     findings.sort(key=lambda f: (f.path, f.line, f.code))
     return findings
 

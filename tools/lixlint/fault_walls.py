@@ -1,0 +1,93 @@
+"""Pass 4: fault-wall accountability.
+
+A bare ``except BaseException`` (or a naked ``except:``) is this
+repo's strongest containment construct: it swallows *everything*,
+including injected faults, ``KeyboardInterrupt`` and ``SystemExit``.
+The serving and supervision layers use such walls deliberately — one
+request's crash must not kill the dispatcher, one merge crash must not
+kill the compactor — but an *unexplained* wall is indistinguishable
+from a bug that eats errors.
+
+So every wall must say what it contains: a ``# fault-wall: <reason>``
+comment on the ``except`` line itself or on the comment line directly
+above it.  Handlers that catch ``BaseException`` inside a tuple are
+walls too.  Findings: ``unannotated-fault-wall``.
+
+``# lixlint: ignore(<reason>)`` waives, as everywhere; prefer the
+``fault-wall:`` directive — it documents rather than silences.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, List, Sequence, Tuple
+
+from .core import Finding, SourceFile
+
+PASS_ID = "faultwall"
+
+FAULT_WALL_RE = re.compile(r"fault[- ]wall\s*:")
+
+
+def _is_wall(expr: object) -> bool:
+    """True if the except clause catches BaseException (or everything)."""
+    if expr is None:  # naked ``except:``
+        return True
+    if isinstance(expr, ast.Name):
+        return expr.id == "BaseException"
+    if isinstance(expr, ast.Attribute):
+        return expr.attr == "BaseException"
+    if isinstance(expr, ast.Tuple):
+        return any(_is_wall(e) for e in expr.elts)
+    return False
+
+
+def _walls(tree: ast.Module) -> List[Tuple[str, ast.ExceptHandler]]:
+    """(enclosing qualname, handler) for every fault wall, in order."""
+    out: List[Tuple[str, ast.ExceptHandler]] = []
+
+    def visit(node: ast.AST, qual: str) -> None:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.ClassDef)):
+                visit(child, f"{qual}.{child.name}" if qual else child.name)
+                continue
+            if isinstance(child, ast.ExceptHandler) and _is_wall(child.type):
+                out.append((qual or "<module>", child))
+            visit(child, qual)
+
+    visit(tree, "")
+    return out
+
+
+def _annotated(src: SourceFile, line: int) -> bool:
+    for ln in (line, line - 1):
+        comment = src.comments.get(ln)
+        if comment and FAULT_WALL_RE.search(comment):
+            # a directly-preceding comment only governs this handler if
+            # it is a standalone comment line (not trailing other code)
+            if ln == line or src.lines[ln - 1].lstrip().startswith("#"):
+                return True
+    return False
+
+
+def run(sources: Sequence[SourceFile]) -> List[Finding]:
+    findings: List[Finding] = []
+    for src in sources:
+        ordinals: Dict[str, int] = {}
+        for qual, handler in _walls(src.tree):
+            ordinals[qual] = ordinals.get(qual, 0) + 1
+            if _annotated(src, handler.lineno):
+                continue
+            if src.waived(PASS_ID, src.node_lines(handler)):
+                continue
+            detail = f"{qual}:wall#{ordinals[qual]}"
+            findings.append(Finding(
+                PASS_ID, src.rel, handler.lineno, "unannotated-fault-wall",
+                detail,
+                f"{qual}: bare BaseException wall without a "
+                "'# fault-wall: <reason>' comment — say what it contains "
+                "(or narrow the except)",
+            ))
+    return findings

@@ -1,0 +1,26 @@
+"""Seeded fault-wall violations: unexplained BaseException walls."""
+
+
+def swallow_everything(fn):
+    try:
+        return fn()
+    except BaseException:  # VIOLATION: no fault-wall reason
+        return None
+
+
+def naked(fn):
+    try:
+        return fn()
+    except:  # noqa: E722  VIOLATION: naked except is a wall too
+        return None
+
+
+class Dispatcher:
+    def round(self, reqs):
+        out = []
+        for r in reqs:
+            try:
+                out.append(r())
+            except (ValueError, BaseException) as e:  # VIOLATION: tupled wall
+                out.append(e)
+        return out

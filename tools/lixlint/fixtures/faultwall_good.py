@@ -1,0 +1,34 @@
+"""Clean twin of faultwall_bad.py: every wall says what it contains."""
+
+
+def contained(fn):
+    try:
+        return fn()
+    except BaseException:  # fault-wall: probe — failure is the answer
+        return None
+
+
+def contained_above(fn):
+    try:
+        return fn()
+    # fault-wall: per-request isolation — the error lands on the request
+    except BaseException as e:
+        return e
+
+
+def narrow(fn):
+    try:
+        return fn()
+    except ValueError:  # narrow excepts need no directive
+        return None
+
+
+class Dispatcher:
+    def round(self, reqs):
+        out = []
+        for r in reqs:
+            try:
+                out.append(r())
+            except BaseException as e:  # fault-wall: one crash must not kill the round
+                out.append(e)
+        return out
